@@ -1,0 +1,66 @@
+"""Paper Figure 2 + Table 1: synthetic uniform data, index & query timings for
+SNN vs brute force 1/2 and kd-tree, varying n (d in {2,50}) and varying d
+(n fixed); also reports the Table-1 return ratios."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import BruteForce1, BruteForce2, KDTree, build_index, \
+    query_radius_batch
+from repro.data.pipeline import make_uniform
+
+from .common import row, subsample_queries, timeit
+
+
+def _methods(x):
+    return {
+        "bf1": BruteForce1(x),
+        "bf2": BruteForce2(x),
+        "kdtree": KDTree(x),
+    }
+
+
+def run(full: bool = False):
+    rows = []
+    ns = [2000, 4000, 6000, 8000] if not full else list(range(2000, 20001, 2000))
+    m = 100 if not full else 1000
+    radii = {2: [0.02, 0.05, 0.08, 0.11, 0.14], 50: [2.0, 2.1, 2.2, 2.3, 2.4]}
+    for d in (2, 50):
+        for n in ns:
+            x = make_uniform(n, d, seed=0)
+            q = subsample_queries(x, m)
+            t_index = timeit(lambda: build_index(x), repeat=2)
+            rows.append(row(f"fig2/index/snn/n{n}/d{d}", t_index))
+            index = build_index(x)
+            meths = _methods(x)
+            t_tree = timeit(lambda: KDTree(x), repeat=2)
+            rows.append(row(f"fig2/index/kdtree/n{n}/d{d}", t_tree))
+            for r in radii[d]:
+                res = query_radius_batch(index, q, r, return_distance=False)
+                ratio = np.mean([len(a) for a in res]) / n
+                t = timeit(query_radius_batch, index, q, r,
+                           return_distance=False, repeat=2) / m
+                rows.append(row(f"fig2/query/snn/n{n}/d{d}/r{r}", t,
+                                f"ratio={ratio:.5f}"))
+                for name, meth in meths.items():
+                    tm = timeit(meth.query_radius, q, r, repeat=2) / m
+                    rows.append(row(f"fig2/query/{name}/n{n}/d{d}/r{r}", tm))
+    # vary d at fixed n (paper: n=10,000, d=2..272)
+    n = 4000 if not full else 10000
+    ds = [2, 32, 92, 152] if not full else [2, 32, 62, 92, 122, 152, 182, 212, 242, 272]
+    for d in ds:
+        x = make_uniform(n, d, seed=1)
+        q = subsample_queries(x, m)
+        index = build_index(x)
+        rows.append(row(f"fig2/index/snn/dsweep/d{d}",
+                        timeit(lambda: build_index(x), repeat=2)))
+        for r in (0.5, 2.0, 3.5, 5.0, 6.5):
+            res = query_radius_batch(index, q, r, return_distance=False)
+            ratio = np.mean([len(a) for a in res]) / n
+            t = timeit(query_radius_batch, index, q, r,
+                       return_distance=False, repeat=2) / m
+            rows.append(row(f"fig2/query/snn/dsweep/d{d}/r{r}", t,
+                            f"ratio={ratio:.6f}"))
+            tb = timeit(BruteForce2(x).query_radius, q, r, repeat=2) / m
+            rows.append(row(f"fig2/query/bf2/dsweep/d{d}/r{r}", tb))
+    return rows

@@ -1,0 +1,46 @@
+"""Paper Figure 3 + Table 2: GriSPy-style grid index vs SNN on uniform data,
+varying n (d=3) and varying d in {2,3,4}."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import GridIndex, build_index, query_radius_batch
+from repro.data.pipeline import make_uniform
+
+from .common import row, subsample_queries, timeit
+
+
+def run(full: bool = False):
+    rows = []
+    ns = [1000, 4641, 10000] if not full else [1000, 2154, 4641, 10000, 21544,
+                                               46415, 100000]
+    m = 200
+    radii = [0.05, 0.1, 0.15, 0.2, 0.25]
+    for n in ns:
+        x = make_uniform(n, 3, seed=0)
+        q = subsample_queries(x, m)
+        rows.append(row(f"fig3/index/snn/n{n}",
+                        timeit(lambda: build_index(x), repeat=2)))
+        rows.append(row(f"fig3/index/grid/n{n}",
+                        timeit(lambda: GridIndex(x), repeat=2)))
+        index, grid = build_index(x), GridIndex(x)
+        for r in radii:
+            res = query_radius_batch(index, q, r, return_distance=False)
+            ratio = np.mean([len(a) for a in res]) / n
+            ts = timeit(query_radius_batch, index, q, r,
+                        return_distance=False, repeat=2) / m
+            tg = timeit(grid.query_radius, q, r, repeat=2) / m
+            rows.append(row(f"fig3/query/snn/n{n}/r{r}", ts,
+                            f"ratio={ratio:.5f}"))
+            rows.append(row(f"fig3/query/grid/n{n}/r{r}", tg))
+    for d in (2, 3, 4):
+        x = make_uniform(10000 if full else 4000, d, seed=1)
+        q = subsample_queries(x, m)
+        index, grid = build_index(x), GridIndex(x)
+        for r in (0.05, 0.15, 0.25):
+            ts = timeit(query_radius_batch, index, q, r,
+                        return_distance=False, repeat=2) / m
+            tg = timeit(grid.query_radius, q, r, repeat=2) / m
+            rows.append(row(f"fig3/query/snn/d{d}/r{r}", ts))
+            rows.append(row(f"fig3/query/grid/d{d}/r{r}", tg))
+    return rows

@@ -1,0 +1,38 @@
+"""Roofline summary: renders experiments/dryrun/*.json into the per-cell
+table consumed by EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import row
+
+
+def load_records(out_dir: str = "experiments/dryrun", tag: str | None = None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if tag is None and r.get("tag"):
+            continue
+        if tag is not None and r.get("tag") != tag:
+            continue
+        recs.append(r)
+    return recs
+
+
+def run(full: bool = False):
+    rows = []
+    for r in load_records():
+        if r["multi_pod"]:
+            continue
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        derived = (f"bottleneck={r['bottleneck']}"
+                   f"|t_comp={r['t_compute_s']*1e3:.1f}ms"
+                   f"|t_mem={r['t_memory_s']*1e3:.1f}ms"
+                   f"|t_coll={r['t_collective_s']*1e3:.1f}ms"
+                   f"|useful={r['useful_flops_ratio']:.3f}"
+                   f"|mfu={r['mfu_at_roofline']:.4f}")
+        rows.append(row(name, r["roofline_step_time_s"], derived))
+    return rows

@@ -1,0 +1,49 @@
+"""Paper Table 7: total DBSCAN runtime per NN backend + NMI.
+
+UCI datasets are offline; stand-ins are labeled Gaussian blob mixtures with
+the same (n, d, #labels) as the paper's five datasets, z-scored like the
+paper's preprocessing.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.dbscan import dbscan, normalized_mutual_information as nmi
+
+from .common import row, timeit
+
+# name, n, d, k_labels, eps list (tuned to the blob scale)
+DATASETS = [
+    ("banknote", 1372, 4, 2, [0.3, 0.5]),
+    ("dermatology", 366, 34, 6, [2.0, 3.0]),
+    ("ecoli", 336, 7, 8, [0.9, 1.2]),
+    ("phoneme", 4509 // 3, 256, 5, [6.0, 8.0]),
+    ("wine", 178, 13, 3, [1.6, 2.2]),
+]
+
+
+def _standin(n, d, k, seed):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0, 3.0, (k, d))
+    per = n // k
+    xs, ys = [], []
+    for i in range(k):
+        xs.append(rng.normal(centers[i], 1.0, (per, d)))
+        ys.append(np.full(per, i))
+    x = np.concatenate(xs).astype(np.float32)
+    x = (x - x.mean(0)) / np.maximum(x.std(0), 1e-9)   # z-score (paper §6.4)
+    return x, np.concatenate(ys)
+
+
+def run(full: bool = False):
+    rows = []
+    for name, n, d, k, epss in DATASETS:
+        x, y = _standin(n, d, k, seed=hash(name) % 2**31)
+        for eps in epss:
+            labels = dbscan(x, eps, 5, backend="snn")
+            score = nmi(labels, y)
+            for backend in ("snn", "brute", "kdtree"):
+                t = timeit(dbscan, x, eps, 5, backend=backend, repeat=2)
+                rows.append(row(f"table7/dbscan/{backend}/{name}/eps{eps}",
+                                t, f"nmi={score:.4f}"))
+    return rows

@@ -1,0 +1,34 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (the contract of
+benchmarks.run) and returns the rows for aggregation.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def timeit(fn, *args, repeat: int = 3, number: int = 1, **kw):
+    """Best-of-repeat mean seconds per call."""
+    best = float("inf")
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        for _ in range(number):
+            fn(*args, **kw)
+        best = min(best, (time.perf_counter() - t0) / number)
+    return best
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    line = f"{name},{seconds * 1e6:.1f},{derived}"
+    print(line, flush=True)
+    return line
+
+
+def subsample_queries(x: np.ndarray, m: int, seed: int = 0) -> np.ndarray:
+    if x.shape[0] <= m:
+        return x
+    idx = np.random.default_rng(seed).choice(x.shape[0], m, replace=False)
+    return x[idx]

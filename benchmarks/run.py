@@ -1,0 +1,38 @@
+"""Benchmark harness entrypoint — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. ``--full`` uses the paper's original
+sizes (hours on 1 CPU); the default is a scaled suite that preserves every
+comparison in the paper.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig2,fig3,table45,table7,theory,roofline")
+    args = ap.parse_args()
+
+    from . import (bench_fig2_synthetic, bench_fig3_grid, bench_roofline,
+                   bench_table45_realworld, bench_table7_dbscan, bench_theory)
+    suites = {
+        "fig2": bench_fig2_synthetic.run,
+        "fig3": bench_fig3_grid.run,
+        "table45": bench_table45_realworld.run,
+        "table7": bench_table7_dbscan.run,
+        "theory": bench_theory.run,
+        "roofline": bench_roofline.run,
+    }
+    selected = args.only.split(",") if args.only else list(suites)
+    print("name,us_per_call,derived")
+    for name in selected:
+        print(f"# --- {name} ---", file=sys.stderr)
+        suites[name](full=args.full)
+
+
+if __name__ == "__main__":
+    main()

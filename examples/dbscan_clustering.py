@@ -1,0 +1,34 @@
+"""Paper §6.4: DBSCAN with SNN region queries vs brute-force/kd-tree backends
+— identical clusterings, SNN fastest (the paper's headline application).
+
+Run:  PYTHONPATH=src python examples/dbscan_clustering.py
+"""
+import time
+
+import numpy as np
+
+from repro.core.dbscan import dbscan, normalized_mutual_information as nmi
+from repro.data.pipeline import make_blobs
+
+
+def main():
+    x, y = make_blobs(800, [(0, 0), (6, 0), (0, 6), (6, 6), (3, 3)],
+                      std=0.5, seed=0)
+    print(f"clustering {x.shape[0]} points in {x.shape[1]}D, 5 true blobs")
+
+    results = {}
+    for backend in ("snn", "brute", "kdtree"):
+        t0 = time.perf_counter()
+        labels = dbscan(x, eps=0.7, min_samples=5, backend=backend)
+        dt = time.perf_counter() - t0
+        results[backend] = labels
+        print(f"{backend:7s}: {dt*1e3:8.1f} ms, "
+              f"{labels.max()+1} clusters, NMI={nmi(labels, y):.4f}")
+
+    assert (results["snn"] == results["brute"]).all()
+    assert (results["snn"] == results["kdtree"]).all()
+    print("all backends return identical clusterings (exactness)")
+
+
+if __name__ == "__main__":
+    main()

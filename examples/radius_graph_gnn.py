@@ -1,0 +1,64 @@
+"""SNN as graph substrate: build a radius graph over a point cloud with SNN
+(exact, fast), then train the assigned GAT architecture on it.
+
+Run:  PYTHONPATH=src python examples/radius_graph_gnn.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_index, query_radius_batch
+from repro.data.pipeline import make_blobs
+from repro.models import gnn
+from repro.optim import adamw
+from repro.optim.optimizers import apply_updates
+
+
+def radius_graph(x: np.ndarray, r: float):
+    """Edge list (src, dst) of all pairs within r, via one SNN batch query."""
+    index = build_index(x)
+    res = query_radius_batch(index, x, r, return_distance=False)
+    src = np.concatenate([np.full(len(nb), i) for i, nb in enumerate(res)])
+    dst = np.concatenate(res)
+    return src.astype(np.int32), dst.astype(np.int32)
+
+
+def main():
+    x, y = make_blobs(150, [(0, 0), (4, 0), (0, 4), (4, 4)], std=0.6, seed=0)
+    t0 = time.perf_counter()
+    src, dst = radius_graph(x, r=1.0)
+    print(f"radius graph: {x.shape[0]} nodes, {src.size} edges "
+          f"({time.perf_counter()-t0:.3f}s via SNN)")
+
+    cfg = gnn.GATConfig(name="radius-gat", d_in=2, d_hidden=8, n_heads=4,
+                        n_classes=4)
+    params = gnn.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"x": jnp.asarray(x), "src": jnp.asarray(src),
+             "dst": jnp.asarray(dst), "labels": jnp.asarray(y),
+             "mask": jnp.asarray(np.arange(x.shape[0]) % 2 == 0)}  # half train
+    opt = adamw(lr=5e-3)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state):
+        loss, g = jax.value_and_grad(
+            lambda p: gnn.loss_full(p, batch, cfg))(params)
+        upd, state = opt.update(g, state, params)
+        return apply_updates(params, upd), state, loss
+
+    for i in range(120):
+        params, state, loss = step(params, state)
+        if i % 30 == 0:
+            print(f"step {i:3d} loss {float(loss):.4f}")
+
+    logits = gnn.forward_full(params, batch["x"], batch["src"], batch["dst"], cfg)
+    test = ~np.asarray(batch["mask"])
+    acc = (np.asarray(logits).argmax(1)[test] == y[test]).mean()
+    print(f"held-out accuracy: {acc:.3f}")
+    assert acc > 0.9
+
+
+if __name__ == "__main__":
+    main()

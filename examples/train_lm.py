@@ -1,0 +1,82 @@
+"""End-to-end training driver: a ~100M-parameter GQA transformer trained for a
+few hundred steps on the synthetic Markov stream, with checkpointing and an
+injected mid-run failure + elastic resume (the full fault-tolerance path).
+
+Run:  PYTHONPATH=src python examples/train_lm.py  [--steps 300]
+"""
+import argparse
+import shutil
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import LMSyntheticDataset
+from repro.ft.checkpoint import CheckpointManager
+from repro.ft.elastic import ElasticRunner, FailureInjector
+from repro.models.transformer import (TransformerConfig, init_params, loss_fn,
+                                      param_count)
+from repro.optim import adamw, clip_by_global_norm, warmup_cosine
+from repro.optim.optimizers import apply_updates
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--layers", type=int, default=8)
+    args = ap.parse_args()
+
+    # ~100M params: 8L x 512d + 32k vocab
+    cfg = TransformerConfig(
+        name="lm100m", n_layers=args.layers, d_model=args.d_model,
+        n_heads=8, n_kv_heads=4, head_dim=args.d_model // 8,
+        d_ff=4 * args.d_model, vocab=32_000, max_seq=256, remat=False)
+    ds = LMSyntheticDataset(vocab=cfg.vocab, seq_len=128, batch=8)
+    opt = adamw(lr=warmup_cosine(3e-4, 20, args.steps), weight_decay=0.01)
+
+    def make_state():
+        params = init_params(jax.random.PRNGKey(0), cfg)
+        return {"params": params, "opt": opt.init(params)}
+
+    n_params = param_count(make_state()["params"])
+    print(f"model: {n_params/1e6:.1f}M params")
+
+    @jax.jit
+    def train_step(state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg))(state["params"])
+        grads, _ = clip_by_global_norm(grads, 1.0)
+        upd, new_opt = opt.update(grads, state["opt"], state["params"])
+        return {"params": apply_updates(state["params"], upd),
+                "opt": new_opt}, loss
+
+    losses = []
+
+    def step_fn(state, i):
+        batch = jax.tree.map(jnp.asarray, ds.batch_at(i))
+        state, loss = train_step(state, batch)
+        losses.append(float(loss))
+        if i % 25 == 0:
+            print(f"step {i:4d}  loss {float(loss):.4f}")
+        return state
+
+    ckdir = tempfile.mkdtemp(prefix="lm100m_ck_")
+    try:
+        runner = ElasticRunner(
+            make_state, step_fn, CheckpointManager(ckdir, async_write=False),
+            total_steps=args.steps, checkpoint_every=50,
+            on_restart=lambda r: print(f"  !! elastic restart #{r}"))
+        injector = FailureInjector({args.steps // 2: "simulated node loss"})
+        _, restarts = runner.run(injector)
+        print(f"finished with {restarts} elastic restart(s)")
+        first, last = np.mean(losses[:10]), np.mean(losses[-10:])
+        print(f"loss {first:.3f} -> {last:.3f} "
+              f"({'LEARNING OK' if last < first - 0.5 else 'no progress?'})")
+    finally:
+        shutil.rmtree(ckdir, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

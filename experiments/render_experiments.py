@@ -1,0 +1,77 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the JSON
+artifacts in experiments/dryrun/.
+
+Usage: PYTHONPATH=src python experiments/render_experiments.py > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DIR = os.path.join(os.path.dirname(__file__), "dryrun")
+
+
+def load(mp: bool):
+    out = {}
+    for p in sorted(glob.glob(os.path.join(DIR, "*.json"))):
+        r = json.load(open(p))
+        if r.get("tag") or r["arch"] == "snn-service":
+            continue
+        if r["multi_pod"] != mp:
+            continue
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def per_dev_gb(r):
+    ma = r["memory_analysis"]
+    return (ma.get("argument_size_in_bytes", 0) + ma.get("temp_size_in_bytes", 0)
+            + ma.get("output_size_in_bytes", 0)
+            - ma.get("alias_size_in_bytes", 0)) / 1e9
+
+
+def render_roofline():
+    recs = load(mp=False)
+    print("| arch | shape | GB/dev | t_comp | t_mem | t_coll | bottleneck | "
+          "MODEL_FLOPS | useful | MFU@roof |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for (a, s), r in sorted(recs.items()):
+        print(f"| {a} | {s} | {per_dev_gb(r):.2f} "
+              f"| {r['t_compute_s']*1e3:.1f}ms | {r['t_memory_s']*1e3:.1f}ms "
+              f"| {r['t_collective_s']*1e3:.1f}ms | {r['bottleneck']} "
+              f"| {r['model_flops_global']:.2e} "
+              f"| {r['useful_flops_ratio']:.3f} | {r['mfu_at_roofline']:.4f} |")
+
+
+def render_dryrun():
+    single, multi = load(False), load(True)
+    print("| arch | shape | 1-pod (256) | GB/dev | 2-pod (512) | GB/dev | "
+          "dominant collectives (1-pod) |")
+    print("|---|---|---|---|---|---|---|")
+    keys = sorted(set(single) | set(multi))
+    for k in keys:
+        s, m = single.get(k), multi.get(k)
+        coll = ""
+        if s:
+            cb = s.get("collective_breakdown", {})
+            top = sorted(cb.items(), key=lambda kv: -kv[1])[:2]
+            coll = ", ".join(f"{n} {v/1e9:.2f}GB" for n, v in top)
+        print(f"| {k[0]} | {k[1]} "
+              f"| {'PASS' if s else '—'} | {per_dev_gb(s):.2f} " if s else
+              f"| {k[0]} | {k[1]} | — | — ", end="")
+        print(f"| {'PASS' if m else 'pending'} "
+              f"| {per_dev_gb(m):.2f} | {coll} |" if m else
+              f"| pending | — | {coll} |")
+
+
+if __name__ == "__main__":
+    import sys
+    what = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if what in ("all", "roofline"):
+        print("### Roofline (single pod)\n")
+        render_roofline()
+        print()
+    if what in ("all", "dryrun"):
+        print("### Dry-run matrix\n")
+        render_dryrun()

@@ -1,0 +1,6 @@
+"""Config registry for the 10 assigned architectures + the paper's own config."""
+from .registry import (  # noqa: F401
+    ArchSpec, FAMILY_SHAPES, GNN_SHAPES, LM_SHAPES, RECSYS_SHAPES,
+    all_cells, get_arch, list_archs, register,
+)
+from .snn_default import DEFAULT as SNN_DEFAULT, SNNConfig  # noqa: F401

@@ -1,0 +1,23 @@
+"""The paper's own configuration: SNN index/query + serving defaults.
+
+SNN has no hyperparameters besides the radius (paper §1); everything here is
+implementation tiling for the TPU path and service defaults.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class SNNConfig:
+    metric: str = "euclidean"
+    power_iters: int = 64           # v1 power iteration (exactness-independent)
+    block_rows: int = 512           # Pallas db-block (bn)
+    query_tile: int = 128           # Pallas query tile (tq)
+    batch_group: int = 64           # host-path level-3 BLAS query grouping
+    max_neighbors: int = 1024       # fixed-shape result cap (serving)
+    serve_batch: int = 256          # dynamic batching target
+    serve_timeout_ms: float = 2.0   # batching window
+
+
+DEFAULT = SNNConfig()

@@ -1,0 +1,12 @@
+"""Core SNN library: the paper's contribution as a composable module."""
+from .snn import (  # noqa: F401
+    SNNIndex,
+    build_index,
+    query_radius,
+    query_radius_batch,
+    query_counts,
+    query_radius_fixed,
+)
+from .baselines import BruteForce1, BruteForce2, KDTree, GridIndex  # noqa: F401
+from .dbscan import dbscan, normalized_mutual_information  # noqa: F401
+from . import metrics  # noqa: F401

@@ -1,0 +1,96 @@
+"""Distance metrics supported by SNN (paper §3).
+
+Every metric is reduced to a Euclidean radius query, exactly as the paper does:
+
+* euclidean  — identity.
+* cosine     — rows are L2-normalized at index/query time; for normalized u, v:
+               ``2 * cdist(u, v) = ||u - v||^2``  =>  ``R_eucl = sqrt(2 * R_cos)``.
+* angular    — ``theta <= alpha  <=>  ||u - v||^2 <= 2 - 2 cos(alpha)``.
+* mips       — maximum-inner-product: data is lifted to d+1 dims with
+               ``p~ = [sqrt(xi^2 - ||p||^2), p]``, ``q~ = [0, q]``; then
+               ``||p~ - q~||^2 = xi^2 + ||q||^2 - 2 p.q`` so an inner-product
+               threshold ``p.q >= S`` becomes the (query-dependent) radius
+               ``R_eucl = sqrt(xi^2 + ||q||^2 - 2 S)``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+VALID_METRICS = ("euclidean", "cosine", "angular", "mips")
+
+
+def _as2d(a: np.ndarray) -> np.ndarray:
+    a = np.asarray(a, dtype=np.float64 if a.dtype == np.float64 else np.float32)
+    return a[None, :] if a.ndim == 1 else a
+
+
+def normalize_rows(a: np.ndarray, eps: float = 1e-30) -> np.ndarray:
+    a = _as2d(a)
+    nrm = np.linalg.norm(a, axis=1, keepdims=True)
+    return a / np.maximum(nrm, eps)
+
+
+def lift_mips_data(p: np.ndarray) -> tuple[np.ndarray, float]:
+    """Lift data points for MIPS: ``p~ = [sqrt(xi^2 - ||p||^2), p]``."""
+    p = _as2d(p)
+    sq = np.einsum("ij,ij->i", p, p)
+    xi2 = float(sq.max()) if p.shape[0] else 0.0
+    extra = np.sqrt(np.maximum(xi2 - sq, 0.0))
+    return np.concatenate([extra[:, None], p], axis=1), float(np.sqrt(xi2))
+
+
+def lift_mips_query(q: np.ndarray) -> np.ndarray:
+    q = _as2d(q)
+    return np.concatenate([np.zeros((q.shape[0], 1), q.dtype), q], axis=1)
+
+
+def transform_data(p: np.ndarray, metric: str) -> tuple[np.ndarray, float]:
+    """Map raw data into the Euclidean space used by the index.
+
+    Returns (transformed data, xi) where xi is only meaningful for mips.
+    """
+    if metric == "euclidean":
+        return _as2d(p), 0.0
+    if metric in ("cosine", "angular"):
+        return normalize_rows(p), 0.0
+    if metric == "mips":
+        return lift_mips_data(p)
+    raise ValueError(f"unknown metric {metric!r}; valid: {VALID_METRICS}")
+
+
+def transform_query(q: np.ndarray, metric: str) -> np.ndarray:
+    if metric == "euclidean":
+        return _as2d(q)
+    if metric in ("cosine", "angular"):
+        return normalize_rows(q)
+    if metric == "mips":
+        return lift_mips_query(q)
+    raise ValueError(f"unknown metric {metric!r}; valid: {VALID_METRICS}")
+
+
+def euclidean_radius(radius, q: np.ndarray, metric: str, xi: float = 0.0) -> np.ndarray:
+    """Per-query Euclidean radius equivalent to ``radius`` in ``metric``.
+
+    For mips, ``radius`` is the inner-product threshold S (neighbors satisfy
+    ``p.q >= S``) and the result depends on ||q|| — hence per-query output.
+    """
+    q = _as2d(q)
+    m = q.shape[0]
+    if metric == "euclidean":
+        return np.full((m,), float(radius), dtype=np.float64)
+    if metric == "cosine":
+        # cdist(u, v) <= radius  <=>  ||u-v||^2 <= 2*radius
+        return np.full((m,), np.sqrt(max(2.0 * float(radius), 0.0)), dtype=np.float64)
+    if metric == "angular":
+        return np.full((m,), np.sqrt(max(2.0 - 2.0 * np.cos(float(radius)), 0.0)), dtype=np.float64)
+    if metric == "mips":
+        qsq = np.einsum("ij,ij->i", q, q)
+        return np.sqrt(np.maximum(xi * xi + qsq - 2.0 * float(radius), 0.0))
+    raise ValueError(f"unknown metric {metric!r}; valid: {VALID_METRICS}")
+
+
+def pairwise_sq_dists(x: np.ndarray, q: np.ndarray) -> np.ndarray:
+    """Reference O(n m d) squared distances, numerically safe (no BLAS trick)."""
+    x, q = _as2d(x), _as2d(q)
+    diff = x[None, :, :] - q[:, None, :]
+    return np.einsum("mnd,mnd->mn", diff, diff)

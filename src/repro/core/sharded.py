@@ -1,0 +1,110 @@
+"""Distributed SNN: the sorted index sharded contiguously across a mesh axis.
+
+Layout: device k of the ``data`` axis holds sorted rows ``[k*n/D, (k+1)*n/D)``.
+Because the global sort order is preserved *within and across* shards, every
+device can run the same alpha-window pruning locally; a query's window touches
+at most a contiguous run of devices, and devices outside it prune everything at
+block level (zero matmuls on a real TPU via the Pallas kernel skip).
+
+Fixed-shape outputs only (counts / per-shard top-k) — exact variable-length
+extraction stays a host-side operation, as in the single-device API.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import snn as _snn
+
+
+def shard_index(index: _snn.SNNIndex, mesh: Mesh, axis: str = "data", block: int = 512):
+    """Pad and place the sorted database, alpha scores and half-norms on a mesh.
+
+    Returns (xs, alphas, half_norms, order) device arrays sharded P(axis) on
+    rows.  Padding rows carry +BIG alpha / half-norm so they never match.
+    """
+    nshards = int(np.prod([mesh.shape[a] for a in (axis if isinstance(axis, tuple) else (axis,))]))
+    unit = nshards * block
+    n, d = index.xs.shape
+    npad = max((n + unit - 1) // unit, 1) * unit
+    big = np.float32(np.finfo(np.float32).max / 4)
+    xs = np.concatenate([index.xs, np.zeros((npad - n, d), index.xs.dtype)], 0)
+    al = np.concatenate([index.alphas, np.full(npad - n, big, np.float32)], 0)
+    hn = np.concatenate([index.half_norms, np.full(npad - n, big, np.float32)], 0)
+    od = np.concatenate([index.order, np.full(npad - n, -1, np.int64)], 0)
+    s2 = NamedSharding(mesh, P(axis, None))
+    s1 = NamedSharding(mesh, P(axis))
+    return (jax.device_put(xs, s2), jax.device_put(al, s1),
+            jax.device_put(hn, s1), jax.device_put(od, s1))
+
+
+def _local_filter(xs, alphas, half_norms, xq, aq, r, thresh):
+    """Per-shard masked halved distances (m, n_local); +BIG where pruned."""
+    dhalf = half_norms[None, :] - xq @ xs.T
+    inwin = jnp.abs(alphas[None, :] - aq[:, None]) <= r[:, None]
+    keep = inwin & (dhalf <= thresh[:, None])
+    big = jnp.asarray(jnp.finfo(dhalf.dtype).max / 8, dhalf.dtype)
+    return jnp.where(keep, dhalf, big)
+
+
+def make_sharded_count_fn(mesh: Mesh, axis: str = "data"):
+    """Returns count(xs, alphas, hn, xq, aq, r, thresh) -> (m,) int32, jitted.
+
+    Queries replicated; DB sharded along rows; psum over the shard axis.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    def body(xs, alphas, hn, xq, aq, r, thresh):
+        big = jnp.finfo(jnp.float32).max / 8
+        dh = _local_filter(xs, alphas, hn, xq, aq, r, thresh)
+        local = jnp.sum(dh < big, axis=1).astype(jnp.int32)
+        return jax.lax.psum(local, axis)
+
+    sm = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis, None), P(axis), P(axis), P(None, None), P(None), P(None), P(None)),
+        check_rep=False,
+        out_specs=P(None),
+    )
+    return jax.jit(sm)
+
+
+def make_sharded_topk_fn(mesh: Mesh, k_per_shard: int, axis: str = "data"):
+    """Returns topk(xs, alphas, hn, order, xq, aq, r, thresh) ->
+    (idx (m, D*k), dhalf (m, D*k)) gathering each shard's k best candidates.
+
+    Exact as long as no single shard holds more than k_per_shard true neighbors
+    of a query (callers check via the count fn and re-query with larger k).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    def body(xs, alphas, hn, order, xq, aq, r, thresh):
+        dh = _local_filter(xs, alphas, hn, xq, aq, r, thresh)
+        vals, loc = jax.lax.top_k(-dh, k_per_shard)  # smallest dhalf
+        gidx = jnp.where(vals > -jnp.finfo(jnp.float32).max / 8, order[loc], -1)
+        out_i = jax.lax.all_gather(gidx, axis, axis=1, tiled=True)
+        out_d = jax.lax.all_gather(-vals, axis, axis=1, tiled=True)
+        return out_i, out_d
+
+    sm = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis, None), P(axis), P(axis), P(axis),
+                  P(None, None), P(None), P(None), P(None)),
+        check_rep=False,
+        out_specs=(P(None, None), P(None, None)),
+    )
+    return jax.jit(sm)
+
+
+def prepare_query_arrays(index: _snn.SNNIndex, q: np.ndarray, radius):
+    """Host-side prep shared by the sharded entry points."""
+    xq, r = index.prepare_queries(q, radius)
+    aq = xq @ index.v1
+    qsq = np.einsum("md,md->m", xq, xq)
+    thresh = (r * r - qsq) / 2.0
+    return (jnp.asarray(xq), jnp.asarray(aq.astype(np.float32)),
+            jnp.asarray(r.astype(np.float32)), jnp.asarray(thresh.astype(np.float32)))

@@ -1,0 +1,280 @@
+"""SNN — sorting-based exact fixed-radius near-neighbor search (paper Alg. 1 & 2).
+
+Two query paths are provided:
+
+* the **host path** (`query_radius`, `query_radius_batch`): exact, variable-length
+  results, BLAS (numpy matmul) over the contiguous sorted window — a faithful
+  implementation of the paper's Algorithm 2 including the grouped level-3 BLAS
+  batch trick.
+* the **fixed-shape path** (`query_radius_fixed`): jit-friendly block-pruned
+  filter used on TPU and by the serving layer; see kernels/snn_query.
+
+The index is built with a jit-compiled power iteration for the first principal
+component.  Exactness of SNN never depends on the accuracy of v1 (any direction
+yields a valid Cauchy–Schwarz window); v1 only tightens the window.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import metrics as _metrics
+
+
+# --------------------------------------------------------------------------- #
+# Index                                                                        #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class SNNIndex:
+    """Output of Algorithm 1 (plus bookkeeping to undo the sort).
+
+    Attributes:
+      mu:         (d,) empirical mean of the (transformed) data.
+      v1:         (d,) first principal direction (unit norm).
+      xs:         (n, d) centered data, sorted ascending by alpha.
+      alphas:     (n,) sorted scores ``xs @ v1``.
+      half_norms: (n,) ``(x.x)/2`` per sorted row.
+      order:      (n,) original row index of each sorted row.
+      metric:     one of metrics.VALID_METRICS.
+      xi:         max raw-data norm (mips lift only).
+    """
+
+    mu: np.ndarray
+    v1: np.ndarray
+    xs: np.ndarray
+    alphas: np.ndarray
+    half_norms: np.ndarray
+    order: np.ndarray
+    metric: str = "euclidean"
+    xi: float = 0.0
+
+    @property
+    def n(self) -> int:
+        return self.xs.shape[0]
+
+    @property
+    def d(self) -> int:
+        return self.xs.shape[1]
+
+    def prepare_queries(self, q: np.ndarray, radius) -> tuple[np.ndarray, np.ndarray]:
+        """Transform+center queries; return (xq (m,d), per-query Euclidean radii)."""
+        tq = _metrics.transform_query(np.asarray(q), self.metric)
+        r = _metrics.euclidean_radius(radius, tq, self.metric, self.xi)
+        return (tq - self.mu[None, :]).astype(self.xs.dtype), r.astype(np.float64)
+
+
+@partial(jax.jit, static_argnames=("n_iter",))
+def _power_iteration(x: jnp.ndarray, n_iter: int = 64) -> jnp.ndarray:
+    """First right singular vector of centered x via power iteration on X^T X.
+
+    O(n d) per iteration; deterministic start from the dimension of largest
+    variance so the result is reproducible.
+    """
+    var = jnp.var(x, axis=0)
+    v0 = jax.nn.one_hot(jnp.argmax(var), x.shape[1], dtype=x.dtype)
+
+    def body(_, v):
+        w = x.T @ (x @ v)
+        return w / jnp.maximum(jnp.linalg.norm(w), 1e-30)
+
+    v = jax.lax.fori_loop(0, n_iter, body, v0)
+    # Fix the sign for determinism: largest-|component| is positive.
+    s = jnp.sign(v[jnp.argmax(jnp.abs(v))])
+    return v * jnp.where(s == 0, 1.0, s)
+
+
+def build_index(
+    p: np.ndarray,
+    metric: str = "euclidean",
+    n_iter: int = 64,
+    dtype=np.float32,
+) -> SNNIndex:
+    """Algorithm 1: center, score by first PC, sort, precompute half-norms."""
+    x_raw, xi = _metrics.transform_data(np.asarray(p), metric)
+    x_raw = x_raw.astype(dtype)
+    mu = x_raw.mean(axis=0)
+    x = x_raw - mu[None, :]
+    if x.shape[0] == 0:
+        d = x.shape[1]
+        return SNNIndex(mu, np.zeros(d, dtype), x, np.zeros(0, dtype),
+                        np.zeros(0, dtype), np.zeros(0, np.int64), metric, xi)
+    v1 = np.asarray(_power_iteration(jnp.asarray(x), n_iter=n_iter))
+    alphas = x @ v1
+    order = np.argsort(alphas, kind="stable")
+    xs = np.ascontiguousarray(x[order])
+    alphas = np.ascontiguousarray(alphas[order])
+    half_norms = 0.5 * np.einsum("ij,ij->i", xs, xs)
+    return SNNIndex(mu, v1, xs, alphas, half_norms, order.astype(np.int64), metric, xi)
+
+
+# --------------------------------------------------------------------------- #
+# Exact host queries (Algorithm 2)                                             #
+# --------------------------------------------------------------------------- #
+def _window(index: SNNIndex, aq: np.ndarray, r: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    lo = np.searchsorted(index.alphas, aq - r, side="left")
+    hi = np.searchsorted(index.alphas, aq + r, side="right")
+    return lo, hi
+
+
+def query_radius(
+    index: SNNIndex, q: np.ndarray, radius, return_distance: bool = True
+):
+    """Exact radius query for a single query point.
+
+    Returns (indices, distances) into the ORIGINAL data ordering; distances are
+    in the native metric (euclidean distance, cosine distance, angle, or inner
+    product for mips).
+    """
+    xq, r = index.prepare_queries(q, radius)
+    xq, r = xq[0], float(r[0])
+    aq = float(xq @ index.v1)
+    lo, hi = _window(index, np.asarray([aq]), np.asarray([r]))
+    lo, hi = int(lo[0]), int(hi[0])
+    if hi <= lo:
+        out_i = np.zeros(0, np.int64)
+        return (out_i, np.zeros(0, np.float64)) if return_distance else out_i
+    win = index.xs[lo:hi]
+    # Paper eq. (4): half-norm form, one GEMV over the contiguous window.
+    dhalf = index.half_norms[lo:hi] - win @ xq
+    qsq = float(xq @ xq)
+    keep = dhalf <= (r * r - qsq) / 2.0
+    sel = np.nonzero(keep)[0] + lo
+    out_i = index.order[sel]
+    if not return_distance:
+        return out_i
+    sq = np.maximum(2.0 * dhalf[keep] + qsq, 0.0)
+    return out_i, _native_distance(index, sq, xq)
+
+
+def _native_distance(index: SNNIndex, sq_eucl: np.ndarray, xq: np.ndarray) -> np.ndarray:
+    """Convert squared Euclidean distances (in index space) to the native metric."""
+    if index.metric == "euclidean":
+        return np.sqrt(sq_eucl)
+    if index.metric == "cosine":
+        return sq_eucl / 2.0
+    if index.metric == "angular":
+        return np.arccos(np.clip(1.0 - sq_eucl / 2.0, -1.0, 1.0))
+    if index.metric == "mips":
+        # ||p~-q~||^2 = xi^2 + ||q||^2 - 2 p.q  (index space is centered; undo)
+        qraw_sq = float(((xq + index.mu) ** 2).sum())  # ||q~||^2, first coord 0
+        return (index.xi**2 + qraw_sq - sq_eucl) / 2.0
+    raise AssertionError(index.metric)
+
+
+def query_radius_batch(
+    index: SNNIndex,
+    q: np.ndarray,
+    radius,
+    return_distance: bool = True,
+    group_size: int = 64,
+):
+    """Exact batched radius query (paper §4, level-3 BLAS variant).
+
+    Queries are sorted by their alpha score and processed in groups; each group
+    computes one GEMM over the union of its members' windows.  Returns a list of
+    per-query results in the original query order.
+    """
+    xq, r = index.prepare_queries(q, radius)
+    m = xq.shape[0]
+    aq = xq @ index.v1
+    lo, hi = _window(index, aq, r)
+    qord = np.argsort(aq, kind="stable")
+    results: list = [None] * m
+    qsq = np.einsum("ij,ij->i", xq, xq)
+    for g0 in range(0, m, group_size):
+        grp = qord[g0 : g0 + group_size]
+        glo, ghi = int(lo[grp].min()), int(hi[grp].max())
+        if ghi <= glo:
+            for qi in grp:
+                e = np.zeros(0, np.int64)
+                results[qi] = (e, np.zeros(0, np.float64)) if return_distance else e
+            continue
+        win = index.xs[glo:ghi]
+        # one GEMM for the whole group: (ghi-glo, d) @ (d, |grp|)
+        dhalf = index.half_norms[glo:ghi, None] - win @ xq[grp].T
+        for k, qi in enumerate(grp):
+            s, e = lo[qi] - glo, hi[qi] - glo
+            dh = dhalf[s:e, k]
+            keep = dh <= (r[qi] * r[qi] - qsq[qi]) / 2.0
+            sel = np.nonzero(keep)[0] + lo[qi]
+            oi = index.order[sel]
+            if return_distance:
+                sqd = np.maximum(2.0 * dh[keep] + qsq[qi], 0.0)
+                results[qi] = (oi, _native_distance(index, sqd, xq[qi]))
+            else:
+                results[qi] = oi
+    return results
+
+
+def query_counts(index: SNNIndex, q: np.ndarray, radius, group_size: int = 64) -> np.ndarray:
+    """Number of neighbors within radius for each query (exact, batched)."""
+    res = query_radius_batch(index, q, radius, return_distance=False, group_size=group_size)
+    return np.asarray([len(r) for r in res], dtype=np.int64)
+
+
+# --------------------------------------------------------------------------- #
+# Fixed-shape (jit / TPU) path                                                 #
+# --------------------------------------------------------------------------- #
+def pad_blocks(index: SNNIndex, block: int = 512):
+    """Pad the sorted database to a whole number of row blocks.
+
+    Padding rows get alpha=+inf and half_norm=+inf so they can never pass either
+    the window test or the distance test.  Returns device arrays.
+    """
+    n, d = index.xs.shape
+    nb = max((n + block - 1) // block, 1)
+    pad = nb * block - n
+    big = np.float32(np.finfo(np.float32).max / 4)
+    xs = np.concatenate([index.xs, np.zeros((pad, d), index.xs.dtype)], 0)
+    al = np.concatenate([index.alphas, np.full((pad,), big, index.alphas.dtype)], 0)
+    hn = np.concatenate([index.half_norms, np.full((pad,), big, index.half_norms.dtype)], 0)
+    return jnp.asarray(xs), jnp.asarray(al), jnp.asarray(hn), nb, pad
+
+
+@partial(jax.jit, static_argnames=("block",))
+def _blocked_filter(xs, alphas, half_norms, xq, aq, r, block: int):
+    """Pure-jnp block-pruned filter; the oracle for kernels/snn_query.
+
+    Returns (m, n_padded) halved squared distances with +inf outside the window /
+    radius.  Blocks that cannot intersect any query window still cost a masked
+    matmul here (XLA has no dynamic skip) — the Pallas kernel adds the true skip.
+    """
+    n, d = xs.shape
+    m = xq.shape[0]
+    dhalf = half_norms[None, :] - xq @ xs.T  # (m, n)
+    inwin = jnp.abs(alphas[None, :] - aq[:, None]) <= r[:, None]
+    qsq = jnp.sum(xq * xq, axis=1)
+    keep = inwin & (dhalf <= ((r * r - qsq) / 2.0)[:, None])
+    big = jnp.asarray(jnp.finfo(dhalf.dtype).max / 8, dhalf.dtype)
+    return jnp.where(keep, dhalf, big)
+
+
+def query_radius_fixed(index: SNNIndex, q: np.ndarray, radius, max_neighbors: int,
+                       block: int = 512):
+    """Fixed-shape query: returns (indices (m,K), sq_dists (m,K), valid (m,K)).
+
+    K = max_neighbors; results are the K nearest within the radius (exact as long
+    as the true neighbor count <= K; the count output lets callers detect
+    truncation).  This is the API the serving layer and TPU path use.
+    """
+    xs, al, hn, nb, _ = pad_blocks(index, block)
+    xq, r = index.prepare_queries(q, radius)
+    xq = jnp.asarray(xq)
+    aq = xq @ jnp.asarray(index.v1)
+    rj = jnp.asarray(r, xq.dtype)
+    dhalf = _blocked_filter(xs, al, hn, xq, aq, rj, block)
+    big = jnp.finfo(dhalf.dtype).max / 8
+    counts = jnp.sum(dhalf < big, axis=1)
+    neg = -dhalf
+    vals, idx = jax.lax.top_k(neg, max_neighbors)  # largest -dhalf = smallest dist
+    valid = vals > -big
+    qsq = jnp.sum(xq * xq, axis=1)
+    sq = jnp.maximum(2.0 * (-vals) + qsq[:, None], 0.0)
+    order = jnp.asarray(index.order)
+    out_idx = jnp.where(valid, order[idx % index.n], -1)
+    return np.asarray(out_idx), np.asarray(jnp.where(valid, sq, np.inf)), \
+        np.asarray(valid), np.asarray(counts)

@@ -1,0 +1,2 @@
+"""Distribution utilities: sharding rules, collective overlap, compression."""
+from .sharding import constrain, sharding_rules, current_rules, rules_for_family  # noqa: F401

@@ -1,0 +1,76 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+* ``topk_compress`` — magnitude top-k sparsification with error feedback
+  (Deep Gradient Compression recipe): only k fractions of each gradient leaf
+  cross the wire; the residual is fed back into the next step so the update
+  is unbiased over time.
+* ``int8_quantize`` / ``int8_dequantize`` — per-leaf symmetric int8 for a 4x
+  cheaper all-reduce (all-gather of scales + int32 accumulate).
+
+These operate on gradient pytrees before the (psum / mean) collective; the
+train loop composes them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_compress(grads, residual, k_frac: float = 0.01):
+    """Returns (sparse_grads, new_residual).
+
+    sparse_grads has the same dense shapes but only the top-k entries (by
+    magnitude, per leaf) are nonzero — a dense emulation of the sparse wire
+    format that keeps XLA happy while modeling the semantics exactly.
+    """
+    if residual is None:
+        residual = jax.tree.map(jnp.zeros_like, grads)
+
+    def one(g, r):
+        acc = g + r
+        flat = acc.reshape(-1)
+        k = max(int(flat.size * k_frac), 1)
+        thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+        mask = jnp.abs(acc) >= thresh
+        sent = jnp.where(mask, acc, 0)
+        return sent, acc - sent
+
+    pairs = jax.tree.map(one, grads, residual)
+    sent = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    resid = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return sent, resid
+
+
+def int8_quantize(grads):
+    """Per-leaf symmetric int8: returns (q_tree, scale_tree)."""
+    def one(g):
+        scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        return q, scale
+    pairs = jax.tree.map(one, grads)
+    q = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    s = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return q, s
+
+
+def int8_dequantize(q, s):
+    return jax.tree.map(lambda qi, si: qi.astype(jnp.float32) * si, q, s)
+
+
+def compressed_psum(grads, axis_name: str, mode: str = "none"):
+    """All-reduce gradients over ``axis_name`` with optional compression.
+
+    int8 mode: quantize -> psum int32 -> dequantize with psum'd max-scale
+    (conservative shared scale keeps the reduction exact in int32).
+    """
+    if mode == "none":
+        return jax.lax.psum(grads, axis_name)
+    if mode == "int8":
+        def one(g):
+            scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+            scale = jax.lax.pmax(scale, axis_name)      # shared scale
+            q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int32)
+            tot = jax.lax.psum(q, axis_name)
+            return tot.astype(jnp.float32) * scale
+        return jax.tree.map(one, grads)
+    raise ValueError(mode)

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the perf-critical hot spots.
+
+* snn_query     — the paper's pruned distance filter (block-skip + MXU GEMM)
+* embedding_bag — recsys gather+segment-sum (scalar-prefetch indirection)
+
+``ops`` holds the padded/jit public wrappers; ``ref`` the pure-jnp oracles.
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,81 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These handle padding/alignment and pick Pallas (TPU) vs the jnp oracle (CPU:
+interpret mode is a Python-loop emulator, so the oracle is the fast CPU path;
+tests exercise the kernels in interpret mode explicitly).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref as _ref
+from .embedding_bag import embedding_bag as _bag_kernel
+from .snn_query import BIG, snn_count as _count_kernel, snn_filter as _filter_kernel
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pad_database(xs, alphas, half_norms, bn: int = 512, lane: int = 128):
+    """Pad rows to bn multiple (alpha/half-norm=+BIG) and features to lane multiple."""
+    xs, alphas, half_norms = map(np.asarray, (xs, alphas, half_norms))
+    n, d = xs.shape
+    npad = (-n) % bn if n else bn
+    dpad = (-d) % lane
+    xs = np.pad(xs, ((0, npad), (0, dpad)))
+    alphas = np.pad(alphas, (0, npad), constant_values=BIG)
+    half_norms = np.pad(half_norms, (0, npad), constant_values=BIG)
+    return jnp.asarray(xs), jnp.asarray(alphas), jnp.asarray(half_norms), n, d
+
+
+def pad_queries(q, aq, r, thresh, tq: int = 128, lane: int = 128):
+    """Pad queries to tq multiple; padding queries get r=-BIG (match nothing)."""
+    q, aq, r, thresh = map(np.asarray, (q, aq, r, thresh))
+    m, d = q.shape
+    mpad = (-m) % tq if m else tq
+    dpad = (-d) % lane
+    q = np.pad(q, ((0, mpad), (0, dpad)))
+    aq = np.pad(aq, (0, mpad))
+    r = np.pad(r, (0, mpad), constant_values=-BIG)
+    thresh = np.pad(thresh, (0, mpad), constant_values=-BIG)
+    return jnp.asarray(q), jnp.asarray(aq), jnp.asarray(r), jnp.asarray(thresh), m
+
+
+def snn_filter(q, aq, r, thresh, xs, alphas, half_norms, *,
+               tq: int = 128, bn: int = 512, use_pallas: bool | None = None):
+    """Padded-and-dispatched masked distance filter; see kernels.snn_query."""
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if not use_pallas:
+        return _ref.snn_filter_ref(q, aq, r, thresh, xs, alphas, half_norms)
+    return _filter_kernel(q, aq, r, thresh, xs, alphas, half_norms,
+                          tq=tq, bn=bn, interpret=not on_tpu())
+
+
+def snn_count(q, aq, r, thresh, xs, alphas, half_norms, *,
+              tq: int = 128, bn: int = 512, use_pallas: bool | None = None):
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if not use_pallas:
+        return _ref.snn_count_ref(q, aq, r, thresh, xs, alphas, half_norms)
+    return _count_kernel(q, aq, r, thresh, xs, alphas, half_norms,
+                         tq=tq, bn=bn, interpret=not on_tpu())
+
+
+def embedding_bag(ids, table, *, mode: str = "sum", use_pallas: bool | None = None):
+    """EmbeddingBag with -1 padding ids; modes: sum | mean."""
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if use_pallas:
+        out = _bag_kernel(ids, table, interpret=not on_tpu())
+    else:
+        out = _ref.embedding_bag_ref(ids, table)
+    if mode == "mean":
+        cnt = jnp.maximum(jnp.sum(ids >= 0, axis=1), 1).astype(out.dtype)
+        out = out / cnt[:, None]
+    elif mode != "sum":
+        raise ValueError(f"unknown mode {mode!r}")
+    return out

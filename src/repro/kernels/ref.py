@@ -1,0 +1,31 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BIG = float(jnp.finfo(jnp.float32).max / 8)
+
+
+@jax.jit
+def snn_filter_ref(q, aq, r, thresh, xs, alphas, half_norms):
+    """Oracle for kernels.snn_query.snn_filter (no block skipping, same math)."""
+    dhalf = half_norms[None, :] - q @ xs.T
+    inwin = jnp.abs(alphas[None, :] - aq[:, None]) <= r[:, None]
+    keep = inwin & (dhalf <= thresh[:, None])
+    return jnp.where(keep, dhalf, BIG)
+
+
+@jax.jit
+def snn_count_ref(q, aq, r, thresh, xs, alphas, half_norms):
+    """Oracle for kernels.snn_query.snn_count."""
+    dh = snn_filter_ref(q, aq, r, thresh, xs, alphas, half_norms)
+    return jnp.sum(dh < BIG, axis=1).astype(jnp.int32)
+
+
+@jax.jit
+def embedding_bag_ref(ids, table):
+    """Oracle for kernels.embedding_bag.embedding_bag."""
+    rows = jnp.take(table, jnp.maximum(ids, 0), axis=0)   # (B, F, D)
+    mask = (ids >= 0).astype(table.dtype)[..., None]
+    return jnp.sum(rows * mask, axis=1)

@@ -1,0 +1,147 @@
+"""Pallas TPU kernel for the SNN query hot loop (paper Alg. 2, step 5).
+
+TPU adaptation of the paper's dynamic-window BLAS GEMV/GEMM:
+
+* the sorted database is tiled into row blocks of ``bn`` rows; queries into
+  tiles of ``tq``;
+* grid = (num_query_tiles, num_db_blocks); for each cell the kernel first tests
+  whether ANY query window in the tile can intersect the block's alpha range
+  (``alpha`` is globally sorted, so the block range is just [first, last]);
+* pruned cells skip the MXU matmul entirely (``pl.when``) — this is the
+  sorting-based exclusion criterion executed at tile granularity;
+* surviving cells compute ``dhalf = half_norm - X_block @ q`` on the MXU and
+  apply the half-norm radius test  ``dhalf <= (R^2 - q.q)/2``  (paper eq. (4)).
+
+Two entry kernels share the body:
+  * ``filter``: emits masked halved sq. distances (m, n), +BIG where pruned;
+  * ``count`` : emits per-query neighbor counts (m,), accumulated over blocks.
+
+Layout notes (TPU): 1-D per-row arrays (alpha, half-norm, per-query scalars)
+are carried as (1, n)/(1, m) so the last dim is the 128-lane axis; ``d`` is
+zero-padded to a multiple of 128 for the MXU (zero features change nothing).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+BIG = float(jnp.finfo(jnp.float32).max / 8)
+
+
+def _window_hit(aq, r, a_lo, a_hi):
+    """Does any query window [aq-r, aq+r] in the tile intersect [a_lo, a_hi]?"""
+    return jnp.any((aq + r >= a_lo) & (aq - r <= a_hi))
+
+
+def _tile_body(q_ref, aq_ref, r_ref, th_ref, x_ref, al_ref, hn_ref):
+    """Shared compute for one (query tile, db block) cell -> (keep, dhalf)."""
+    s = jax.lax.dot_general(
+        q_ref[...], x_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (tq, bn)
+    dhalf = hn_ref[...] - s  # (1, bn) broadcast over (tq, bn)
+    aq = aq_ref[0, :][:, None]          # (tq, 1)
+    r = r_ref[0, :][:, None]
+    inwin = jnp.abs(al_ref[...] - aq) <= r
+    keep = inwin & (dhalf <= th_ref[0, :][:, None])
+    return keep, dhalf
+
+
+def _filter_kernel(q_ref, aq_ref, r_ref, th_ref, x_ref, al_ref, hn_ref, out_ref):
+    a_lo = al_ref[0, 0]
+    a_hi = al_ref[0, al_ref.shape[1] - 1]
+    hit = _window_hit(aq_ref[0, :], r_ref[0, :], a_lo, a_hi)
+
+    @pl.when(hit)
+    def _():
+        keep, dhalf = _tile_body(q_ref, aq_ref, r_ref, th_ref, x_ref, al_ref, hn_ref)
+        out_ref[...] = jnp.where(keep, dhalf, BIG)
+
+    @pl.when(jnp.logical_not(hit))
+    def _():
+        out_ref[...] = jnp.full_like(out_ref, BIG)
+
+
+def _count_kernel(q_ref, aq_ref, r_ref, th_ref, x_ref, al_ref, hn_ref, out_ref):
+    bi = pl.program_id(1)
+
+    @pl.when(bi == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a_lo = al_ref[0, 0]
+    a_hi = al_ref[0, al_ref.shape[1] - 1]
+    hit = _window_hit(aq_ref[0, :], r_ref[0, :], a_lo, a_hi)
+
+    @pl.when(hit)
+    def _():
+        keep, _ = _tile_body(q_ref, aq_ref, r_ref, th_ref, x_ref, al_ref, hn_ref)
+        out_ref[...] += jnp.sum(keep.astype(jnp.int32), axis=1)[None, :]
+
+
+def _grid_specs(m, n, d, tq, bn):
+    grid = (m // tq, n // bn)
+    in_specs = [
+        pl.BlockSpec((tq, d), lambda qi, bi: (qi, 0)),    # q
+        pl.BlockSpec((1, tq), lambda qi, bi: (0, qi)),    # aq
+        pl.BlockSpec((1, tq), lambda qi, bi: (0, qi)),    # r
+        pl.BlockSpec((1, tq), lambda qi, bi: (0, qi)),    # thresh
+        pl.BlockSpec((bn, d), lambda qi, bi: (bi, 0)),    # x
+        pl.BlockSpec((1, bn), lambda qi, bi: (0, bi)),    # alpha
+        pl.BlockSpec((1, bn), lambda qi, bi: (0, bi)),    # half_norms
+    ]
+    return grid, in_specs
+
+
+def _compiler_params():
+    # block dim 0 (query tiles) is parallel; dim 1 revisits the count output.
+    return pltpu.CompilerParams(
+        dimension_semantics=(pltpu.PARALLEL, pltpu.ARBITRARY))
+
+
+@functools.partial(jax.jit, static_argnames=("tq", "bn", "interpret"))
+def snn_filter(q, aq, r, thresh, xs, alphas, half_norms, *,
+               tq: int = 128, bn: int = 512, interpret: bool = True):
+    """Masked halved sq. distances (m, n); +BIG outside window/radius.
+
+    Callers are expected to pre-pad: m % tq == 0, n % bn == 0, d % 128 == 0,
+    with padding DB rows carrying +BIG alpha/half-norm (see ops.pad_database).
+    """
+    m, d = q.shape
+    n = xs.shape[0]
+    grid, in_specs = _grid_specs(m, n, d, tq, bn)
+    return pl.pallas_call(
+        _filter_kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((tq, bn), lambda qi, bi: (qi, bi)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(q, aq[None, :], r[None, :], thresh[None, :], xs,
+      alphas[None, :], half_norms[None, :])
+
+
+@functools.partial(jax.jit, static_argnames=("tq", "bn", "interpret"))
+def snn_count(q, aq, r, thresh, xs, alphas, half_norms, *,
+              tq: int = 128, bn: int = 512, interpret: bool = True):
+    """Per-query neighbor counts (m,) int32 (same padding contract as filter)."""
+    m, d = q.shape
+    n = xs.shape[0]
+    grid, in_specs = _grid_specs(m, n, d, tq, bn)
+    out = pl.pallas_call(
+        _count_kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, tq), lambda qi, bi: (0, qi)),
+        out_shape=jax.ShapeDtypeStruct((1, m), jnp.int32),
+        compiler_params=_compiler_params(),
+        interpret=interpret,
+    )(q, aq[None, :], r[None, :], thresh[None, :], xs,
+      alphas[None, :], half_norms[None, :])
+    return out[0]

@@ -1,0 +1,55 @@
+"""Serving launcher: stand up an SNNServer over a dataset and drive batched
+radius queries through the dynamic batcher (the paper's end-to-end setting).
+
+Usage:
+  python -m repro.launch.serve --n 20000 --d 16 --requests 500 --radius 0.6
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from ..configs.snn_default import SNNConfig
+from ..data.pipeline import make_uniform
+from ..serving.server import Request, SNNServer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20000)
+    ap.add_argument("--d", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=500)
+    ap.add_argument("--radius", type=float, default=0.6)
+    ap.add_argument("--metric", default="euclidean")
+    args = ap.parse_args(argv)
+
+    data = make_uniform(args.n, args.d, seed=0)
+    cfg = SNNConfig(metric=args.metric)
+    t0 = time.time()
+    server = SNNServer(data, cfg)
+    print(f"indexed {args.n} x {args.d} in {time.time()-t0:.3f}s")
+    server.start()
+    rng = np.random.default_rng(1)
+    queries = rng.random((args.requests, args.d)).astype(np.float32)
+    t0 = time.time()
+    for i in range(args.requests):
+        server.submit(Request(query=queries[i], radius=args.radius, id=i))
+    lats, sizes = [], []
+    for i in range(args.requests):
+        r = server.result(i)
+        lats.append(r.latency_ms)
+        sizes.append(len(r.indices))
+    server.stop()
+    wall = time.time() - t0
+    lats = np.asarray(lats)
+    print(f"{args.requests} requests in {wall:.3f}s "
+          f"({args.requests/wall:.0f} qps)")
+    print(f"latency ms: p50={np.percentile(lats,50):.2f} "
+          f"p99={np.percentile(lats,99):.2f}")
+    print(f"mean return size: {np.mean(sizes):.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,686 @@
+"""Step builders: per (arch x shape) produce the step fn, ShapeDtypeStruct
+input specs, PartitionSpecs, and analytic MODEL_FLOPS.
+
+This is the single source of truth consumed by the dry-run (lower+compile on
+the production mesh), the smoke tests (reduced configs on CPU), and the real
+training/serving launchers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from jax.tree_util import DictKey, SequenceKey
+
+from ..configs.registry import ArchSpec, get_arch
+from ..models import gnn as gnn_mod
+from ..models import recsys as rs
+from ..models.moe import capacity as moe_capacity
+from ..models.transformer import (TransformerConfig, decode_step, init_cache,
+                                  init_params as tf_init, loss_fn, prefill)
+from ..optim import adamw, clip_by_global_norm, partition_optimizer, sgd
+from ..optim.optimizers import apply_updates
+
+MOE_ARCHS = {"llama4-scout-17b-a16e", "qwen3-moe-235b-a22b"}
+
+
+@dataclasses.dataclass
+class StepDef:
+    name: str
+    fn: Callable
+    arg_specs: tuple          # pytree of ShapeDtypeStruct per positional arg
+    in_shardings: tuple       # matching pytree of PartitionSpec
+    out_shardings: Any        # or None (let XLA choose)
+    model_flops: float
+    donate_argnums: tuple = ()
+    init_args: Callable | None = None   # () -> concrete args (smoke/real runs)
+
+
+def _path_keys(path) -> list[str]:
+    out = []
+    for p in path:
+        if isinstance(p, DictKey):
+            out.append(str(p.key))
+        elif isinstance(p, SequenceKey):
+            out.append(str(p.idx))
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# LM family                                                                    #
+# --------------------------------------------------------------------------- #
+def lm_param_spec(path, leaf, dp) -> P:
+    """Megatron TP over 'model' + ZeRO-3/FSDP over dp for 2D+ matmul params."""
+    keys = _path_keys(path)
+    name = keys[-1]
+    ndim = len(leaf.shape)
+    # strip bookkeeping prefixes (optimizer state wraps the same tree)
+    if name in ("step",) or ndim == 0:
+        return P()
+    prefix = (None, None) if "layers" in keys else ()
+    core = ndim - len(prefix)
+    if name == "embed":
+        return P("model", dp)
+    if name == "lm_head":
+        return P(dp, "model")
+    if core == 1:   # norms, biases
+        return P(*(prefix + (None,)))
+    if name in ("wq", "wk", "wv", "w1", "w3", "router", "wq_b", "wkv_b"):
+        if name in ("wq_b", "wkv_b"):
+            return P(*(prefix + (None, "model")))
+        if core == 3:   # MoE expert stacks (E, d, f)
+            return P(*(prefix + ("model", dp, None)))
+        return P(*(prefix + (dp, "model")))
+    if name in ("wo", "w2"):
+        if core == 3:   # (E, f, d)
+            return P(*(prefix + ("model", None, dp)))
+        return P(*(prefix + ("model", dp)))
+    if name in ("wq_a", "wkv_a"):
+        return P(*(prefix + (dp, None)))
+    if name == "pos":
+        return P(None, None)
+    # default: replicate
+    return P(*(prefix + (None,) * core))
+
+
+def tree_specs(shapes_tree, spec_fn):
+    return jax.tree_util.tree_map_with_path(spec_fn, shapes_tree)
+
+
+def lm_model_flops(cfg: TransformerConfig, shape: dict) -> float:
+    """Analytic useful FLOPs per step: 6*N_active*T (+ attention term)."""
+    d, l = cfg.d_model, cfg.n_layers
+    h, hd, hkv = cfg.n_heads, cfg.head_dim, cfg.n_kv_heads
+    if cfg.attn == "mla":
+        m = cfg.mla
+        attn_p = d * m.q_lora + m.q_lora * h * (m.qk_nope + m.qk_rope) + \
+            d * (m.kv_lora + m.qk_rope) + m.kv_lora * h * (m.qk_nope + m.v_head) + \
+            h * m.v_head * d
+        a_dim = m.qk_nope + m.qk_rope
+    else:
+        attn_p = d * h * hd + 2 * d * hkv * hd + h * hd * d
+        a_dim = hd
+    if cfg.moe is not None:
+        e = cfg.moe
+        expert_p = 3 * d * e.d_ff
+        ffn_p = d * e.n_experts / 1e18 * 0 + e.top_k * expert_p + \
+            d * e.n_experts / max(d, 1) * 0 + (3 * d * e.d_ff * e.n_shared_experts)
+        ffn_p += d * e.n_experts  # router
+    else:
+        ffn_p = (3 if cfg.gated_ffn else 2) * d * cfg.d_ff
+    n_active = l * (attn_p + ffn_p) + d * cfg.vocab  # + lm_head
+    kind = shape["kind"]
+    s, b = shape["seq_len"], shape["global_batch"]
+    # attention score/value flops per layer (causal ~ S/2 avg context)
+    if kind == "decode":
+        t = b
+        ctx = s
+        att = l * 4 * h * a_dim * ctx * t
+        return 2 * n_active * t + att
+    t = b * s
+    ctx = s / 2
+    if cfg.layer_pattern != ("full",):
+        # 3/4 local (window) + 1/4 global
+        w = min(cfg.local_window, s)
+        ctx = 0.75 * min(w / 2, s / 2) + 0.25 * s / 2
+    att_fwd = l * 4 * h * a_dim * ctx * t
+    if kind == "train":
+        return 6 * n_active * t + 3 * att_fwd
+    return 2 * n_active * t + att_fwd  # prefill
+
+
+def make_lm_optimizer():
+    return adamw(lr=3e-4, weight_decay=0.1)
+
+
+def build_lm_step(spec: ArchSpec, shape_name: str, *, multi_pod: bool,
+                  reduced: bool, shape_override: dict | None = None,
+                  cfg_override: dict | None = None) -> StepDef:
+    cfg = spec.make_config(shape_name, reduced)
+    if cfg_override:
+        cfg = dataclasses.replace(cfg, **cfg_override)
+    shape = dict(spec.shapes[shape_name])
+    if shape_override:
+        shape.update(shape_override)
+    if reduced:
+        shape = {**shape, "seq_len": 32,
+                 "global_batch": 4 if shape["kind"] != "decode" else 4}
+        cfg = dataclasses.replace(cfg, max_seq=64)
+    kind = shape["kind"]
+    dp = ("pod", "data") if multi_pod else "data"
+    key = jax.random.PRNGKey(0)
+
+    params_shape = jax.eval_shape(lambda: tf_init(key, cfg))
+    pspec = tree_specs(params_shape, lambda p, l: lm_param_spec(p, l, dp))
+    flops = lm_model_flops(cfg, shape) if not reduced else 0.0
+    b, s = shape["global_batch"], shape["seq_len"]
+
+    if kind == "train":
+        opt = make_lm_optimizer()
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        ospec = tree_specs(opt_shape, lambda p, l: lm_param_spec(p, l, dp))
+        batch_spec = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+                      "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        bspec = {"tokens": P(dp, None), "labels": P(dp, None)}
+        # microbatch grad accumulation (perf log iters 3/8): MoE dispatch
+        # working sets scale with microbatch tokens -> deeper accumulation.
+        accum = 1 if reduced else (8 if cfg.moe is not None else 2)
+
+        def step(params, opt_state, batch):
+            if accum == 1:
+                loss, grads = jax.value_and_grad(
+                    lambda p: loss_fn(p, batch, cfg))(params)
+            else:
+                mb = jax.tree.map(
+                    lambda a: a.reshape((accum, a.shape[0] // accum) + a.shape[1:]),
+                    batch)
+
+                def micro(carry, mbatch):
+                    l, g = jax.value_and_grad(
+                        lambda p: loss_fn(p, mbatch, cfg))(params)
+                    g32 = jax.tree.map(lambda x: x.astype(jnp.float32), g)
+                    return (carry[0] + l,
+                            jax.tree.map(jnp.add, carry[1], g32)), None
+
+                init = (jnp.float32(0.0),
+                        jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                     params))
+                if cfg.unroll_scans:
+                    carry = init
+                    for i in range(accum):
+                        carry, _ = micro(carry, jax.tree.map(lambda a: a[i], mb))
+                else:
+                    carry, _ = jax.lax.scan(micro, init, mb)
+                loss, grads = carry[0] / accum, jax.tree.map(
+                    lambda g: g / accum, carry[1])
+            grads, gn = clip_by_global_norm(grads, 1.0)
+            upd, opt_state = opt.update(grads, opt_state, params)
+            params = apply_updates(params, upd)
+            return params, opt_state, {"loss": loss, "grad_norm": gn}
+
+        def init_args():
+            params = tf_init(key, cfg)
+            opt_state = opt.init(params)
+            rng = np.random.default_rng(0)
+            batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32),
+                     "labels": jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)}
+            return params, opt_state, batch
+
+        return StepDef(
+            name=f"{spec.arch_id}:{shape_name}:train", fn=step,
+            arg_specs=(params_shape, opt_shape, batch_spec),
+            in_shardings=(pspec, ospec, bspec),
+            out_shardings=(pspec, ospec, None),
+            model_flops=flops, donate_argnums=(0, 1), init_args=init_args)
+
+    if kind == "prefill":
+        tok_spec = jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+        def step(params, tokens):
+            return prefill(params, tokens, cfg)
+
+        def init_args():
+            params = tf_init(key, cfg)
+            rng = np.random.default_rng(0)
+            return params, jnp.asarray(rng.integers(0, cfg.vocab, (b, s)), jnp.int32)
+
+        return StepDef(
+            name=f"{spec.arch_id}:{shape_name}:prefill", fn=step,
+            arg_specs=(params_shape, tok_spec),
+            in_shardings=(pspec, P(dp, None)),
+            out_shardings=None, model_flops=flops, init_args=init_args)
+
+    # decode
+    cache_shape = jax.eval_shape(lambda: init_cache(cfg, b, s))
+    if shape_name == "long_500k":
+        seq_axes = ("data", "model") if not multi_pod else ("pod", "data", "model")
+        cspec = jax.tree.map(
+            lambda l: P(*((None, None, seq_axes) + (None,) * (len(l.shape) - 3))),
+            cache_shape)
+    else:
+        cspec = jax.tree.map(
+            lambda l: P(*((None, dp, "model") + (None,) * (len(l.shape) - 3))),
+            cache_shape)
+    tok_spec = jax.ShapeDtypeStruct((b,), jnp.int32)
+    pos_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    ndp = 32 if multi_pod else 16
+    tok_sharding = P(dp) if b % ndp == 0 else P(None)  # long_500k: batch 1
+
+    def step(params, cache, tokens, pos):
+        return decode_step(params, cache, tokens, pos, cfg)
+
+    def init_args():
+        params = tf_init(key, cfg)
+        cache = init_cache(cfg, b, s)
+        rng = np.random.default_rng(0)
+        return (params, cache,
+                jnp.asarray(rng.integers(0, cfg.vocab, (b,)), jnp.int32),
+                jnp.int32(s // 2))
+
+    return StepDef(
+        name=f"{spec.arch_id}:{shape_name}:decode", fn=step,
+        arg_specs=(params_shape, cache_shape, tok_spec, pos_spec),
+        in_shardings=(pspec, cspec, tok_sharding, P()),
+        out_shardings=(None, cspec),
+        model_flops=flops, donate_argnums=(1,), init_args=init_args)
+
+
+# --------------------------------------------------------------------------- #
+# GNN family                                                                   #
+# --------------------------------------------------------------------------- #
+def gnn_model_flops(cfg, shape) -> float:
+    kind = shape["kind"]
+    h, dh, c = cfg.n_heads, cfg.d_hidden, cfg.n_classes
+    if kind == "gnn_minibatch":
+        b = shape["batch_nodes"]
+        f1, f2 = shape["fanout"]
+        n_eff = b * (1 + f1 + f1 * f2)
+        e_eff = b * f1 + b * f1 * f2 + b * (f1 + 1)
+        d_in = shape["d_feat"]
+    elif kind == "gnn_batched":
+        n_eff = shape["batch"] * shape["n_nodes"]
+        e_eff = shape["batch"] * shape["n_edges"]
+        d_in = shape["d_feat"]
+    else:
+        n_eff, e_eff, d_in = shape["n_nodes"], shape["n_edges"], shape["d_feat"]
+    l1 = 2 * n_eff * d_in * h * dh + e_eff * h * (4 * dh + 8)
+    l2 = 2 * n_eff * (h * dh) * c + e_eff * (4 * c + 8)
+    return 3 * (l1 + l2)  # train = fwd + bwd(2x)
+
+
+def build_gnn_step(spec: ArchSpec, shape_name: str, *, multi_pod: bool,
+                   reduced: bool, shape_override: dict | None = None) -> StepDef:
+    cfg = spec.make_config(shape_name, reduced)
+    shape = dict(spec.shapes[shape_name])
+    if shape_override:
+        shape.update(shape_override)
+    kind = shape["kind"]
+    dp = ("pod", "data") if multi_pod else "data"
+    if reduced:
+        scale = {"gnn_full": {"n_nodes": 64, "n_edges": 256},
+                 "gnn_minibatch": {"batch_nodes": 8, "fanout": (3, 2)},
+                 "gnn_batched": {"batch": 4, "n_nodes": 10, "n_edges": 20}}
+        shape.update(scale[kind])
+        shape["d_feat"] = cfg.d_in
+        shape["n_classes"] = cfg.n_classes
+    key = jax.random.PRNGKey(0)
+    params_shape = jax.eval_shape(lambda: gnn_mod.init_params(key, cfg))
+    pspec = jax.tree.map(lambda l: P(*(None,) * len(l.shape)), params_shape)
+    opt = adamw(lr=5e-3)
+    opt_shape = jax.eval_shape(opt.init, params_shape)
+    ospec = jax.tree.map(lambda l: P(*(None,) * len(l.shape)), opt_shape)
+    flops = gnn_model_flops(cfg, shape) if not reduced else 0.0
+
+    def make_train(loss_f):
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(lambda p: loss_f(p, batch, cfg))(params)
+            grads, gn = clip_by_global_norm(grads, 1.0)
+            upd, opt_state = opt.update(grads, opt_state, params)
+            return apply_updates(params, upd), opt_state, {"loss": loss, "grad_norm": gn}
+        return step
+
+    rng = np.random.default_rng(0)
+    if kind == "gnn_full":
+        n, e, d = shape["n_nodes"], shape["n_edges"], shape["d_feat"]
+        etot = e + n  # + self loops
+        # pad nodes/edges to dp-divisible sizes for sharded arrays
+        npad = -(-n // 512) * 512
+        epad = -(-etot // 512) * 512
+        batch_spec = {
+            "x": jax.ShapeDtypeStruct((npad, d), jnp.float32),
+            "src": jax.ShapeDtypeStruct((epad,), jnp.int32),
+            "dst": jax.ShapeDtypeStruct((epad,), jnp.int32),
+            "edge_mask": jax.ShapeDtypeStruct((epad,), jnp.bool_),
+            "labels": jax.ShapeDtypeStruct((npad,), jnp.int32),
+            "mask": jax.ShapeDtypeStruct((npad,), jnp.bool_),
+        }
+        bspec = {"x": P(None, None), "src": P(dp), "dst": P(dp),
+                 "edge_mask": P(dp), "labels": P(None), "mask": P(None)}
+        step = make_train(gnn_mod.loss_full)
+
+        def init_args():
+            params = gnn_mod.init_params(key, cfg)
+            src = rng.integers(0, n, etot).astype(np.int32)
+            dst = rng.integers(0, n, etot).astype(np.int32)
+            src[e:etot] = np.arange(n); dst[e:etot] = np.arange(n)
+            batch = {
+                "x": jnp.asarray(np.pad(rng.normal(size=(n, d)).astype(np.float32),
+                                        ((0, npad - n), (0, 0)))),
+                "src": jnp.asarray(np.pad(src, (0, epad - etot))),
+                "dst": jnp.asarray(np.pad(dst, (0, epad - etot))),
+                "edge_mask": jnp.asarray(np.arange(epad) < etot),
+                "labels": jnp.asarray(np.pad(
+                    rng.integers(0, cfg.n_classes, n).astype(np.int32),
+                    (0, npad - n))),
+                "mask": jnp.asarray(np.arange(npad) < n),
+            }
+            return params, opt.init(params), batch
+
+    elif kind == "gnn_minibatch":
+        b_, (f1, f2), d = shape["batch_nodes"], shape["fanout"], shape["d_feat"]
+        batch_spec = {
+            "x0": jax.ShapeDtypeStruct((b_, d), jnp.float32),
+            "x1": jax.ShapeDtypeStruct((b_, f1, d), jnp.float32),
+            "x2": jax.ShapeDtypeStruct((b_, f1, f2, d), jnp.float32),
+            "labels": jax.ShapeDtypeStruct((b_,), jnp.int32),
+        }
+        bspec = {"x0": P(dp, None), "x1": P(dp, None, None),
+                 "x2": P(dp, None, None, None), "labels": P(dp)}
+        step = make_train(gnn_mod.loss_minibatch)
+
+        def init_args():
+            params = gnn_mod.init_params(key, cfg)
+            batch = {
+                "x0": jnp.asarray(rng.normal(size=(b_, d)).astype(np.float32)),
+                "x1": jnp.asarray(rng.normal(size=(b_, f1, d)).astype(np.float32)),
+                "x2": jnp.asarray(rng.normal(size=(b_, f1, f2, d)).astype(np.float32)),
+                "labels": jnp.asarray(rng.integers(0, cfg.n_classes, b_), jnp.int32),
+            }
+            return params, opt.init(params), batch
+
+    else:  # gnn_batched (molecule)
+        g, n, e, d = shape["batch"], shape["n_nodes"], shape["n_edges"], shape["d_feat"]
+        batch_spec = {
+            "x": jax.ShapeDtypeStruct((g, n, d), jnp.float32),
+            "src": jax.ShapeDtypeStruct((g, e), jnp.int32),
+            "dst": jax.ShapeDtypeStruct((g, e), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((g,), jnp.int32),
+        }
+        bspec = {"x": P(dp, None, None), "src": P(dp, None), "dst": P(dp, None),
+                 "labels": P(dp)}
+        step = make_train(gnn_mod.loss_batched_graphs)
+
+        def init_args():
+            params = gnn_mod.init_params(key, cfg)
+            batch = {
+                "x": jnp.asarray(rng.normal(size=(g, n, d)).astype(np.float32)),
+                "src": jnp.asarray(rng.integers(0, n, (g, e)), jnp.int32),
+                "dst": jnp.asarray(rng.integers(0, n, (g, e)), jnp.int32),
+                "labels": jnp.asarray(rng.integers(0, cfg.n_classes, g), jnp.int32),
+            }
+            return params, opt.init(params), batch
+
+    return StepDef(
+        name=f"{spec.arch_id}:{shape_name}:train", fn=step,
+        arg_specs=(params_shape, opt_shape, batch_spec),
+        in_shardings=(pspec, ospec, bspec),
+        out_shardings=(pspec, ospec, None),
+        model_flops=flops, donate_argnums=(0, 1), init_args=init_args)
+
+
+# --------------------------------------------------------------------------- #
+# RecSys family                                                                #
+# --------------------------------------------------------------------------- #
+def rs_param_spec(path, leaf) -> P:
+    keys = _path_keys(path)
+    name = keys[-1]
+    if len(leaf.shape) == 0 or name == "step":
+        return P()
+    if name in ("table", "items") or (name == "embed" and "layers" not in keys):
+        return P("model", None)
+    if name == "lm_head":
+        return P(None, "model")
+    if name == "w" and len(leaf.shape) == 2 and max(leaf.shape) >= 256:
+        # column-sharded MLP stacks.  (Megatron row/col pairing was tried and
+        # REFUTED for the 1M-candidate inference shape: the per-pair partial
+        # -sum AR of (1M, width) activations exceeds the per-layer reshard —
+        # perf log iter 12.)
+        if leaf.shape[1] % 16 == 0 and leaf.shape[1] >= 256:
+            return P(None, "model")
+        if leaf.shape[0] % 16 == 0 and leaf.shape[0] >= 256:
+            return P("model", None)
+    return P(*(None,) * len(leaf.shape))
+
+
+def _mlp_flops(sizes):
+    return sum(2 * a * b for a, b in zip(sizes[:-1], sizes[1:]))
+
+
+def rs_model_flops(arch_id, cfg, shape) -> float:
+    kind = shape["kind"]
+    b = shape.get("batch", 1)
+    if arch_id == "dlrm-mlperf":
+        n_int = (cfg.n_sparse + 1) * cfg.n_sparse // 2
+        per = _mlp_flops((cfg.n_dense,) + cfg.bot_mlp) + \
+            (cfg.n_sparse + 1) ** 2 * cfg.embed_dim * 2 + \
+            _mlp_flops((n_int + cfg.bot_mlp[-1],) + cfg.top_mlp)
+    elif arch_id == "wide-deep":
+        n_f = len(cfg.vocab_sizes)
+        per = _mlp_flops((n_f * cfg.embed_dim + cfg.n_dense,) + cfg.deep_mlp + (1,))
+    elif arch_id == "mind":
+        d, s, k = cfg.embed_dim, cfg.hist_len, cfg.n_interests
+        per = 2 * s * d * d + cfg.capsule_iters * (4 * s * k * d)
+        if kind == "rs_train":
+            per += 2 * k * d * (1 + cfg.n_neg)
+    else:  # bert4rec
+        d, s = cfg.embed_dim, cfg.seq_len
+        per_layer = 2 * s * (4 * d * d + 3 * d * 4 * d) + 4 * s * s * d
+        per = cfg.n_blocks * per_layer
+        if kind == "rs_train":
+            per += 2 * s * d * (1 + cfg.n_neg)
+    if kind == "rs_retrieval":
+        c = shape["n_candidates"]
+        d = cfg.embed_dim if hasattr(cfg, "embed_dim") else 64
+        if arch_id in ("mind", "bert4rec"):
+            per += 2 * c * d * (cfg.n_interests if arch_id == "mind" else 1)
+        else:
+            per = per * c  # full ranking forward per candidate
+        return per * b
+    mult = 3 if kind == "rs_train" else 1
+    return per * b * mult
+
+
+def _rs_init_model(arch_id, cfg, key):
+    if arch_id == "dlrm-mlperf":
+        return rs.dlrm_init(key, cfg), rs.dlrm_loss
+    if arch_id == "wide-deep":
+        return rs.widedeep_init(key, cfg), rs.widedeep_loss
+    if arch_id == "mind":
+        return rs.mind_init(key, cfg), rs.mind_loss
+    if arch_id == "bert4rec":
+        return rs.bert4rec_init(key, cfg), rs.bert4rec_loss
+    raise KeyError(arch_id)
+
+
+def _rs_batch(arch_id, cfg, b, rng, kind):
+    """Concrete batch + specs + shardings for ranking/sequential models."""
+    if arch_id in ("dlrm-mlperf", "wide-deep"):
+        nf = cfg.n_sparse if arch_id == "dlrm-mlperf" else len(cfg.vocab_sizes)
+        vmax = min(cfg.vocab_sizes)
+        batch = {
+            "dense": rng.normal(size=(b, cfg.n_dense)).astype(np.float32),
+            "sparse": rng.integers(0, vmax, (b, nf)).astype(np.int32),
+            "labels": rng.integers(0, 2, b).astype(np.float32),
+        }
+    elif arch_id == "mind":
+        batch = {
+            "hist": rng.integers(-1, cfg.n_items, (b, cfg.hist_len)).astype(np.int32),
+            "target": rng.integers(0, cfg.n_items, b).astype(np.int32),
+            "negatives": rng.integers(0, cfg.n_items, cfg.n_neg).astype(np.int32),
+        }
+    else:  # bert4rec
+        lab = rng.integers(0, cfg.n_items, (b, cfg.seq_len)).astype(np.int32)
+        masked = rng.random((b, cfg.seq_len)) < 0.2
+        batch = {
+            "seq": np.where(masked, cfg.n_items,
+                            rng.integers(0, cfg.n_items, (b, cfg.seq_len))).astype(np.int32),
+            "labels": np.where(masked, lab, -1).astype(np.int32),
+            "negatives": rng.integers(0, cfg.n_items, cfg.n_neg).astype(np.int32),
+        }
+    if kind == "rs_serve":
+        batch.pop("labels", None)
+        batch.pop("negatives", None)
+        batch.pop("target", None)
+    return batch
+
+
+def build_rs_step(spec: ArchSpec, shape_name: str, *, multi_pod: bool,
+                  reduced: bool, shape_override: dict | None = None) -> StepDef:
+    arch_id = spec.arch_id
+    cfg = spec.make_config(shape_name, reduced)
+    shape = dict(spec.shapes[shape_name])
+    if shape_override:
+        shape.update(shape_override)
+    if reduced:
+        shape = {**shape, "batch": 8, "n_candidates": 128}
+    kind = shape["kind"]
+    dp = ("pod", "data") if multi_pod else "data"
+    key = jax.random.PRNGKey(0)
+    rng = np.random.default_rng(0)
+    params_shape = jax.eval_shape(
+        lambda: _rs_init_model(arch_id, cfg, key)[0])
+    loss_f = {"dlrm-mlperf": rs.dlrm_loss, "wide-deep": rs.widedeep_loss,
+              "mind": rs.mind_loss, "bert4rec": rs.bert4rec_loss}[arch_id]
+    fwd_f = {"dlrm-mlperf": lambda p, b_, c: rs.dlrm_forward(p, b_["dense"], b_["sparse"], c),
+             "wide-deep": lambda p, b_, c: rs.widedeep_forward(p, b_["dense"], b_["sparse"], c),
+             "mind": lambda p, b_, c: rs.mind_user_tower(p, b_["hist"], c),
+             "bert4rec": lambda p, b_, c: rs.bert4rec_user_repr(p, b_["seq"], c)}[arch_id]
+    pspec = tree_specs(params_shape, lambda p, l: rs_param_spec(p, l))
+    flops = rs_model_flops(arch_id, cfg, shape) if not reduced else 0.0
+    b = shape.get("batch", 1)
+
+    def batch_sharding(batch):
+        out = {}
+        for k, v in batch.items():
+            if k == "negatives":
+                out[k] = P(None)
+            elif v.ndim == 1:
+                out[k] = P(dp)
+            else:
+                out[k] = P(*((dp,) + (None,) * (v.ndim - 1)))
+        return out
+
+    if kind == "rs_train":
+        # MLPerf recipe: row-wise SGD on embedding tables, AdamW on dense.
+        def route(path):
+            keys = _path_keys(path)
+            return "rows" if any(k in ("table", "items", "embed") and "layers" not in keys
+                                 for k in keys) else "dense"
+        opt = partition_optimizer(route, {"rows": sgd(lr=1e-2),
+                                          "dense": adamw(lr=1e-3)})
+        opt_shape = jax.eval_shape(opt.init, params_shape)
+        ospec = tree_specs(opt_shape, lambda p, l: rs_param_spec(p, l))
+        np_batch = _rs_batch(arch_id, cfg, b, rng, kind)
+        batch_spec = jax.tree.map(
+            lambda v: jax.ShapeDtypeStruct(v.shape, v.dtype), np_batch)
+        bspec = batch_sharding(np_batch)
+
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(lambda p: loss_f(p, batch, cfg))(params)
+            upd, opt_state = opt.update(grads, opt_state, params)
+            return apply_updates(params, upd), opt_state, {"loss": loss}
+
+        def init_args():
+            p0, _ = _rs_init_model(arch_id, cfg, key)
+            return p0, opt.init(p0), jax.tree.map(jnp.asarray, np_batch)
+
+        return StepDef(
+            name=f"{arch_id}:{shape_name}:train", fn=step,
+            arg_specs=(params_shape, opt_shape, batch_spec),
+            in_shardings=(pspec, ospec, bspec),
+            out_shardings=(pspec, ospec, None),
+            model_flops=flops, donate_argnums=(0, 1), init_args=init_args)
+
+    if kind == "rs_serve":
+        np_batch = _rs_batch(arch_id, cfg, b, rng, kind)
+        batch_spec = jax.tree.map(
+            lambda v: jax.ShapeDtypeStruct(v.shape, v.dtype), np_batch)
+        bspec = batch_sharding(np_batch)
+
+        def step(params, batch):
+            return fwd_f(params, batch, cfg)
+
+        def init_args():
+            p0, _ = _rs_init_model(arch_id, cfg, key)
+            return p0, jax.tree.map(jnp.asarray, np_batch)
+
+        return StepDef(
+            name=f"{arch_id}:{shape_name}:serve", fn=step,
+            arg_specs=(params_shape, batch_spec),
+            in_shardings=(pspec, bspec), out_shardings=None,
+            model_flops=flops, init_args=init_args)
+
+    # rs_retrieval: one query scored against n_candidates
+    c = shape["n_candidates"]
+    if arch_id in ("mind", "bert4rec"):
+        qfield = "hist" if arch_id == "mind" else "seq"
+        qlen = cfg.hist_len if arch_id == "mind" else cfg.seq_len
+        q_spec = {qfield: jax.ShapeDtypeStruct((b, qlen), jnp.int32)}
+        qshard = {qfield: P(None, None)}
+
+        def step(params, query):
+            table = params["items"] if arch_id == "mind" else params["embed"]
+            cand = jax.lax.slice_in_dim(table, 0, c, axis=0)
+            if arch_id == "mind":
+                scores = rs.mind_score_candidates(params, query[qfield], cand, cfg)
+            else:
+                u = rs.bert4rec_user_repr(params, query[qfield], cfg)
+                scores = u @ cand.T
+            return jax.lax.top_k(scores, 100)
+
+        def init_args():
+            p0, _ = _rs_init_model(arch_id, cfg, key)
+            q = {qfield: jnp.asarray(
+                rng.integers(0, cfg.n_items, (b, qlen)), jnp.int32)}
+            return p0, q
+    else:
+        # ranking archs: fixed user, vary one item field over C candidates
+        nf = cfg.n_sparse if arch_id == "dlrm-mlperf" else len(cfg.vocab_sizes)
+        vmax = min(cfg.vocab_sizes)
+        q_spec = {"dense": jax.ShapeDtypeStruct((1, cfg.n_dense), jnp.float32),
+                  "sparse": jax.ShapeDtypeStruct((1, nf), jnp.int32),
+                  "cand_ids": jax.ShapeDtypeStruct((c,), jnp.int32)}
+        qshard = {"dense": P(None, None), "sparse": P(None, None),
+                  "cand_ids": P(dp)}
+
+        def step(params, query):
+            # bf16 inference for offline candidate scoring (perf log iter 9):
+            # halves both the MLP collective traffic and the HBM term.
+            params = jax.tree.map(
+                lambda a: a.astype(jnp.bfloat16)
+                if a.dtype == jnp.float32 else a, params)
+            dense = jnp.broadcast_to(query["dense"],
+                                     (c, cfg.n_dense)).astype(jnp.bfloat16)
+            sparse = jnp.broadcast_to(query["sparse"], (c, nf))
+            sparse = sparse.at[:, 0].set(query["cand_ids"])
+            if arch_id == "dlrm-mlperf":
+                scores = rs.dlrm_forward(params, dense, sparse, cfg)
+            else:
+                scores = rs.widedeep_forward(params, dense, sparse, cfg)
+            return jax.lax.top_k(scores.astype(jnp.float32), 100)
+
+        def init_args():
+            p0, _ = _rs_init_model(arch_id, cfg, key)
+            q = {"dense": jnp.asarray(rng.normal(size=(1, cfg.n_dense)), jnp.float32),
+                 "sparse": jnp.asarray(rng.integers(0, vmax, (1, nf)), jnp.int32),
+                 "cand_ids": jnp.asarray(rng.integers(0, vmax, (c,)), jnp.int32)}
+            return p0, q
+
+    return StepDef(
+        name=f"{arch_id}:{shape_name}:retrieval", fn=step,
+        arg_specs=(params_shape, q_spec),
+        in_shardings=(pspec, qshard), out_shardings=None,
+        model_flops=flops, init_args=init_args)
+
+
+# --------------------------------------------------------------------------- #
+# Entry                                                                        #
+# --------------------------------------------------------------------------- #
+def build_step(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+               reduced: bool = False, shape_override: dict | None = None,
+               cfg_override: dict | None = None) -> StepDef:
+    spec = get_arch(arch_id)
+    if shape_name in spec.skip_shapes:
+        raise ValueError(f"{arch_id}:{shape_name} skipped: "
+                         f"{spec.skip_shapes[shape_name]}")
+    builder = {"lm": build_lm_step, "gnn": build_gnn_step,
+               "recsys": build_rs_step}[spec.family]
+    kw = {}
+    if spec.family == "lm":
+        kw["cfg_override"] = cfg_override
+    return builder(spec, shape_name, multi_pod=multi_pod, reduced=reduced,
+                   shape_override=shape_override, **kw)

@@ -1,0 +1,285 @@
+"""Attention variants for the assigned LM architectures.
+
+* GQA (nemotron-4, internlm2, llama4, qwen3-moe) — grouped KV heads.
+* MLA (minicpm3) — DeepSeek-V2-style multi-head latent attention with a
+  compressed KV cache and the absorbed-matmul decode path.
+* Chunked (online, memory-bound-friendly) softmax for long prefill: queries are
+  processed in chunks under ``lax.scan`` + ``jax.checkpoint`` so the (Sq, Skv)
+  score matrix never materializes globally.
+* Local chunked attention (llama4 iRoPE): tokens attend within fixed chunks;
+  every ``global_every``-th layer is full-attention with no RoPE (NoPE).
+
+All functions are pure; params are plain dicts of arrays.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain
+from .layers import apply_rope, rms_norm, uniform_init
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------- #
+# Params                                                                       #
+# --------------------------------------------------------------------------- #
+def gqa_params(key, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int,
+               dtype=jnp.float32):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": uniform_init(kq, (d_model, n_heads * head_dim), dtype=dtype),
+        "wk": uniform_init(kk, (d_model, n_kv_heads * head_dim), dtype=dtype),
+        "wv": uniform_init(kv, (d_model, n_kv_heads * head_dim), dtype=dtype),
+        "wo": uniform_init(ko, (n_heads * head_dim, d_model), dtype=dtype),
+    }
+
+
+def mla_params(key, d_model: int, n_heads: int, q_lora: int, kv_lora: int,
+               qk_nope: int, qk_rope: int, v_head: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": uniform_init(ks[0], (d_model, q_lora), dtype=dtype),
+        "q_norm": jnp.ones((q_lora,), dtype),
+        "wq_b": uniform_init(ks[1], (q_lora, n_heads * (qk_nope + qk_rope)), dtype=dtype),
+        "wkv_a": uniform_init(ks[2], (d_model, kv_lora + qk_rope), dtype=dtype),
+        "kv_norm": jnp.ones((kv_lora,), dtype),
+        "wkv_b": uniform_init(ks[3], (kv_lora, n_heads * (qk_nope + v_head)), dtype=dtype),
+        "wo": uniform_init(ks[4], (n_heads * v_head, d_model), dtype=dtype),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# Softmax attention cores                                                      #
+# --------------------------------------------------------------------------- #
+def _sdpa(q, k, v, mask, scale):
+    """q: (B,Sq,H,D), k/v: (B,Skv,Hkv,D[v]); canonical bhqs layout.
+
+    GQA KV heads are repeated to H: GSPMD re-shards the resulting 4D tensors
+    (head dim over 'model') with a clean all-to-all, unlike grouped 5D/6D
+    layouts which trigger involuntary full rematerialization (see perf log
+    iter 1).  mask: broadcastable to (B, H, Sq, Skv).
+    """
+    b, sq, h, dd = q.shape
+    hkv = k.shape[2]
+    if h != hkv:
+        k = jnp.repeat(k, h // hkv, axis=2)
+        v = jnp.repeat(v, h // hkv, axis=2)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k) * scale
+    scores = constrain(scores, "attn_scores")
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqs,bshv->bqhv", w, v)
+    return out
+
+
+def full_attention(q, k, v, *, causal: bool, scale: float, chunk_q: int | None = None,
+                   q_offset: int = 0, unroll: bool = False):
+    """Softmax attention; optional query chunking for O(chunk*Skv) memory.
+
+    q_offset: absolute position of q[0] relative to k[0] (for chunk scans).
+    unroll: python-loop the chunk scan (dry-run flop accounting).
+    """
+    b, sq, h, _ = q.shape
+    skv = k.shape[1]
+
+    def mask_for(qpos):
+        if not causal:
+            return jnp.ones((1, 1, 1, skv), bool)
+        kpos = jnp.arange(skv)[None, :]
+        return (qpos[:, None] >= kpos)[None, None, :, :]
+
+    if chunk_q is None or chunk_q >= sq:
+        return _sdpa(q, k, v, mask_for(q_offset + jnp.arange(sq)), scale)
+
+    assert sq % chunk_q == 0, (sq, chunk_q)
+    qc = q.reshape(b, sq // chunk_q, chunk_q, h, q.shape[-1]).transpose(1, 0, 2, 3, 4)
+
+    @jax.checkpoint
+    def body(carry, args):
+        i, qi = args
+        qpos = q_offset + i * chunk_q + jnp.arange(chunk_q)
+        return carry, _sdpa(qi, k, v, mask_for(qpos), scale)
+
+    n_ch = sq // chunk_q
+    if unroll:
+        out = jnp.stack([body((), (jnp.int32(i), qc[i]))[1] for i in range(n_ch)])
+    else:
+        _, out = jax.lax.scan(body, (), (jnp.arange(n_ch), qc))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, v.shape[-1])
+
+
+def local_chunked_attention(q, k, v, *, window: int, scale: float,
+                            unroll: bool = False):
+    """llama4-style chunked-local attention: attend causally within chunks of
+    ``window`` tokens (no cross-chunk attention). Sq == Skv required.
+
+    Chunks are processed under a (checkpointed) scan so only one chunk's
+    (window x window) score matrix is live (perf log iter 6, hypothesis 11).
+    """
+    b, s, h, d = q.shape
+    assert s % window == 0, (s, window)
+    hkv = k.shape[2]
+    if h != hkv:
+        k = jnp.repeat(k, h // hkv, axis=2)
+        v = jnp.repeat(v, h // hkv, axis=2)
+    nc = s // window
+    qc = q.reshape(b, nc, window, h, d).transpose(1, 0, 2, 3, 4)
+    kc = k.reshape(b, nc, window, h, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nc, window, h, v.shape[-1]).transpose(1, 0, 2, 3, 4)
+    pos = jnp.arange(window)
+    mask = (pos[:, None] >= pos[None, :])[None, None, :, :]
+
+    @jax.checkpoint
+    def body(carry, args):
+        qi, ki, vi = args
+        return carry, _sdpa(qi, ki, vi, mask, scale)
+
+    if unroll or nc == 1:
+        out = jnp.stack([body((), (qc[i], kc[i], vc[i]))[1]
+                         for i in range(nc)])
+    else:
+        _, out = jax.lax.scan(body, (), (qc, kc, vc))
+    return out.transpose(1, 0, 2, 3, 4).reshape(b, s, h, v.shape[-1])
+
+
+# --------------------------------------------------------------------------- #
+# GQA block (train/prefill + decode)                                          #
+# --------------------------------------------------------------------------- #
+def gqa_forward(p, x, cos, sin, positions, *, n_heads, n_kv_heads, head_dim,
+                causal=True, chunk_q=None, local_window=None, use_rope=True,
+                unroll=False):
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, n_heads, head_dim)
+    k = (x @ p["wk"]).reshape(b, s, n_kv_heads, head_dim)
+    v = (x @ p["wv"]).reshape(b, s, n_kv_heads, head_dim)
+    if use_rope:
+        q = apply_rope(q, positions, cos, sin)
+        k = apply_rope(k, positions, cos, sin)
+    q = constrain(q, "act_bthd")
+    scale = 1.0 / jnp.sqrt(head_dim).astype(x.dtype)
+    if local_window is not None and local_window < s:
+        out = local_chunked_attention(q, k, v, window=local_window,
+                                      scale=scale, unroll=unroll)
+    else:
+        # window >= sequence: chunked-local degenerates to full causal
+        out = full_attention(q, k, v, causal=causal, scale=scale, chunk_q=chunk_q,
+                             unroll=unroll)
+    return out.reshape(b, s, n_heads * head_dim) @ p["wo"], (k, v)
+
+
+def gqa_decode(p, x, cache_k, cache_v, pos, cos, sin, *, n_heads, n_kv_heads,
+               head_dim, local_window=None, use_rope=True):
+    """One-token decode. x: (B, d); cache: (B, Smax, Hkv, D); pos: scalar int.
+
+    Returns (out (B, d), new_cache_k, new_cache_v).
+    """
+    b = x.shape[0]
+    q = (x @ p["wq"]).reshape(b, 1, n_heads, head_dim)
+    k = (x @ p["wk"]).reshape(b, 1, n_kv_heads, head_dim)
+    v = (x @ p["wv"]).reshape(b, 1, n_kv_heads, head_dim)
+    posb = jnp.full((b, 1), pos, jnp.int32)
+    if use_rope:
+        q = apply_rope(q, posb, cos, sin)
+        k = apply_rope(k, posb, cos, sin)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, 1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, 1)
+    smax = cache_k.shape[1]
+    kpos = jnp.arange(smax)
+    if local_window is not None:
+        # attend only within the current chunk [pos - pos%window, pos]
+        chunk_start = pos - pos % local_window
+        valid = (kpos >= chunk_start) & (kpos <= pos)
+    else:
+        valid = kpos <= pos
+    scale = 1.0 / jnp.sqrt(head_dim).astype(x.dtype)
+    # grouped einsum (NO kv-head repeat): the repeat would materialize a
+    # (B, Smax, H, D) tensor and lose the cache's seq sharding (perf log
+    # iter 6, hypothesis 12); with Sq == 1 the grouped layout reshards fine.
+    g = n_heads // n_kv_heads
+    qg = q.reshape(b, 1, n_kv_heads, g, head_dim)
+    ck = cache_k.astype(q.dtype)
+    cv = cache_v.astype(q.dtype)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, ck) * scale
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskv->bqkgv", w, cv).reshape(b, 1, n_heads,
+                                                         head_dim)
+    return out.reshape(b, n_heads * head_dim) @ p["wo"], cache_k, cache_v
+
+
+# --------------------------------------------------------------------------- #
+# MLA block (train/prefill + absorbed decode)                                  #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class MLADims:
+    n_heads: int
+    q_lora: int
+    kv_lora: int
+    qk_nope: int
+    qk_rope: int
+    v_head: int
+
+
+def _mla_qkv(p, x, cos, sin, positions, md: MLADims):
+    b, s, _ = x.shape
+    h, dn, dr, dv = md.n_heads, md.qk_nope, md.qk_rope, md.v_head
+    q = rms_norm(x @ p["wq_a"], p["q_norm"]) @ p["wq_b"]
+    q = q.reshape(b, s, h, dn + dr)
+    q_nope, q_pe = q[..., :dn], q[..., dn:]
+    q_pe = apply_rope(q_pe, positions, cos, sin)
+    kv_a = x @ p["wkv_a"]
+    c_kv = rms_norm(kv_a[..., : md.kv_lora], p["kv_norm"])  # (b, s, r)
+    k_pe = apply_rope(kv_a[..., md.kv_lora:][:, :, None, :], positions, cos, sin)
+    return q_nope, q_pe, c_kv, k_pe[:, :, 0, :]
+
+
+def mla_forward(p, x, cos, sin, positions, md: MLADims, *, causal=True,
+                chunk_q=None, unroll=False):
+    b, s, _ = x.shape
+    h, dn, dr, dv = md.n_heads, md.qk_nope, md.qk_rope, md.v_head
+    q_nope, q_pe, c_kv, k_pe = _mla_qkv(p, x, cos, sin, positions, md)
+    kv = (c_kv @ p["wkv_b"]).reshape(b, s, h, dn + dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    # assemble full q/k with shared rope part broadcast over heads
+    q = jnp.concatenate([q_nope, q_pe], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe[:, :, None, :], (b, s, h, dr))], -1)
+    scale = 1.0 / jnp.sqrt(dn + dr).astype(x.dtype)
+    out = full_attention(q, k, v, causal=causal, scale=scale, chunk_q=chunk_q,
+                         unroll=unroll)
+    return out.reshape(b, s, h * dv) @ p["wo"], (c_kv, k_pe)
+
+
+def mla_decode(p, x, cache_ckv, cache_kpe, pos, cos, sin, md: MLADims):
+    """Absorbed-matmul decode: scores/out computed directly in latent space.
+
+    cache_ckv: (B, Smax, r_kv); cache_kpe: (B, Smax, dr).
+    """
+    b = x.shape[0]
+    h, dn, dr, dv, r = md.n_heads, md.qk_nope, md.qk_rope, md.v_head, md.kv_lora
+    posb = jnp.full((b, 1), pos, jnp.int32)
+    q_nope, q_pe, c_kv_new, k_pe_new = _mla_qkv(
+        p, x[:, None, :], cos, sin, posb, md)
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, c_kv_new.astype(cache_ckv.dtype), pos, 1)
+    cache_kpe = jax.lax.dynamic_update_slice_in_dim(
+        cache_kpe, k_pe_new.astype(cache_kpe.dtype), pos, 1)
+    wkv_b = p["wkv_b"].reshape(r, h, dn + dv)
+    w_uk, w_uv = wkv_b[..., :dn], wkv_b[..., dn:]
+    # absorb W_uk into q:  (b,1,h,dn) x (r,h,dn) -> (b,h,r)
+    q_lat = jnp.einsum("bqhd,rhd->bhr", q_nope, w_uk)
+    ckv = cache_ckv.astype(x.dtype)
+    kpe = cache_kpe.astype(x.dtype)
+    scores = jnp.einsum("bhr,bsr->bhs", q_lat, ckv) + \
+        jnp.einsum("bqhd,bsd->bhs", q_pe, kpe)
+    scale = 1.0 / jnp.sqrt(dn + dr).astype(x.dtype)
+    mask = (jnp.arange(ckv.shape[1]) <= pos)[None, None, :]
+    scores = jnp.where(mask, scores * scale, NEG_INF)
+    w = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhs,bsr->bhr", w, ckv)
+    out = jnp.einsum("bhr,rhv->bhv", o_lat, w_uv).reshape(b, h * dv)
+    return out @ p["wo"], cache_ckv, cache_kpe

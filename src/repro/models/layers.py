@@ -1,0 +1,76 @@
+"""Common neural-net building blocks (pure functions over param pytrees)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def uniform_init(key, shape, scale=None, dtype=jnp.float32):
+    """LeCun-ish uniform init; scale defaults to 1/sqrt(fan_in)."""
+    fan_in = shape[0] if len(shape) > 1 else 1
+    s = scale if scale is not None else 1.0 / np.sqrt(max(fan_in, 1))
+    return jax.random.uniform(key, shape, dtype, -s, s)
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * weight
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return (((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)) * weight + bias
+
+
+def squared_relu(x):
+    r = jax.nn.relu(x)
+    return r * r
+
+
+ACTIVATIONS = {
+    "relu": jax.nn.relu,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "sq_relu": squared_relu,
+}
+
+
+def rope_freqs(head_dim: int, max_pos: int, theta: float = 10000.0):
+    """(max_pos, head_dim//2) cos/sin tables."""
+    inv = 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+    t = np.arange(max_pos)
+    f = np.outer(t, inv)
+    return jnp.asarray(np.cos(f), jnp.float32), jnp.asarray(np.sin(f), jnp.float32)
+
+
+def apply_rope(x, positions, cos, sin):
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    c = cos[positions][..., None, :]  # (..., S, 1, D/2)
+    s = sin[positions][..., None, :]
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def mlp_params(key, sizes, dtype=jnp.float32, bias: bool = True):
+    """Plain MLP params: list of dicts with w (and b)."""
+    ks = jax.random.split(key, len(sizes) - 1)
+    out = []
+    for i, k in enumerate(ks):
+        p = {"w": uniform_init(k, (sizes[i], sizes[i + 1]), dtype=dtype)}
+        if bias:
+            p["b"] = jnp.zeros((sizes[i + 1],), dtype)
+        out.append(p)
+    return out
+
+
+def mlp_apply(params, x, act=jax.nn.relu, final_act=None):
+    for i, p in enumerate(params):
+        x = x @ p["w"] + (p.get("b", 0.0))
+        if i < len(params) - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x

@@ -1,0 +1,360 @@
+"""Decoder-only transformer LM covering all five assigned LM architectures.
+
+Features:
+* GQA or MLA attention; dense (gated / plain) or MoE FFN per layer.
+* Layer *patterns* (cycled): 'full' | 'local' (chunked-window, llama4 iRoPE)
+  | 'global_nope' (full attention, no RoPE).  Layers are scanned in groups of
+  one pattern period with ``jax.checkpoint`` (remat) per group.
+* Chunked-query attention (memory) and chunked-vocab cross-entropy (memory).
+* Prefill (returns KV cache) and single-token decode steps with GQA or
+  MLA-absorbed caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import constrain, gather_layer_params
+from .attention import (MLADims, gqa_decode, gqa_forward, gqa_params,
+                        mla_decode, mla_forward, mla_params)
+from .layers import ACTIVATIONS, rms_norm, rope_freqs, uniform_init
+from .moe import MoEConfig, moe_apply, moe_params
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    act: str = "silu"
+    gated_ffn: bool = True               # SwiGLU-style if True, plain MLP else
+    attn: str = "gqa"                    # 'gqa' | 'mla'
+    mla: MLADims | None = None
+    moe: MoEConfig | None = None
+    rope_theta: float = 10000.0
+    max_seq: int = 8192
+    layer_pattern: tuple = ("full",)
+    local_window: int = 8192
+    chunk_q: int | None = None
+    xent_chunk: int | None = None
+    remat: bool = True
+    unroll_scans: bool = False           # dry-run accounting: python loops
+    dtype: Any = jnp.float32             # compute dtype
+    param_dtype: Any = jnp.float32
+    aux_loss_weight: float = 0.01
+    z_loss_weight: float = 1e-3
+
+    @property
+    def pattern_period(self) -> int:
+        return len(self.layer_pattern)
+
+    @property
+    def n_groups(self) -> int:
+        assert self.n_layers % self.pattern_period == 0
+        return self.n_layers // self.pattern_period
+
+    @property
+    def rope_dim(self) -> int:
+        return self.mla.qk_rope if self.attn == "mla" else self.head_dim
+
+
+# --------------------------------------------------------------------------- #
+# Params                                                                       #
+# --------------------------------------------------------------------------- #
+def _layer_init(key, cfg: TransformerConfig):
+    ka, kf = jax.random.split(key)
+    if cfg.attn == "mla":
+        attn = mla_params(ka, cfg.d_model, cfg.n_heads, cfg.mla.q_lora,
+                          cfg.mla.kv_lora, cfg.mla.qk_nope, cfg.mla.qk_rope,
+                          cfg.mla.v_head, dtype=cfg.param_dtype)
+    else:
+        attn = gqa_params(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                          cfg.head_dim, dtype=cfg.param_dtype)
+    if cfg.moe is not None:
+        ffn = moe_params(kf, cfg.moe, dtype=cfg.param_dtype)
+    elif cfg.gated_ffn:
+        k1, k2, k3 = jax.random.split(kf, 3)
+        ffn = {"w1": uniform_init(k1, (cfg.d_model, cfg.d_ff), dtype=cfg.param_dtype),
+               "w3": uniform_init(k2, (cfg.d_model, cfg.d_ff), dtype=cfg.param_dtype),
+               "w2": uniform_init(k3, (cfg.d_ff, cfg.d_model), dtype=cfg.param_dtype)}
+    else:
+        k1, k2 = jax.random.split(kf)
+        ffn = {"w1": uniform_init(k1, (cfg.d_model, cfg.d_ff), dtype=cfg.param_dtype),
+               "w2": uniform_init(k2, (cfg.d_ff, cfg.d_model), dtype=cfg.param_dtype)}
+    return {
+        "attn": attn,
+        "ffn": ffn,
+        "attn_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "ffn_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+    }
+
+
+def init_params(key, cfg: TransformerConfig):
+    ke, kl, kh = jax.random.split(key, 3)
+    keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg))(keys)
+    g, p = cfg.n_groups, cfg.pattern_period
+    layers = jax.tree.map(lambda a: a.reshape((g, p) + a.shape[1:]), layers)
+    return {
+        "embed": uniform_init(ke, (cfg.vocab, cfg.d_model), dtype=cfg.param_dtype),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), cfg.param_dtype),
+        "lm_head": uniform_init(kh, (cfg.d_model, cfg.vocab), dtype=cfg.param_dtype),
+    }
+
+
+def param_count(params) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))
+
+
+# --------------------------------------------------------------------------- #
+# Forward                                                                      #
+# --------------------------------------------------------------------------- #
+def _ffn_apply(lp, x, cfg: TransformerConfig):
+    act = ACTIVATIONS[cfg.act]
+    if cfg.moe is not None:
+        b, s, d = x.shape
+        y, aux = moe_apply(lp, x.reshape(b * s, d), cfg.moe)
+        return y.reshape(b, s, d), aux
+    h = x @ lp["w1"]
+    h = constrain(h, "act_btf")
+    if cfg.gated_ffn:
+        h = act(h) * (x @ lp["w3"])
+    else:
+        h = act(h)
+    return h @ lp["w2"], None
+
+
+def _layer_apply(lp, x, kind, cos, sin, positions, cfg: TransformerConfig):
+    lp = gather_layer_params(lp)   # ZeRO-3: gather FSDP weights at use (bf16)
+    h = rms_norm(x, lp["attn_norm"])
+    if cfg.attn == "mla":
+        attn_out, _ = mla_forward(lp["attn"], h, cos, sin, positions, cfg.mla,
+                                  causal=True, chunk_q=cfg.chunk_q,
+                                  unroll=cfg.unroll_scans)
+    else:
+        attn_out, _ = gqa_forward(
+            lp["attn"], h, cos, sin, positions,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            causal=True, chunk_q=cfg.chunk_q, unroll=cfg.unroll_scans,
+            local_window=cfg.local_window if kind == "local" else None,
+            use_rope=(kind != "global_nope"))
+    x = x + attn_out
+    x = constrain(x, "act_btd")
+    h = rms_norm(x, lp["ffn_norm"])
+    y, aux = _ffn_apply(lp["ffn"], h, cfg)
+    x = x + y
+    x = constrain(x, "act_btd")
+    return x, aux
+
+
+def forward(params, tokens, cfg: TransformerConfig, positions=None):
+    """tokens: (B, S) -> final hidden (B, S, d), total aux loss (scalar)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    x = constrain(x, "act_btd")
+    cos, sin = rope_freqs(cfg.rope_dim, cfg.max_seq, cfg.rope_theta)
+
+    def group(carry, gp):
+        x, aux_acc = carry
+        for j, kind in enumerate(cfg.layer_pattern):
+            lp = jax.tree.map(lambda a: a[j].astype(cfg.dtype)
+                              if a.dtype != jnp.int32 else a[j], gp)
+            x, aux = _layer_apply(lp, x, kind, cos, sin, positions, cfg)
+            if aux is not None:
+                aux_acc = aux_acc + cfg.aux_loss_weight * aux["load_balance"] \
+                    + cfg.z_loss_weight * aux["z_loss"]
+        return (x, aux_acc), None
+
+    g = jax.checkpoint(group) if cfg.remat else group
+    carry = (x, jnp.float32(0.0))
+    if cfg.unroll_scans:
+        for i in range(cfg.n_groups):
+            carry, _ = g(carry, jax.tree.map(lambda a: a[i], params["layers"]))
+    else:
+        carry, _ = jax.lax.scan(g, carry, params["layers"])
+    x, aux = carry
+    x = rms_norm(x, params["final_norm"].astype(cfg.dtype))
+    return x, aux / cfg.n_layers
+
+
+def lm_loss(params, hidden, labels, cfg: TransformerConfig):
+    """Mean xent over labels >= 0; chunked over tokens to bound logits memory."""
+    b, s, d = hidden.shape
+    h = hidden.reshape(b * s, d)
+    y = labels.reshape(b * s)
+    w = params["lm_head"].astype(cfg.dtype)
+
+    def chunk_loss(hc, yc):
+        logits = hc @ w
+        logits = constrain(logits, "logits_2d")
+        lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(
+            logits.astype(jnp.float32), jnp.maximum(yc, 0)[:, None], axis=1)[:, 0]
+        valid = (yc >= 0)
+        return jnp.sum(jnp.where(valid, lse - ll, 0.0)), jnp.sum(valid)
+
+    t = b * s
+    ck = cfg.xent_chunk
+    if ck is None or ck >= t:
+        tot, cnt = chunk_loss(h, y)
+    else:
+        assert t % ck == 0, (t, ck)
+        hc_all = h.reshape(t // ck, ck, d)
+        yc_all = y.reshape(t // ck, ck)
+
+        def body(carry, args):
+            hc, yc = args
+            l, c = jax.checkpoint(chunk_loss)(hc, yc)
+            return (carry[0] + l, carry[1] + c), None
+
+        carry = (jnp.float32(0.0), jnp.int32(0))
+        if cfg.unroll_scans:
+            for i in range(t // ck):
+                carry, _ = body(carry, (hc_all[i], yc_all[i]))
+        else:
+            carry, _ = jax.lax.scan(body, carry, (hc_all, yc_all))
+        tot, cnt = carry
+    return tot / jnp.maximum(cnt, 1)
+
+
+def loss_fn(params, batch, cfg: TransformerConfig):
+    hidden, aux = forward(params, batch["tokens"], cfg)
+    return lm_loss(params, hidden, batch["labels"], cfg) + aux
+
+
+# --------------------------------------------------------------------------- #
+# Serving: prefill + decode                                                    #
+# --------------------------------------------------------------------------- #
+def init_cache(cfg: TransformerConfig, batch: int, max_seq: int, dtype=jnp.bfloat16):
+    l = cfg.n_layers
+    if cfg.attn == "mla":
+        return {
+            "ckv": jnp.zeros((l, batch, max_seq, cfg.mla.kv_lora), dtype),
+            "kpe": jnp.zeros((l, batch, max_seq, cfg.mla.qk_rope), dtype),
+        }
+    return {
+        "k": jnp.zeros((l, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((l, batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def prefill(params, tokens, cfg: TransformerConfig, cache_dtype=jnp.bfloat16):
+    """Run the prompt; returns (last-token logits (B, V), cache over S)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    cos, sin = rope_freqs(cfg.rope_dim, cfg.max_seq, cfg.rope_theta)
+
+    def group(x, gp):
+        caches = []
+        for j, kind in enumerate(cfg.layer_pattern):
+            lp = jax.tree.map(lambda a: a[j].astype(cfg.dtype), gp)
+            lp = gather_layer_params(lp)
+            h = rms_norm(x, lp["attn_norm"])
+            if cfg.attn == "mla":
+                attn_out, (ckv, kpe) = mla_forward(
+                    lp["attn"], h, cos, sin, positions, cfg.mla,
+                    causal=True, chunk_q=cfg.chunk_q, unroll=cfg.unroll_scans)
+                caches.append({"ckv": ckv.astype(cache_dtype),
+                               "kpe": kpe.astype(cache_dtype)})
+            else:
+                attn_out, (k, v) = gqa_forward(
+                    lp["attn"], h, cos, sin, positions,
+                    n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                    head_dim=cfg.head_dim, causal=True, chunk_q=cfg.chunk_q,
+                    unroll=cfg.unroll_scans,
+                    local_window=cfg.local_window if kind == "local" else None,
+                    use_rope=(kind != "global_nope"))
+                caches.append({"k": k.astype(cache_dtype), "v": v.astype(cache_dtype)})
+            x = x + attn_out
+            h = rms_norm(x, lp["ffn_norm"])
+            y, _ = _ffn_apply(lp["ffn"], h, cfg)
+            x = x + y
+            x = constrain(x, "act_btd")
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *caches)
+        return x, stacked
+
+    g = jax.checkpoint(group) if cfg.remat else group
+    if cfg.unroll_scans:
+        outs = []
+        for i in range(cfg.n_groups):
+            x, c = g(x, jax.tree.map(lambda a: a[i], params["layers"]))
+            outs.append(c)
+        cache_groups = jax.tree.map(lambda *a: jnp.stack(a), *outs)
+    else:
+        x, cache_groups = jax.lax.scan(g, x, params["layers"])
+    # (G, p, B, S, ...) -> (L, B, S, ...)
+    cache = jax.tree.map(
+        lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), cache_groups)
+    x = rms_norm(x, params["final_norm"].astype(cfg.dtype))
+    logits = x[:, -1, :] @ params["lm_head"].astype(cfg.dtype)
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, pos, cfg: TransformerConfig):
+    """One decode step. tokens: (B,); pos: scalar int32 (next position).
+
+    Returns (logits (B, V), updated cache)."""
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    cos, sin = rope_freqs(cfg.rope_dim, cfg.max_seq, cfg.rope_theta)
+    g, p = cfg.n_groups, cfg.pattern_period
+    cache_g = jax.tree.map(lambda a: a.reshape((g, p) + a.shape[1:]), cache)
+
+    def group(x, gc):
+        gp, gcache = gc
+        new_caches = []
+        for j, kind in enumerate(cfg.layer_pattern):
+            lp = jax.tree.map(lambda a: a[j].astype(cfg.dtype), gp)
+            lp = gather_layer_params(lp)
+            lc = jax.tree.map(lambda a: a[j], gcache)
+            h = rms_norm(x, lp["attn_norm"])
+            if cfg.attn == "mla":
+                attn_out, ckv, kpe = mla_decode(
+                    lp["attn"], h, lc["ckv"], lc["kpe"], pos, cos, sin, cfg.mla)
+                new_caches.append({"ckv": ckv, "kpe": kpe})
+            else:
+                attn_out, k, v = gqa_decode(
+                    lp["attn"], h, lc["k"], lc["v"], pos, cos, sin,
+                    n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                    head_dim=cfg.head_dim,
+                    local_window=cfg.local_window if kind == "local" else None,
+                    use_rope=(kind != "global_nope"))
+                new_caches.append({"k": k, "v": v})
+            x = x + attn_out
+            h = rms_norm(x, lp["ffn_norm"])
+            if cfg.moe is not None:
+                y, _ = moe_apply(lp["ffn"], h, cfg.moe)
+            else:
+                act = ACTIVATIONS[cfg.act]
+                if cfg.gated_ffn:
+                    y = (act(h @ lp["ffn"]["w1"]) * (h @ lp["ffn"]["w3"])) @ lp["ffn"]["w2"]
+                else:
+                    y = act(h @ lp["ffn"]["w1"]) @ lp["ffn"]["w2"]
+            x = x + y
+        return x, jax.tree.map(lambda *a: jnp.stack(a), *new_caches)
+
+    if cfg.unroll_scans:
+        outs = []
+        for i in range(cfg.n_groups):
+            x, c = group(x, jax.tree.map(lambda a: a[i],
+                                         (params["layers"], cache_g)))
+            outs.append(c)
+        new_cache_g = jax.tree.map(lambda *a: jnp.stack(a), *outs)
+    else:
+        x, new_cache_g = jax.lax.scan(group, x, (params["layers"], cache_g))
+    new_cache = jax.tree.map(
+        lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), new_cache_g)
+    x = rms_norm(x, params["final_norm"].astype(cfg.dtype))
+    logits = x @ params["lm_head"].astype(cfg.dtype)
+    return logits, new_cache

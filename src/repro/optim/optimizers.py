@@ -1,0 +1,143 @@
+"""Minimal optax-style optimizers (offline container: no optax).
+
+An optimizer is a pair (init, update):
+    state = init(params)
+    updates, state = update(grads, state, params)
+    params = apply_updates(params, updates)
+
+``partition_optimizer`` routes different param subtrees to different
+optimizers (e.g. row-wise SGD for embedding tables + AdamW for dense — the
+MLPerf DLRM recipe), keyed by a path predicate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, state)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def adamw(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0):
+    """lr may be a float or a schedule fn(step)->lr."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {
+            "mu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "nu": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state["mu"], grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) *
+                          jnp.square(g.astype(jnp.float32)), state["nu"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        def upd(m, v, p):
+            u = -(lr_t * (m / bc1) / (jnp.sqrt(v / bc2) + eps))
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u.astype(p.dtype)
+        updates = jax.tree.map(upd, mu, nu, params)
+        return updates, {"mu": mu, "nu": nu, "step": step}
+
+    return Optimizer(init, update)
+
+
+def sgd(lr=1e-2, momentum: float = 0.0):
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        st = {"step": jnp.zeros((), jnp.int32)}
+        if momentum:
+            st["mom"] = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return st
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr_fn(step)
+        new = {"step": step}
+        if momentum:
+            mom = jax.tree.map(lambda m, g: momentum * m + g.astype(jnp.float32),
+                               state["mom"], grads)
+            new["mom"] = mom
+            updates = jax.tree.map(lambda m, p: (-lr_t * m).astype(p.dtype), mom, params)
+        else:
+            updates = jax.tree.map(lambda g, p: (-lr_t * g).astype(p.dtype),
+                                   grads, params)
+        return updates, new
+
+    return Optimizer(init, update)
+
+
+def partition_optimizer(route: Callable[[tuple], str], opts: dict[str, Optimizer]):
+    """Route each param leaf (by tree path) to a named optimizer.
+
+    route(path_tuple) -> key into ``opts``.  State holds one sub-state per key
+    over a masked copy of the tree (non-routed leaves replaced by zeros of
+    shape () to keep memory at O(routed params)).
+    """
+    def _mask(tree, key):
+        return jax.tree_util.tree_map_with_path(
+            lambda path, p: p if route(path) == key else jnp.zeros((), p.dtype), tree)
+
+    def init(params):
+        return {k: o.init(_mask(params, k)) for k, o in opts.items()}
+
+    def update(grads, state, params):
+        total = jax.tree.map(lambda g: None, grads)
+        new_state = {}
+        partials = {}
+        for k, o in opts.items():
+            up_k, st_k = o.update(_mask(grads, k), state[k], _mask(params, k))
+            new_state[k] = st_k
+            partials[k] = up_k
+        def pick(path, *leaves):
+            k = route(path)
+            i = list(opts.keys()).index(k)
+            return leaves[i]
+        updates = jax.tree_util.tree_map_with_path(
+            pick, *[partials[k] for k in opts.keys()])
+        return updates, new_state
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(kind: str = "adamw", **kw) -> Optimizer:
+    if kind == "adamw":
+        return adamw(**kw)
+    if kind == "sgd":
+        return sgd(**kw)
+    raise ValueError(kind)

@@ -1,0 +1,1 @@
+from .server import SNNServer, Request  # noqa: F401

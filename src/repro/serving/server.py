@@ -1,0 +1,130 @@
+"""Batched radius-query serving (the paper's online/streaming setting, §1.4).
+
+A `SNNServer` owns an SNN index and executes requests through the fixed-shape
+blocked query path (jit-compiled once per (batch, K) bucket).  Requests are
+dynamically batched: the dispatcher collects up to ``serve_batch`` requests or
+waits at most ``serve_timeout_ms``, pads to the bucket size, runs one fused
+query, and scatters the per-request results.
+
+Because SNN indexing is O(n log n) with a trivial constant (one power
+iteration + sort), `rebuild` makes the server usable for online streams:
+appended points trigger a cheap re-index (the paper's "flexibility" claim).
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+
+import numpy as np
+
+from ..configs.snn_default import SNNConfig
+from ..core import snn as _snn
+
+
+@dataclasses.dataclass
+class Request:
+    query: np.ndarray
+    radius: float
+    id: int = 0
+
+
+@dataclasses.dataclass
+class Response:
+    id: int
+    indices: np.ndarray
+    sq_dists: np.ndarray
+    truncated: bool
+    latency_ms: float
+
+
+class SNNServer:
+    def __init__(self, data: np.ndarray, cfg: SNNConfig = SNNConfig()):
+        self.cfg = cfg
+        self._data = np.asarray(data, np.float32)
+        self.index = _snn.build_index(self._data, metric=cfg.metric,
+                                      n_iter=cfg.power_iters)
+        self._q: queue.Queue = queue.Queue()
+        self._results: dict[int, Response] = {}
+        self._done = threading.Event()
+        self._lock = threading.Lock()
+        self._thread: threading.Thread | None = None
+
+    # ----------------------------------------------------------- lifecycle
+    def start(self):
+        self._done.clear()
+        self._thread = threading.Thread(target=self._loop, daemon=True)
+        self._thread.start()
+
+    def stop(self):
+        self._done.set()
+        if self._thread:
+            self._thread.join()
+
+    def rebuild(self, new_points: np.ndarray):
+        """Append points and re-index (cheap: sort-based index)."""
+        self._data = np.concatenate([self._data, np.asarray(new_points, np.float32)])
+        new_index = _snn.build_index(self._data, metric=self.cfg.metric,
+                                     n_iter=self.cfg.power_iters)
+        with self._lock:
+            self.index = new_index
+
+    # ------------------------------------------------------------- client
+    def submit(self, req: Request):
+        req._t0 = time.monotonic()
+        self._q.put(req)
+
+    def result(self, rid: int, timeout: float = 30.0) -> Response:
+        t0 = time.monotonic()
+        while time.monotonic() - t0 < timeout:
+            with self._lock:
+                if rid in self._results:
+                    return self._results.pop(rid)
+            time.sleep(0.0005)
+        raise TimeoutError(f"request {rid}")
+
+    def query_batch(self, queries: np.ndarray, radius: float):
+        """Synchronous batched query (bypasses the dispatcher)."""
+        with self._lock:
+            index = self.index
+        return _snn.query_radius_batch(index, queries, radius,
+                                       group_size=self.cfg.batch_group)
+
+    # ----------------------------------------------------------- dispatcher
+    def _loop(self):
+        while not self._done.is_set():
+            batch: list[Request] = []
+            deadline = time.monotonic() + self.cfg.serve_timeout_ms / 1e3
+            while len(batch) < self.cfg.serve_batch:
+                tmo = deadline - time.monotonic()
+                if tmo <= 0:
+                    break
+                try:
+                    batch.append(self._q.get(timeout=tmo))
+                except queue.Empty:
+                    break
+            if not batch:
+                continue
+            self._run_batch(batch)
+
+    def _run_batch(self, batch: list[Request]):
+        with self._lock:
+            index = self.index
+        qs = np.stack([r.query for r in batch])
+        # group identical radii into one fused fixed-shape call
+        radii = np.asarray([r.radius for r in batch])
+        for rad in np.unique(radii):
+            sel = np.nonzero(radii == rad)[0]
+            idx, sq, valid, counts = _snn.query_radius_fixed(
+                index, qs[sel], float(rad), self.cfg.max_neighbors,
+                block=self.cfg.block_rows)
+            now = time.monotonic()
+            for j, bi in enumerate(sel):
+                r = batch[bi]
+                resp = Response(
+                    id=r.id, indices=idx[j][valid[j]], sq_dists=sq[j][valid[j]],
+                    truncated=bool(counts[j] > self.cfg.max_neighbors),
+                    latency_ms=(now - r._t0) * 1e3)
+                with self._lock:
+                    self._results[r.id] = resp

@@ -1,0 +1,116 @@
+"""HLO collective parser, kd-tree/grid baselines, numerics (paper §4),
+neighbor sampler properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BruteForce1, BruteForce2, GridIndex, KDTree
+from repro.launch.hlo_analysis import Roofline, collective_bytes
+from repro.models.gnn import NeighborSampler
+
+
+# ---------------------------------------------------------------- HLO parser
+HLO_SAMPLE = """
+  %all-reduce = f32[1024,512]{1,0} all-reduce(%fusion), channel_id=1, replica_groups=[8,8]<=[64], use_global_device_ids=true, to_apply=%add
+  %ag = bf16[64,4096]{1,0} all-gather(%p), channel_id=2, replica_groups=[4,16]<=[64], dimensions={0}
+  %rs = bf16[8,128]{1,0} reduce-scatter(%x), channel_id=3, replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %cp = f32[256]{0} collective-permute(%y), channel_id=4, source_target_pairs={{0,1}}
+  %a2a = f32[32,32]{1,0} all-to-all(%z), channel_id=5, replica_groups=[8,8]<=[64]
+  %ags = (bf16[16,16]{1,0}, bf16[256,16]{1,0}) all-gather-start(%w), channel_id=6, replica_groups=[4,16]<=[64], dimensions={0}
+  %agd = bf16[256,16]{1,0} all-gather-done(%ags)
+"""
+
+
+def test_collective_bytes_parsing():
+    out = collective_bytes(HLO_SAMPLE)
+    assert out["all-reduce"] == 1024 * 512 * 4
+    assert out["all-gather"] == (64 * 4096 * 2) // 16 + (256 * 16 * 2) // 16
+    assert out["reduce-scatter"] == 8 * 128 * 2 * 4
+    assert out["collective-permute"] == 256 * 4
+    assert out["all-to-all"] == 32 * 32 * 4
+
+
+def test_roofline_terms():
+    r = Roofline(flops=197e12, hbm_bytes=819e9, coll_bytes=0.0,
+                 coll_breakdown={}, n_devices=2, model_flops=197e12)
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_memory - 1.0) < 1e-9
+    assert r.bottleneck in ("compute", "memory")
+    assert abs(r.useful_flops_ratio - 0.5) < 1e-12
+
+
+# ---------------------------------------------------------------- baselines
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 5000), n=st.integers(5, 400),
+       leaf=st.sampled_from([1, 5, 40]))
+def test_kdtree_exact(seed, n, leaf):
+    rng = np.random.default_rng(seed)
+    x = rng.random((n, 4)).astype(np.float32)
+    q = rng.random((6, 4)).astype(np.float32)
+    ref = BruteForce1(x).query_radius(q, 0.3)
+    got = KDTree(x, leaf_size=leaf).query_radius(q, 0.3)
+    for i in range(6):
+        assert set(got[i].tolist()) == set(ref[i].tolist())
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 5000), d=st.integers(1, 4),
+       cells=st.sampled_from([2, 8, 16]))
+def test_grid_exact(seed, d, cells):
+    rng = np.random.default_rng(seed)
+    x = rng.random((200, d)).astype(np.float32)
+    q = rng.random((5, d)).astype(np.float32)
+    ref = BruteForce1(x).query_radius(q, 0.25)
+    got = GridIndex(x, n_cells=cells).query_radius(q, 0.25)
+    for i in range(5):
+        assert set(got[i].tolist()) == set(ref[i].tolist())
+
+
+def test_bf2_matches_bf1_other_metrics():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(300, 6)).astype(np.float32)
+    q = rng.normal(size=(8, 6)).astype(np.float32)
+    for metric, r in [("cosine", 0.4), ("angular", 0.8), ("mips", 1.0)]:
+        a = BruteForce1(x, metric).query_radius(q, r)
+        b = BruteForce2(x, metric).query_radius(q, r)
+        for i in range(8):
+            assert set(a[i].tolist()) == set(b[i].tolist()), metric
+
+
+# --------------------------------------------------------- numerics (paper §4)
+def test_halfnorm_form_matches_naive_in_fp32():
+    """|fl(eq4) - fl(eq3)| should be within the paper's gamma_{d+2} bound."""
+    rng = np.random.default_rng(0)
+    for d in (4, 64, 784):
+        x = rng.normal(size=(200, d)).astype(np.float32)
+        q = rng.normal(size=(d,)).astype(np.float32)
+        naive32 = np.einsum("nd,nd->n", x - q, x - q)
+        half32 = (np.einsum("nd,nd->n", x, x) / 2 - x @ q + (q @ q) / 2) * 2
+        exact = np.einsum("nd,nd->n", (x - q).astype(np.float64),
+                          (x - q).astype(np.float64))
+        u = np.finfo(np.float32).eps / 2
+        gamma = (d + 2) * u / (1 - (d + 2) * u)
+        bound = 8 * gamma * exact + 1e-6   # slack for the subtraction form
+        assert (np.abs(naive32 - exact) <= bound).all()
+        assert (np.abs(half32 - exact) <= bound).all()
+
+
+# ------------------------------------------------------------------ sampler
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_sampler_valid_and_deterministic(seed):
+    rng = np.random.default_rng(seed)
+    n = 50
+    deg = rng.integers(0, 6, n)
+    indptr = np.concatenate([[0], np.cumsum(deg)])
+    indices = rng.integers(0, n, indptr[-1])
+    s1 = NeighborSampler(indptr, indices, seed=seed)
+    s2 = NeighborSampler(indptr, indices, seed=seed)
+    seeds = rng.integers(0, n, 8)
+    h1 = s1.sample(seeds, (4, 3))
+    h2 = s2.sample(seeds, (4, 3))
+    for a, b in zip(h1, h2):
+        np.testing.assert_array_equal(a, b)
+    # sampled ids are neighbors (or self for isolated nodes)
+    for i, sd in enumerate(seeds):
+        nbrs = set(indices[indptr[sd]:indptr[sd + 1]].tolist()) or {sd}
+        assert set(h1[1][i].tolist()) <= nbrs

@@ -1,0 +1,98 @@
+"""Fault-tolerance substrate: checkpoint roundtrip/corruption, elastic
+restart semantics, straggler watchdog."""
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ft.checkpoint import CheckpointManager
+from repro.ft.elastic import ElasticRunner, FailureInjector
+from repro.ft.watchdog import StragglerWatchdog
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {"a": jnp.asarray(rng.normal(size=(4, 5)).astype(np.float32)),
+            "b": [jnp.arange(3), {"c": jnp.float32(seed)}]}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cm = CheckpointManager(str(tmp_path), async_write=False)
+    t = _tree(1)
+    cm.save(7, t, extra={"note": "x"})
+    restored, step, extra = cm.restore(_tree(0))
+    assert step == 7 and extra == {"note": "x"}
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(t["a"]))
+    assert float(restored["b"][1]["c"]) == 1.0
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=2, async_write=True)
+    for s in range(5):
+        cm.save(s, _tree(s))
+    cm.wait()
+    assert cm.all_steps() == [3, 4]
+
+
+def test_checkpoint_corruption_falls_back(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=5, async_write=False)
+    cm.save(1, _tree(1))
+    cm.save(2, _tree(2))
+    # corrupt the newest shard
+    shard = os.path.join(str(tmp_path), "step_000000002", "shard_00000.npz")
+    with open(shard, "r+b") as f:
+        f.seek(10)
+        f.write(b"\x00" * 32)
+    restored, step, _ = cm.restore(_tree(0))
+    assert step == 1
+    assert float(restored["b"][1]["c"]) == 1.0
+
+
+def test_checkpoint_structure_mismatch_skipped(tmp_path):
+    cm = CheckpointManager(str(tmp_path), async_write=False)
+    cm.save(3, _tree(0))
+    other = {"different": jnp.zeros(2)}
+    restored, step, _ = cm.restore(other)
+    assert restored is None and step is None
+
+
+def test_elastic_runner_restarts_and_is_deterministic(tmp_path):
+    """A mid-run failure must not change the final state (replay semantics)."""
+    def make_state():
+        return {"x": jnp.float32(0.0), "hist": jnp.zeros(50)}
+
+    def step_fn(state, i):
+        return {"x": state["x"] + i, "hist": state["hist"].at[i].set(i)}
+
+    # clean run
+    cm1 = CheckpointManager(str(tmp_path / "clean"), async_write=False)
+    clean, r0 = ElasticRunner(make_state, step_fn, cm1, total_steps=30,
+                              checkpoint_every=5).run()
+    assert r0 == 0
+    # failing run
+    cm2 = CheckpointManager(str(tmp_path / "fail"), async_write=False)
+    inj = FailureInjector({12: "node loss", 23: "node loss"})
+    failed, r1 = ElasticRunner(make_state, step_fn, cm2, total_steps=30,
+                               checkpoint_every=5).run(inj)
+    assert r1 == 2
+    np.testing.assert_array_equal(np.asarray(clean["hist"]),
+                                  np.asarray(failed["hist"]))
+    assert float(clean["x"]) == float(failed["x"])
+
+
+def test_watchdog_flags_slow_host():
+    wd = StragglerWatchdog(threshold=1.5)
+    for _ in range(5):
+        for h in ("h0", "h1", "h2", "h3"):
+            wd.report(h, 1.0)
+        wd.report("h4", 2.5)
+    assert wd.stragglers() == ["h4"]
+    assert "h4" not in wd.healthy_hosts()
+
+
+def test_watchdog_needs_min_samples():
+    wd = StragglerWatchdog(min_samples=3)
+    wd.report("h0", 1.0)
+    wd.report("h1", 99.0)
+    assert wd.stragglers() == []

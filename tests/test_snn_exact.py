@@ -1,0 +1,142 @@
+"""Property tests: SNN is EXACT — identical result sets to brute force for
+every metric, radius, dimension and data distribution (paper's core claim)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BruteForce1, build_index, query_counts, query_radius,
+                        query_radius_batch, query_radius_fixed)
+
+
+def _data(rng, n, d, kind):
+    if kind == "uniform":
+        return rng.random((n, d)).astype(np.float32)
+    if kind == "gauss":
+        return rng.normal(size=(n, d)).astype(np.float32)
+    if kind == "line":  # degenerate: sigma_2 = 0 (paper's best case)
+        t = rng.normal(size=(n, 1)).astype(np.float32)
+        v = rng.normal(size=(1, d)).astype(np.float32)
+        return t @ v
+    if kind == "dup":   # heavy duplicates
+        base = rng.normal(size=(max(n // 4, 1), d)).astype(np.float32)
+        return base[rng.integers(0, base.shape[0], n)]
+    raise ValueError(kind)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 300),
+       d=st.integers(1, 20), rscale=st.floats(0.01, 3.0),
+       kind=st.sampled_from(["uniform", "gauss", "line", "dup"]))
+def test_exactness_euclidean(seed, n, d, rscale, kind):
+    rng = np.random.default_rng(seed)
+    x = _data(rng, n, d, kind)
+    q = _data(rng, 5, d, kind)
+    r = rscale * np.sqrt(d) * 0.3
+    index = build_index(x)
+    ref = BruteForce1(x).query_radius(q, r)
+    got = query_radius_batch(index, q, r, return_distance=False)
+    for i in range(5):
+        assert set(got[i].tolist()) == set(ref[i].tolist())
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 200), d=st.integers(2, 12),
+       metric=st.sampled_from(["cosine", "angular", "mips"]))
+def test_exactness_other_metrics(seed, n, d, metric):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32) + 0.1
+    q = rng.normal(size=(4, d)).astype(np.float32) + 0.1
+    radius = {"cosine": 0.4, "angular": 0.9, "mips": 0.5}[metric]
+    index = build_index(x, metric=metric)
+    got = query_radius_batch(index, q, radius, return_distance=False)
+    xn = x / np.linalg.norm(x, axis=1, keepdims=True)
+    qn = q / np.linalg.norm(q, axis=1, keepdims=True)
+    for i in range(4):
+        if metric == "cosine":
+            want = np.nonzero(1 - qn[i] @ xn.T <= radius)[0]
+        elif metric == "angular":
+            want = np.nonzero(np.arccos(np.clip(qn[i] @ xn.T, -1, 1)) <= radius)[0]
+        else:
+            want = np.nonzero(q[i] @ x.T >= radius)[0]
+        assert set(got[i].tolist()) == set(want.tolist()), (metric, i)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_single_equals_batch_equals_counts(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(150, 8)).astype(np.float32)
+    q = rng.normal(size=(10, 8)).astype(np.float32)
+    index = build_index(x)
+    batch = query_radius_batch(index, q, 2.5, return_distance=False)
+    counts = query_counts(index, q, 2.5)
+    for i in range(10):
+        single, dists = query_radius(index, q[i], 2.5)
+        assert set(single.tolist()) == set(batch[i].tolist())
+        assert counts[i] == len(single)
+        assert (dists <= 2.5 + 1e-5).all()
+
+
+def test_fixed_shape_path_matches_exact():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(700, 12)).astype(np.float32)
+    q = rng.normal(size=(23, 12)).astype(np.float32)
+    index = build_index(x)
+    exact = query_radius_batch(index, q, 3.0, return_distance=False)
+    kmax = max(len(e) for e in exact) + 1
+    idx, sq, valid, counts = query_radius_fixed(index, q, 3.0, kmax, block=128)
+    for i in range(23):
+        assert set(idx[i][valid[i]].tolist()) == set(exact[i].tolist())
+        assert counts[i] == len(exact[i])
+
+
+def test_query_point_in_database():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(50, 4)).astype(np.float32)
+    index = build_index(x)
+    idx, dists = query_radius(index, x[7], 1e-6)
+    assert 7 in idx.tolist()
+
+
+def test_boundary_radius_inclusive():
+    # points at distance exactly R must be returned (<= semantics)
+    x = np.array([[0.0, 0], [1.0, 0], [2.0, 0]], np.float32)
+    index = build_index(x)
+    idx = query_radius(index, np.array([0.0, 0], np.float32), 1.0,
+                       return_distance=False)
+    assert set(idx.tolist()) == {0, 1}
+
+
+def test_empty_and_tiny():
+    x = np.zeros((1, 3), np.float32)
+    index = build_index(x)
+    idx = query_radius(index, np.ones(3, np.float32), 0.1,
+                       return_distance=False)
+    assert idx.size == 0
+    idx = query_radius(index, np.zeros(3, np.float32), 0.1,
+                       return_distance=False)
+    assert idx.tolist() == [0]
+
+
+def test_radius_zero_and_huge():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(80, 5)).astype(np.float32)
+    index = build_index(x)
+    got = query_radius_batch(index, x[:5], 1e9, return_distance=False)
+    for g in got:
+        assert g.size == 80
+    got = query_radius(index, rng.normal(size=5).astype(np.float32) * 100,
+                       1e-8, return_distance=False)
+    assert got.size == 0
+
+
+def test_returned_distances_correct():
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(300, 9)).astype(np.float32)
+    q = rng.normal(size=(6, 9)).astype(np.float32)
+    index = build_index(x)
+    res = query_radius_batch(index, q, 2.8)
+    for i in range(6):
+        idx, dist = res[i]
+        true = np.linalg.norm(x[idx] - q[i][None, :], axis=1)
+        np.testing.assert_allclose(dist, true, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,59 @@
+"""End-to-end behaviour: training actually learns, resume works, and the
+paper's DBSCAN application runs through the public API."""
+import numpy as np
+
+from repro.launch import train as train_mod
+
+
+def _losses_from_log(path):
+    import json
+    with open(path) as f:
+        return [json.loads(l)["loss"] for l in f]
+
+
+def test_reduced_lm_training_learns(tmp_path):
+    log = tmp_path / "log.jsonl"
+    train_mod.main(["--arch", "internlm2-20b", "--reduced", "--steps", "150",
+                    "--log", str(log)])
+    losses = _losses_from_log(log)
+    first, last = np.mean(losses[:5]), np.mean(losses[-5:])
+    assert last < first - 0.1, (first, last)
+
+
+def test_training_resume_continues(tmp_path):
+    ck = tmp_path / "ck"
+    log1 = tmp_path / "a.jsonl"
+    train_mod.main(["--arch", "internlm2-20b", "--reduced", "--steps", "20",
+                    "--ckpt-dir", str(ck), "--ckpt-every", "10",
+                    "--log", str(log1)])
+    log2 = tmp_path / "b.jsonl"
+    train_mod.main(["--arch", "internlm2-20b", "--reduced", "--steps", "30",
+                    "--ckpt-dir", str(ck), "--resume", "--log", str(log2)])
+    import json
+    steps2 = [json.loads(l)["step"] for l in open(log2)]
+    assert steps2[0] == 20  # resumed, not restarted
+    assert steps2[-1] == 29
+
+
+def test_reduced_recsys_training_learns(tmp_path):
+    log = tmp_path / "log.jsonl"
+    train_mod.main(["--arch", "dlrm-mlperf", "--reduced", "--steps", "80",
+                    "--log", str(log)])
+    losses = _losses_from_log(log)
+    assert np.mean(losses[-10:]) < np.mean(losses[:10]) - 0.005
+
+
+def test_serve_launcher_end_to_end(capsys):
+    from repro.launch import serve as serve_mod
+    serve_mod.main(["--n", "2000", "--d", "8", "--requests", "64",
+                    "--radius", "0.5"])
+    out = capsys.readouterr().out
+    assert "qps" in out and "p99" in out
+
+
+def test_paper_dbscan_application():
+    from repro.core.dbscan import dbscan, normalized_mutual_information
+    from repro.data.pipeline import make_blobs
+    x, y = make_blobs(100, [(0, 0, 0), (5, 5, 5)], std=0.5, seed=2)
+    labels = dbscan(x, eps=1.0, min_samples=5, backend="snn")
+    assert normalized_mutual_information(labels, y) > 0.9
