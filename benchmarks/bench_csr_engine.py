@@ -1,0 +1,96 @@
+"""Two-pass CSR engine vs dense-filter vs host-BLAS, across n, m and radius.
+
+Three ways to answer the same exact radius query batch:
+
+* ``host``  — `query_radius_batch`: Algorithm 2 on CPU BLAS (numpy), the
+  paper's reference implementation;
+* ``dense`` — `query_radius_fixed`: one (m, n) masked-distance matrix plus a
+  top-K truncation (K sized to the true max count so it stays exact here);
+* ``csr``   — `query_radius_csr`: pass-1 count, host prefix sum, pass-2
+  compaction; output O(total_neighbors + m), no K, no truncation.
+
+On CPU the CSR passes run through the pure-jnp oracles (the interpret-mode
+Pallas kernels are a Python emulator, not a performance path), so the dense
+vs CSR gap here reflects output-shape work only; on TPU the compaction kernel
+also skips pruned blocks on the MXU.  Every row is printed in the usual
+``name,us_per_call,derived`` CSV contract AND collected into
+``BENCH_csr_engine.json`` with the grid parameters, per-method timings and
+result sizes.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core import (build_index, query_radius_batch, query_radius_csr,
+                        query_radius_fixed)
+from repro.data.pipeline import make_uniform
+
+from .common import row, subsample_queries, timeit
+
+OUT_JSON = "BENCH_csr_engine.json"
+
+
+def _one_cell(x, m, radius, record):
+    n, d = x.shape
+    q = subsample_queries(x, m, seed=1)
+    index = build_index(x)
+    exact = query_radius_batch(index, q, radius, return_distance=False)
+    counts = np.asarray([len(e) for e in exact])
+    kmax = int(counts.max()) + 1  # dense stays exact at this K
+    cell = {"n": n, "d": d, "m": int(q.shape[0]), "radius": float(radius),
+            "total_neighbors": int(counts.sum()), "max_count": int(counts.max()),
+            "timings_us": {}}
+    tag = f"n{n}/d{d}/m{m}/r{radius}"
+
+    t = timeit(query_radius_batch, index, q, radius, return_distance=False,
+               repeat=2)
+    cell["timings_us"]["host"] = t * 1e6
+    record.append(row(f"csr_engine/host/{tag}", t,
+                      f"total={counts.sum()}"))
+
+    t = timeit(query_radius_fixed, index, q, radius, kmax, repeat=2)
+    cell["timings_us"]["dense"] = t * 1e6
+    record.append(row(f"csr_engine/dense/{tag}", t, f"K={kmax}"))
+
+    t = timeit(query_radius_csr, index, q, radius, return_distance=False,
+               repeat=2)
+    cell["timings_us"]["csr"] = t * 1e6
+    record.append(row(f"csr_engine/csr/{tag}", t,
+                      f"nnz={counts.sum()}"))
+    return cell
+
+
+def run(full: bool = False, out_json: str = OUT_JSON):
+    rows: list[str] = []
+    cells: list[dict] = []
+    d = 16
+    ns = [4096, 16384] if not full else [4096, 16384, 65536, 262144]
+    ms = [128, 512] if not full else [128, 512, 2048]
+    # radii spanning sparse -> dense return regimes for uniform data in [0,1]^16
+    radii = [0.5, 0.8, 1.1]
+    for n in ns:
+        x = make_uniform(n, d, seed=0)
+        for m in ms:
+            for radius in radii:
+                cells.append(_one_cell(x, m, radius, rows))
+    import jax
+
+    payload = {
+        "benchmark": "csr_engine",
+        "backend": jax.default_backend(),
+        "full": full,
+        "grid": {"d": d, "ns": ns, "ms": ms, "radii": radii},
+        "cells": cells,
+    }
+    with open(out_json, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {os.path.abspath(out_json)}", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -14,11 +14,12 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig2,fig3,table45,table7,theory,roofline")
+                    help="comma list: fig2,fig3,table45,table7,theory,roofline,csr")
     args = ap.parse_args()
 
-    from . import (bench_fig2_synthetic, bench_fig3_grid, bench_roofline,
-                   bench_table45_realworld, bench_table7_dbscan, bench_theory)
+    from . import (bench_csr_engine, bench_fig2_synthetic, bench_fig3_grid,
+                   bench_roofline, bench_table45_realworld, bench_table7_dbscan,
+                   bench_theory)
     suites = {
         "fig2": bench_fig2_synthetic.run,
         "fig3": bench_fig3_grid.run,
@@ -26,8 +27,12 @@ def main() -> None:
         "table7": bench_table7_dbscan.run,
         "theory": bench_theory.run,
         "roofline": bench_roofline.run,
+        "csr": bench_csr_engine.run,
     }
     selected = args.only.split(",") if args.only else list(suites)
+    unknown = [s for s in selected if s not in suites]
+    if unknown:
+        ap.error(f"unknown suite(s) {unknown}; valid: {','.join(suites)}")
     print("name,us_per_call,derived")
     for name in selected:
         print(f"# --- {name} ---", file=sys.stderr)

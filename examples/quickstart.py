@@ -27,6 +27,15 @@ def main():
     sizes = [len(i) for i, _ in results]
     print(f"batch of 256: mean return {np.mean(sizes):.1f} points")
 
+    # ---- two-pass CSR engine (device path; exact, variable-length) ----
+    from repro.core import query_radius_csr
+    near = x[:256] + 0.01                        # queries near the data
+    want = query_radius_batch(index, near, radius=0.4, return_distance=False)
+    csr = query_radius_csr(index, near, radius=0.4)
+    assert csr.nnz == sum(len(w) for w in want) and csr.nnz > 0
+    print(f"csr engine: {csr.nnz} total neighbors across {csr.m} queries, "
+          f"largest row {int(np.diff(csr.indptr).max())}")
+
     # ---- exactness check vs brute force ----
     bf = BruteForce2(x)
     want = bf.query_radius(qs[:8], 0.4)

@@ -56,8 +56,8 @@ def main():
     check = server.query_batch(queries[:16], radius)
     bf = BruteForce2(server._data)
     want = bf.query_radius(queries[:16], radius)
-    assert all(set(np.asarray(a).tolist()) == set(w.tolist())
-               for a, w in zip(check, want))
+    assert all(set(idx.tolist()) == set(w.tolist())
+               for (idx, _), w in zip(check, want))
     print("served results exact vs brute force: OK")
 
 

@@ -15,9 +15,11 @@ class SNNConfig:
     block_rows: int = 512           # Pallas db-block (bn)
     query_tile: int = 128           # Pallas query tile (tq)
     batch_group: int = 64           # host-path level-3 BLAS query grouping
-    max_neighbors: int = 1024       # fixed-shape result cap (serving)
+    max_neighbors: int = 1024       # fixed-shape result cap (legacy serving path)
     serve_batch: int = 256          # dynamic batching target
     serve_timeout_ms: float = 2.0   # batching window
+    serve_exact: bool = True        # two-pass CSR engine (exact, untruncated);
+                                    # False restores the fixed-shape top-K path
 
 
 DEFAULT = SNNConfig()

@@ -1,9 +1,11 @@
 """Core SNN library: the paper's contribution as a composable module."""
 from .snn import (  # noqa: F401
+    CSRNeighbors,
     SNNIndex,
     build_index,
     query_radius,
     query_radius_batch,
+    query_radius_csr,
     query_counts,
     query_radius_fixed,
 )

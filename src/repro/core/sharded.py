@@ -21,13 +21,17 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from . import snn as _snn
 
 
-def shard_index(index: _snn.SNNIndex, mesh: Mesh, axis: str = "data", block: int = 512):
-    """Pad and place the sorted database, alpha scores and half-norms on a mesh.
+def _axis_size(mesh: Mesh, axis) -> int:
+    return int(np.prod([mesh.shape[a]
+                        for a in (axis if isinstance(axis, tuple) else (axis,))]))
 
-    Returns (xs, alphas, half_norms, order) device arrays sharded P(axis) on
-    rows.  Padding rows carry +BIG alpha / half-norm so they never match.
+
+def _pad_for_shards(index: _snn.SNNIndex, nshards: int, block: int = 512):
+    """Host-side shard padding: rows to a (nshards * block) multiple.
+
+    Returns (xs, alphas, half_norms, order, rows_per_shard); padding rows carry
+    +BIG alpha / half-norm so they never match.
     """
-    nshards = int(np.prod([mesh.shape[a] for a in (axis if isinstance(axis, tuple) else (axis,))]))
     unit = nshards * block
     n, d = index.xs.shape
     npad = max((n + unit - 1) // unit, 1) * unit
@@ -36,6 +40,16 @@ def shard_index(index: _snn.SNNIndex, mesh: Mesh, axis: str = "data", block: int
     al = np.concatenate([index.alphas, np.full(npad - n, big, np.float32)], 0)
     hn = np.concatenate([index.half_norms, np.full(npad - n, big, np.float32)], 0)
     od = np.concatenate([index.order, np.full(npad - n, -1, np.int64)], 0)
+    return xs, al, hn, od, npad // nshards
+
+
+def shard_index(index: _snn.SNNIndex, mesh: Mesh, axis: str = "data", block: int = 512):
+    """Pad and place the sorted database, alpha scores and half-norms on a mesh.
+
+    Returns (xs, alphas, half_norms, order) device arrays sharded P(axis) on
+    rows.  Padding rows carry +BIG alpha / half-norm so they never match.
+    """
+    xs, al, hn, od, _ = _pad_for_shards(index, _axis_size(mesh, axis), block)
     s2 = NamedSharding(mesh, P(axis, None))
     s1 = NamedSharding(mesh, P(axis))
     return (jax.device_put(xs, s2), jax.device_put(al, s1),
@@ -100,11 +114,111 @@ def make_sharded_topk_fn(mesh: Mesh, k_per_shard: int, axis: str = "data"):
     return jax.jit(sm)
 
 
+def make_sharded_percount_fn(mesh: Mesh, axis: str = "data"):
+    """Returns percount(xs, alphas, hn, xq, aq, r, thresh) -> (D, m) int32.
+
+    Pass 1 of the sharded CSR engine: each device counts its own survivors; the
+    (shard, query) matrix lets the host compute both the global CSR offsets and
+    each shard's write base (exclusive prefix over the shard axis).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    def body(xs, alphas, hn, xq, aq, r, thresh):
+        big = jnp.finfo(jnp.float32).max / 8
+        dh = _local_filter(xs, alphas, hn, xq, aq, r, thresh)
+        return jnp.sum(dh < big, axis=1).astype(jnp.int32)[None, :]
+
+    sm = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis, None), P(axis), P(axis), P(None, None), P(None), P(None), P(None)),
+        check_rep=False,
+        out_specs=P(axis, None),
+    )
+    return jax.jit(sm)
+
+
+def query_radius_csr_sharded(
+    index: _snn.SNNIndex,
+    mesh: Mesh,
+    q: np.ndarray,
+    radius,
+    return_distance: bool = True,
+    axis: str = "data",
+    block: int = 512,
+    query_tile: int = 128,
+    use_pallas: bool | None = None,
+    native: bool = True,
+) -> _snn.CSRNeighbors:
+    """Exact variable-length CSR results with the database sharded over a mesh.
+
+    Because the sort order is contiguous across shards, shard k's survivors of
+    query i occupy the CSR slots starting at ``indptr[i] + sum(counts[:k, i])``
+    — so pass 2 runs the compaction kernel once per shard with those offsets,
+    every shard scattering into disjoint slots of the same flat arrays, and
+    the merged result is bit-identical to the single-device
+    `query_radius_csr`.
+
+    Pass 1 (per-shard counts) runs `kernels.snn_count` on each shard's padded
+    slice — the SAME predicate pipeline pass 2 uses, which is load-bearing: a
+    ULP-level disagreement between differently-compiled float32 filters would
+    corrupt the scatter layout.  `make_sharded_percount_fn` (one shard_map
+    over the mesh) remains available for device-native counting, but its
+    `_local_filter` is a different XLA program, so it must not source scatter
+    offsets.  Both passes are host-orchestrated per shard here; the mesh
+    fixes the shard decomposition (device placement of each launch is a
+    deployment concern).
+    """
+    from ..kernels import ops as _ops
+
+    nshards = _axis_size(mesh, axis)
+    xs_h, al_h, hn_h, _, n_per = _pad_for_shards(index, nshards, block)
+    xq, aq, r, th, qsq = _snn.prepare_query_predicates(index, q, radius)
+    m = xq.shape[0]
+    qp, aqp, rp, thp, _ = _ops.pad_queries(xq, aq, r, th, tq=query_tile)
+    # per-shard padded slices: row padding is a no-op (n_per is a block
+    # multiple); this pads d to the 128-lane multiple to match the queries
+    shards = [_ops.pad_database(xs_h[k * n_per:(k + 1) * n_per],
+                                al_h[k * n_per:(k + 1) * n_per],
+                                hn_h[k * n_per:(k + 1) * n_per], bn=block)[:3]
+              for k in range(nshards)]
+    per = np.stack([np.asarray(_ops.snn_count(
+        qp, aqp, rp, thp, *sh, tq=query_tile, bn=block,
+        use_pallas=use_pallas))[:m] for sh in shards]).astype(np.int64)
+    counts = per.sum(axis=0)
+    indptr = np.zeros(m + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    total = int(indptr[-1])
+    if total == 0:
+        return _snn.csr_finalize(index, indptr, np.zeros(0, np.int64),
+                                 np.zeros(0, np.float32), xq, qsq,
+                                 counts, return_distance, native)
+    shard_base = np.cumsum(per, axis=0) - per  # exclusive prefix over shards
+    cap = _ops.csr_capacity(total)
+    off_pad = np.full(qp.shape[0] - m, total, np.int64)
+    flat_idx = np.full(cap, -1, np.int64)
+    flat_dh = np.full(cap, np.float32(np.finfo(np.float32).max / 8), np.float32)
+    for k, sh in enumerate(shards):
+        off_k = jnp.asarray(np.concatenate(
+            [indptr[:-1] + shard_base[k], off_pad]).astype(np.int32))
+        fi, fd = _ops.snn_compact(
+            qp, aqp, rp, thp, off_k, *sh, nnz=cap,
+            tq=query_tile, bn=block, use_pallas=use_pallas)
+        fi = np.asarray(fi)
+        written = fi >= 0
+        flat_idx[written] = fi[written] + k * n_per
+        flat_dh[written] = np.asarray(fd)[written]
+    # both passes ran the same pipeline, so every slot must be written; fail
+    # loudly (not an assert: it must survive python -O)
+    if not (flat_idx[:total] >= 0).all():
+        raise RuntimeError("CSR pass-1/pass-2 disagreement")
+    return _snn.csr_finalize(index, indptr, flat_idx[:total], flat_dh[:total],
+                             xq, qsq, counts, return_distance, native)
+
+
 def prepare_query_arrays(index: _snn.SNNIndex, q: np.ndarray, radius):
-    """Host-side prep shared by the sharded entry points."""
-    xq, r = index.prepare_queries(q, radius)
-    aq = xq @ index.v1
-    qsq = np.einsum("md,md->m", xq, xq)
-    thresh = (r * r - qsq) / 2.0
-    return (jnp.asarray(xq), jnp.asarray(aq.astype(np.float32)),
-            jnp.asarray(r.astype(np.float32)), jnp.asarray(thresh.astype(np.float32)))
+    """Host-side prep shared by the sharded entry points (see
+    `snn.prepare_query_predicates` — the single source of the float32
+    predicate inputs)."""
+    xq, aq, r, thresh, _ = _snn.prepare_query_predicates(index, q, radius)
+    return (jnp.asarray(xq), jnp.asarray(aq), jnp.asarray(r),
+            jnp.asarray(thresh))

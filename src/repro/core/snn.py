@@ -1,13 +1,19 @@
 """SNN — sorting-based exact fixed-radius near-neighbor search (paper Alg. 1 & 2).
 
-Two query paths are provided:
+Three query paths are provided:
 
 * the **host path** (`query_radius`, `query_radius_batch`): exact, variable-length
   results, BLAS (numpy matmul) over the contiguous sorted window — a faithful
   implementation of the paper's Algorithm 2 including the grouped level-3 BLAS
   batch trick.
 * the **fixed-shape path** (`query_radius_fixed`): jit-friendly block-pruned
-  filter used on TPU and by the serving layer; see kernels/snn_query.
+  filter used on TPU; dense (m, n) intermediate and K-truncated output.
+* the **two-pass CSR path** (`query_radius_csr`): the device engine of record —
+  pass 1 counts neighbors per query (kernels/snn_query.snn_count), a host
+  prefix sum produces CSR row offsets, and pass 2 re-runs the block-pruned
+  filter and scatters survivors straight into the CSR arrays
+  (kernels/snn_query.snn_compact).  Exact variable-length results with peak
+  device memory O(total_neighbors + m) instead of O(m * n).
 
 The index is built with a jit-compiled power iteration for the first principal
 component.  Exactness of SNN never depends on the accuracy of v1 (any direction
@@ -152,17 +158,8 @@ def query_radius(
 
 def _native_distance(index: SNNIndex, sq_eucl: np.ndarray, xq: np.ndarray) -> np.ndarray:
     """Convert squared Euclidean distances (in index space) to the native metric."""
-    if index.metric == "euclidean":
-        return np.sqrt(sq_eucl)
-    if index.metric == "cosine":
-        return sq_eucl / 2.0
-    if index.metric == "angular":
-        return np.arccos(np.clip(1.0 - sq_eucl / 2.0, -1.0, 1.0))
-    if index.metric == "mips":
-        # ||p~-q~||^2 = xi^2 + ||q||^2 - 2 p.q  (index space is centered; undo)
-        qraw_sq = float(((xq + index.mu) ** 2).sum())  # ||q~||^2, first coord 0
-        return (index.xi**2 + qraw_sq - sq_eucl) / 2.0
-    raise AssertionError(index.metric)
+    return _native_distance_csr(index, sq_eucl, xq[None, :],
+                                np.asarray([sq_eucl.shape[0]]))
 
 
 def query_radius_batch(
@@ -270,7 +267,10 @@ def query_radius_fixed(index: SNNIndex, q: np.ndarray, radius, max_neighbors: in
     big = jnp.finfo(dhalf.dtype).max / 8
     counts = jnp.sum(dhalf < big, axis=1)
     neg = -dhalf
-    vals, idx = jax.lax.top_k(neg, max_neighbors)  # largest -dhalf = smallest dist
+    # top_k requires k <= padded n; a clamped K loses nothing (there are only
+    # n candidates) and keeps small databases working with large-K configs
+    k = min(max_neighbors, xs.shape[0])
+    vals, idx = jax.lax.top_k(neg, k)  # largest -dhalf = smallest dist
     valid = vals > -big
     qsq = jnp.sum(xq * xq, axis=1)
     sq = jnp.maximum(2.0 * (-vals) + qsq[:, None], 0.0)
@@ -278,3 +278,156 @@ def query_radius_fixed(index: SNNIndex, q: np.ndarray, radius, max_neighbors: in
     out_idx = jnp.where(valid, order[idx % index.n], -1)
     return np.asarray(out_idx), np.asarray(jnp.where(valid, sq, np.inf)), \
         np.asarray(valid), np.asarray(counts)
+
+
+# --------------------------------------------------------------------------- #
+# Two-pass exact CSR engine                                                    #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class CSRNeighbors:
+    """Exact variable-length radius results in CSR form.
+
+    Query i's neighbors occupy the flat slice ``indptr[i]:indptr[i+1]``.
+    ``indices`` are original (pre-sort) row ids; within each row they ascend in
+    sorted-database order, the same order `query_radius_batch` emits.
+    ``distances`` (if requested) are in the index's native metric.
+    """
+
+    indptr: np.ndarray
+    indices: np.ndarray
+    distances: np.ndarray | None = None
+
+    @property
+    def m(self) -> int:
+        return self.indptr.shape[0] - 1
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indptr[-1])
+
+    def row(self, i: int):
+        s, e = int(self.indptr[i]), int(self.indptr[i + 1])
+        if self.distances is None:
+            return self.indices[s:e]
+        return self.indices[s:e], self.distances[s:e]
+
+    def tolist(self) -> list:
+        """Per-query results, matching the `query_radius_batch` return shape."""
+        return [self.row(i) for i in range(self.m)]
+
+
+def prepare_query_predicates(index: SNNIndex, q: np.ndarray, radius):
+    """Float32 predicate inputs (xq, aq, r, thresh, qsq) for the device paths.
+
+    Every device path (single, sharded, serving) must derive its window and
+    half-norm tests from THIS computation: pass-1/pass-2 agreement of the CSR
+    engine relies on both passes seeing bit-identical inputs.
+    """
+    xq, r = index.prepare_queries(q, radius)
+    aq = (xq @ index.v1).astype(np.float32)
+    qsq = np.einsum("ij,ij->i", xq, xq)
+    thresh = ((r * r - qsq) / 2.0).astype(np.float32)
+    return xq, aq, r.astype(np.float32), thresh, qsq
+
+
+def _native_distance_csr(index: SNNIndex, sq_eucl: np.ndarray, xq: np.ndarray,
+                         counts: np.ndarray) -> np.ndarray:
+    """Vectorized `_native_distance` over a flat CSR distance array."""
+    if index.metric == "euclidean":
+        return np.sqrt(sq_eucl)
+    if index.metric == "cosine":
+        return sq_eucl / 2.0
+    if index.metric == "angular":
+        return np.arccos(np.clip(1.0 - sq_eucl / 2.0, -1.0, 1.0))
+    if index.metric == "mips":
+        # ||p~-q~||^2 = xi^2 + ||q~||^2 - 2 p.q  (index space is centered; undo)
+        qraw = xq + index.mu[None, :]
+        qraw_sq = np.einsum("ij,ij->i", qraw, qraw)
+        return (index.xi**2 + np.repeat(qraw_sq, counts) - sq_eucl) / 2.0
+    raise AssertionError(index.metric)
+
+
+def query_radius_csr(
+    index: SNNIndex,
+    q: np.ndarray,
+    radius,
+    return_distance: bool = True,
+    block: int = 512,
+    query_tile: int = 128,
+    use_pallas: bool | None = None,
+    native: bool = True,
+) -> CSRNeighbors:
+    """Exact device radius query with CSR output (two passes, no (m, n) array).
+
+    Pass 1 (`kernels.snn_count`) produces per-query neighbor counts; the host
+    prefix-sums them into CSR row offsets; pass 2 (`kernels.snn_compact`)
+    re-runs the identical block-pruned filter and scatters each survivor into
+    its final CSR slot.  Both passes see the same window + half-norm tests on
+    the same float32 inputs, so pass-2 survivors are exactly the pass-1 counted
+    points and every CSR row is filled completely — no truncation, no recount.
+
+    ``use_pallas=None`` dispatches to the Pallas kernels on TPU; elsewhere a
+    single dense-filter evaluation feeds both passes (correctness reference,
+    not the memory story; pass ``use_pallas=True`` off-TPU to force the
+    kernels through interpret mode).
+    """
+    from ..kernels import ops as _ops
+
+    if use_pallas is None:
+        use_pallas = _ops.on_tpu()
+    xq, aq, r, thresh, qsq = prepare_query_predicates(index, q, radius)
+    m = xq.shape[0]
+    xs, al, hn, _, _ = _ops.pad_database(index.xs, index.alphas,
+                                         index.half_norms, bn=block)
+    qp, aqp, rp, thp, _ = _ops.pad_queries(xq, aq, r, thresh, tq=query_tile)
+    if not use_pallas:
+        # Oracle fast path: one dense filter feeds both passes (counts AND
+        # scatter); np.nonzero's row-major order IS the CSR order.
+        dh = np.asarray(_ops.snn_filter(qp, aqp, rp, thp, xs, al, hn,
+                                        use_pallas=False))[:m]
+        keep = dh < _ops.BIG
+        counts = keep.sum(axis=1).astype(np.int64)
+        indptr = np.zeros(m + 1, np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        _, fi = np.nonzero(keep)
+        return csr_finalize(index, indptr, fi, dh[keep], xq, qsq, counts,
+                            return_distance, native)
+    counts = np.asarray(_ops.snn_count(
+        qp, aqp, rp, thp, xs, al, hn, tq=query_tile, bn=block,
+        use_pallas=True))[:m].astype(np.int64)
+    indptr = np.zeros(m + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    total = int(indptr[-1])
+    if total == 0:
+        dist = np.zeros(0, np.float64) if return_distance else None
+        return CSRNeighbors(indptr, np.zeros(0, np.int64), dist)
+    cap = _ops.csr_capacity(total)
+    # padding queries keep nothing; park their offsets on a valid slot
+    off = jnp.asarray(np.concatenate(
+        [indptr[:-1], np.full(qp.shape[0] - m, total)]).astype(np.int32))
+    fi, fd = _ops.snn_compact(qp, aqp, rp, thp, off, xs, al, hn, nnz=cap,
+                              tq=query_tile, bn=block, use_pallas=True)
+    fi = np.asarray(fi)[:total]
+    # both passes ran the same predicate pipeline, so every slot is written;
+    # a -1 here would silently alias index.order[-1], so fail loudly (not an
+    # assert: it must survive python -O)
+    if not (fi >= 0).all():
+        raise RuntimeError("CSR pass-1/pass-2 disagreement")
+    return csr_finalize(index, indptr, fi, np.asarray(fd)[:total], xq, qsq,
+                        counts, return_distance, native)
+
+
+def csr_finalize(index: SNNIndex, indptr, fi, fd, xq, qsq, counts,
+                 return_distance: bool, native: bool = True) -> CSRNeighbors:
+    """Map flat sorted-row positions + dhalf values to a `CSRNeighbors`.
+
+    ``native=False`` leaves distances as squared Euclidean in index space (the
+    fixed-shape path's convention) instead of converting to the metric.
+    """
+    indices = index.order[fi]
+    if not return_distance:
+        return CSRNeighbors(indptr, indices, None)
+    sq = np.maximum(2.0 * fd.astype(np.float64) + np.repeat(qsq, counts), 0.0)
+    if not native:
+        return CSRNeighbors(indptr, indices, sq)
+    return CSRNeighbors(indptr, indices, _native_distance_csr(index, sq, xq, counts))

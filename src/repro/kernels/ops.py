@@ -12,7 +12,8 @@ import numpy as np
 
 from . import ref as _ref
 from .embedding_bag import embedding_bag as _bag_kernel
-from .snn_query import BIG, snn_count as _count_kernel, snn_filter as _filter_kernel
+from .snn_query import (BIG, snn_compact as _compact_kernel,
+                        snn_count as _count_kernel, snn_filter as _filter_kernel)
 
 
 def on_tpu() -> bool:
@@ -63,6 +64,37 @@ def snn_count(q, aq, r, thresh, xs, alphas, half_norms, *,
         return _ref.snn_count_ref(q, aq, r, thresh, xs, alphas, half_norms)
     return _count_kernel(q, aq, r, thresh, xs, alphas, half_norms,
                          tq=tq, bn=bn, interpret=not on_tpu())
+
+
+def round_up(x: int, mult: int) -> int:
+    return max(((x + mult - 1) // mult) * mult, mult)
+
+
+def csr_capacity(total_neighbors: int, lane: int = 128) -> int:
+    """Flat CSR capacity: total + 1 trash slot, bucketed to the next power of
+    two of whole lanes so recompiles of the compact kernel stay O(log nnz)."""
+    need = round_up(total_neighbors + 1, lane)
+    cap = lane
+    while cap < need:
+        cap *= 2
+    return cap
+
+
+def snn_compact(q, aq, r, thresh, offsets, xs, alphas, half_norms, *,
+                nnz: int, tq: int = 128, bn: int = 512,
+                use_pallas: bool | None = None):
+    """Padded-and-dispatched pass-2 CSR compaction; see kernels.snn_query.
+
+    Returns (idx (nnz,) int32 sorted-row positions, dhalf (nnz,) f32); slots
+    beyond each query's count hold -1 / +BIG.
+    """
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if not use_pallas:
+        return _ref.snn_compact_ref(q, aq, r, thresh, offsets, xs, alphas,
+                                    half_norms, nnz=nnz)
+    return _compact_kernel(q, aq, r, thresh, offsets, xs, alphas, half_norms,
+                           nnz=nnz, tq=tq, bn=bn, interpret=not on_tpu())
 
 
 def embedding_bag(ids, table, *, mode: str = "sum", use_pallas: bool | None = None):

@@ -1,6 +1,8 @@
 """Pure-jnp oracles for every Pallas kernel (the correctness references)."""
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -21,6 +23,27 @@ def snn_count_ref(q, aq, r, thresh, xs, alphas, half_norms):
     """Oracle for kernels.snn_query.snn_count."""
     dh = snn_filter_ref(q, aq, r, thresh, xs, alphas, half_norms)
     return jnp.sum(dh < BIG, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("nnz",))
+def snn_compact_ref(q, aq, r, thresh, offsets, xs, alphas, half_norms, *, nnz: int):
+    """Oracle for kernels.snn_query.snn_compact (dense filter + scatter).
+
+    Dense (m, n) intermediate — correctness reference only, not the memory
+    story.  Slot layout matches the kernel: ``nnz`` includes one trailing trash
+    slot; unwritten idx slots are -1, dhalf slots +BIG.
+    """
+    dh = snn_filter_ref(q, aq, r, thresh, xs, alphas, half_norms)
+    keep = dh < BIG
+    within = jnp.cumsum(keep.astype(jnp.int32), axis=1) - 1
+    trash = nnz - 1
+    pos = jnp.where(keep, offsets[:, None] + within, trash).ravel()
+    cols = jnp.broadcast_to(jnp.arange(xs.shape[0], dtype=jnp.int32),
+                            keep.shape).ravel()
+    out_idx = jnp.full((nnz,), -1, jnp.int32).at[pos].set(cols)
+    out_dh = jnp.full((nnz,), BIG, jnp.float32).at[pos].set(dh.ravel())
+    # the trash slot collected every pruned pair; restore its sentinel
+    return (out_idx.at[trash].set(-1), out_dh.at[trash].set(BIG))
 
 
 @jax.jit

@@ -12,9 +12,13 @@ TPU adaptation of the paper's dynamic-window BLAS GEMV/GEMM:
 * surviving cells compute ``dhalf = half_norm - X_block @ q`` on the MXU and
   apply the half-norm radius test  ``dhalf <= (R^2 - q.q)/2``  (paper eq. (4)).
 
-Two entry kernels share the body:
-  * ``filter``: emits masked halved sq. distances (m, n), +BIG where pruned;
-  * ``count`` : emits per-query neighbor counts (m,), accumulated over blocks.
+Three entry kernels share the body:
+  * ``filter`` : emits masked halved sq. distances (m, n), +BIG where pruned;
+  * ``count``  : emits per-query neighbor counts (m,), accumulated over blocks;
+  * ``compact``: pass 2 of the two-pass CSR engine — re-runs the block-pruned
+    filter and scatters surviving (sorted-row index, dhalf) pairs directly into
+    flat CSR arrays at caller-provided per-query offsets.  No (m, n)
+    intermediate is ever materialized.
 
 Layout notes (TPU): 1-D per-row arrays (alpha, half-norm, per-query scalars)
 are carried as (1, n)/(1, m) so the last dim is the 128-lane axis; ``d`` is
@@ -28,6 +32,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams; support both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 BIG = float(jnp.finfo(jnp.float32).max / 8)
 
@@ -100,7 +107,7 @@ def _grid_specs(m, n, d, tq, bn):
 
 def _compiler_params():
     # block dim 0 (query tiles) is parallel; dim 1 revisits the count output.
-    return pltpu.CompilerParams(
+    return _CompilerParams(
         dimension_semantics=(pltpu.PARALLEL, pltpu.ARBITRARY))
 
 
@@ -145,3 +152,113 @@ def snn_count(q, aq, r, thresh, xs, alphas, half_norms, *,
     )(q, aq[None, :], r[None, :], thresh[None, :], xs,
       alphas[None, :], half_norms[None, :])
     return out[0]
+
+
+# --------------------------------------------------------------------------- #
+# Pass-2 CSR compaction                                                        #
+# --------------------------------------------------------------------------- #
+def _compact_kernel(q_ref, aq_ref, r_ref, th_ref, off_ref,
+                    x_ref, al_ref, hn_ref, idx_ref, dh_ref, cursor_ref):
+    qi = pl.program_id(0)
+    bi = pl.program_id(1)
+    bn = x_ref.shape[0]
+    # The last flat slot is a trash slot: every (row, col) pair gets exactly one
+    # unconditional store, pruned pairs land there, so no divergent control flow
+    # is needed in the scatter loop.
+    trash = idx_ref.shape[1] - 1
+
+    @pl.when((qi == 0) & (bi == 0))
+    def _():
+        idx_ref[...] = jnp.full_like(idx_ref, -1)
+        dh_ref[...] = jnp.full_like(dh_ref, BIG)
+
+    @pl.when(bi == 0)
+    def _():
+        cursor_ref[...] = jnp.zeros_like(cursor_ref)
+
+    a_lo = al_ref[0, 0]
+    a_hi = al_ref[0, al_ref.shape[1] - 1]
+    hit = _window_hit(aq_ref[0, :], r_ref[0, :], a_lo, a_hi)
+
+    @pl.when(hit)
+    def _():
+        keep, dhalf = _tile_body(q_ref, aq_ref, r_ref, th_ref, x_ref, al_ref, hn_ref)
+        keep_i = keep.astype(jnp.int32)
+        # Survivor j of query row k goes to offsets[k] + cursor[k] + (number of
+        # survivors before j in this block) — ascending sorted order, so each
+        # CSR row is written left-to-right exactly once across the block loop.
+        within = jnp.cumsum(keep_i, axis=1) - 1
+        base = off_ref[0, :] + cursor_ref[0, :]
+        col0 = bi * bn
+
+        def row_body(k, _):
+            pos = jnp.where(keep[k], base[k] + within[k], trash)
+
+            def scatter_row(_):
+                def el_body(j, __):
+                    idx_ref[0, pl.ds(pos[j], 1)] = (col0 + j)[None].astype(jnp.int32)
+                    dh_ref[0, pl.ds(pos[j], 1)] = dhalf[k, j][None]
+                    return 0
+
+                return jax.lax.fori_loop(0, bn, el_body, 0)
+
+            # rows whose window missed this block (common in a hit tile) skip
+            # their bn stores entirely; rows WITH survivors still pay bn
+            # serialized stores (pruned pairs hit the trash slot) — the cost
+            # bound is (rows with >=1 survivor) * bn, not survivor count
+            return jax.lax.cond(jnp.sum(keep_i[k]) > 0, scatter_row,
+                                lambda _: 0, 0)
+
+        jax.lax.fori_loop(0, keep.shape[0], row_body, 0)
+        cursor_ref[...] += jnp.sum(keep_i, axis=1)[None, :]
+
+    @pl.when((qi == pl.num_programs(0) - 1) & (bi == pl.num_programs(1) - 1))
+    def _():
+        # the trash slot absorbed every pruned pair; restore its sentinel
+        idx_ref[0, pl.ds(trash, 1)] = jnp.full((1,), -1, jnp.int32)
+        dh_ref[0, pl.ds(trash, 1)] = jnp.full((1,), BIG, jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("nnz", "tq", "bn", "interpret"))
+def snn_compact(q, aq, r, thresh, offsets, xs, alphas, half_norms, *,
+                nnz: int, tq: int = 128, bn: int = 512, interpret: bool = True):
+    """Scatter surviving (sorted-row index, dhalf) pairs into flat CSR arrays.
+
+    ``offsets[k]`` is the first flat slot of query k's CSR row (from the pass-1
+    count prefix sum); ``nnz`` is the flat capacity INCLUDING one trailing trash
+    slot (callers pass >= total_neighbors + 1; bucketing it, e.g. to the next
+    power of two, bounds recompilation).  Returns (idx (nnz,) int32 sorted-row
+    positions with -1 in unwritten slots, dhalf (nnz,) f32).  Same padding
+    contract as filter/count; padding queries must carry offsets < nnz.
+
+    Both grid dims are sequential: every cell scatters into the same flat
+    output block, and a VMEM cursor carries each query's running write position
+    across db blocks.
+
+    Memory: the flat outputs live in one VMEM block, so a single call supports
+    nnz up to roughly VMEM capacity (~2M pairs at 8 bytes each) — far beyond
+    the dense path's (m, n) ceiling, but not unbounded; callers with larger
+    result sets should split the query batch (serving's dispatcher batches
+    naturally).  Lifting this via HBM-resident outputs + manual DMA is future
+    work.
+    """
+    m, d = q.shape
+    n = xs.shape[0]
+    grid, in_specs = _grid_specs(m, n, d, tq, bn)
+    in_specs = in_specs[:4] + [pl.BlockSpec((1, tq), lambda qi, bi: (0, qi))] \
+        + in_specs[4:]
+    out_idx, out_dh = pl.pallas_call(
+        _compact_kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((1, nnz), lambda qi, bi: (0, 0)),
+                   pl.BlockSpec((1, nnz), lambda qi, bi: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, nnz), jnp.int32),
+                   jax.ShapeDtypeStruct((1, nnz), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((1, tq), jnp.int32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=(pltpu.ARBITRARY, pltpu.ARBITRARY)),
+        interpret=interpret,
+    )(q, aq[None, :], r[None, :], thresh[None, :], offsets[None, :], xs,
+      alphas[None, :], half_norms[None, :])
+    return out_idx[0], out_dh[0]

@@ -1,10 +1,13 @@
 """Batched radius-query serving (the paper's online/streaming setting, §1.4).
 
-A `SNNServer` owns an SNN index and executes requests through the fixed-shape
-blocked query path (jit-compiled once per (batch, K) bucket).  Requests are
-dynamically batched: the dispatcher collects up to ``serve_batch`` requests or
-waits at most ``serve_timeout_ms``, pads to the bucket size, runs one fused
-query, and scatters the per-request results.
+A `SNNServer` owns an SNN index and executes requests through the two-pass
+exact CSR engine (`core.snn.query_radius_csr`) by default: every response is
+the full, untruncated neighbor set, whatever its length.  Setting
+``cfg.serve_exact = False`` restores the legacy fixed-shape top-K path
+(bounded response size, ``truncated`` flag when counts exceed K).  Requests
+are dynamically batched: the dispatcher collects up to ``serve_batch``
+requests or waits at most ``serve_timeout_ms``, runs one fused query per
+radius group, and scatters the per-request results.
 
 Because SNN indexing is O(n log n) with a trivial constant (one power
 iteration + sort), `rebuild` makes the server usable for online streams:
@@ -16,6 +19,7 @@ import dataclasses
 import queue
 import threading
 import time
+import traceback
 
 import numpy as np
 
@@ -106,25 +110,64 @@ class SNNServer:
                     break
             if not batch:
                 continue
-            self._run_batch(batch)
+            try:
+                self._run_batch(batch)
+            except Exception:
+                # keep the dispatcher alive; the affected requests time out
+                traceback.print_exc()
 
     def _run_batch(self, batch: list[Request]):
         with self._lock:
             index = self.index
         qs = np.stack([r.query for r in batch])
-        # group identical radii into one fused fixed-shape call
+        # group identical radii into one fused call
         radii = np.asarray([r.radius for r in batch])
         for rad in np.unique(radii):
             sel = np.nonzero(radii == rad)[0]
-            idx, sq, valid, counts = _snn.query_radius_fixed(
-                index, qs[sel], float(rad), self.cfg.max_neighbors,
-                block=self.cfg.block_rows)
-            now = time.monotonic()
-            for j, bi in enumerate(sel):
-                r = batch[bi]
-                resp = Response(
-                    id=r.id, indices=idx[j][valid[j]], sq_dists=sq[j][valid[j]],
-                    truncated=bool(counts[j] > self.cfg.max_neighbors),
-                    latency_ms=(now - r._t0) * 1e3)
-                with self._lock:
-                    self._results[r.id] = resp
+            try:
+                if self.cfg.serve_exact:
+                    try:
+                        self._respond_csr(index, batch, qs, sel, float(rad))
+                        continue
+                    except Exception:
+                        # The exact path's flat output is data-dependent (a
+                        # pathologically dense group can exceed the compact
+                        # kernel's VMEM ceiling); degrade to the K-bounded
+                        # fixed path for this group.
+                        traceback.print_exc()
+                self._respond_fixed(index, batch, qs, sel, float(rad))
+            except Exception:
+                # this group's requests will time out; keep serving the rest
+                traceback.print_exc()
+
+    def _respond_csr(self, index, batch, qs, sel, rad: float):
+        """Exact path: two-pass CSR engine, variable-length, never truncated."""
+        csr = _snn.query_radius_csr(index, qs[sel], rad,
+                                    block=self.cfg.block_rows,
+                                    query_tile=self.cfg.query_tile,
+                                    native=False)
+        now = time.monotonic()
+        for j, bi in enumerate(sel):
+            r = batch[bi]
+            idx, sq = csr.row(j)
+            # copy: row() returns views into the group-wide flat arrays, and a
+            # Response parked in _results must not pin the whole group
+            resp = Response(id=r.id, indices=np.array(idx), sq_dists=np.array(sq),
+                            truncated=False, latency_ms=(now - r._t0) * 1e3)
+            with self._lock:
+                self._results[r.id] = resp
+
+    def _respond_fixed(self, index, batch, qs, sel, rad: float):
+        """Legacy fixed-shape path: K-bounded responses with a truncated flag."""
+        idx, sq, valid, counts = _snn.query_radius_fixed(
+            index, qs[sel], rad, self.cfg.max_neighbors,
+            block=self.cfg.block_rows)
+        now = time.monotonic()
+        for j, bi in enumerate(sel):
+            r = batch[bi]
+            resp = Response(
+                id=r.id, indices=idx[j][valid[j]], sq_dists=sq[j][valid[j]],
+                truncated=bool(counts[j] > self.cfg.max_neighbors),
+                latency_ms=(now - r._t0) * 1e3)
+            with self._lock:
+                self._results[r.id] = resp

@@ -1,0 +1,74 @@
+"""`hypothesis` if available, else a tiny deterministic fallback.
+
+The property tests are written against hypothesis, but minimal environments
+(the baked CI image among them) don't ship it.  The fallback replays each
+``@given`` test a fixed number of times with seeded pseudo-random draws — far
+weaker than hypothesis' shrinking search, but it keeps every property test
+collectable and meaningful everywhere.  Import from here instead of
+``hypothesis`` directly:
+
+    from _hyp_compat import given, settings, st
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import zlib
+
+    import numpy as _np
+
+    _MAX_EXAMPLES = 10  # fallback cap, whatever settings() asks for
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example_from(self, rng):
+            return self._draw(rng)
+
+    class st:  # noqa: N801 - mirrors `strategies as st`
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def sampled_from(elements):
+            opts = list(elements)
+            return _Strategy(lambda rng: opts[int(rng.integers(0, len(opts)))])
+
+    def given(**strats):
+        def deco(fn):
+            seed0 = zlib.crc32(fn.__name__.encode())
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kw):
+                n = min(getattr(wrapper, "_max_examples", _MAX_EXAMPLES),
+                        _MAX_EXAMPLES)
+                for ex in range(n):
+                    rng = _np.random.default_rng((seed0, ex))
+                    drawn = {k: s.example_from(rng) for k, s in strats.items()}
+                    fn(*args, **drawn, **kw)
+
+            # pytest must not see the drawn parameters as fixtures
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco
+
+    def settings(max_examples=None, deadline=None, **_ignored):
+        def deco(fn):
+            if max_examples is not None:
+                fn._max_examples = max_examples
+            return fn
+
+        return deco

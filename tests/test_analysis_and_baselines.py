@@ -1,7 +1,7 @@
 """HLO collective parser, kd-tree/grid baselines, numerics (paper §4),
 neighbor sampler properties."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.core import BruteForce1, BruteForce2, GridIndex, KDTree
 from repro.launch.hlo_analysis import Roofline, collective_bytes

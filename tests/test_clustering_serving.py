@@ -1,7 +1,7 @@
 """DBSCAN equivalence across backends + NMI + the serving layer."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.configs.snn_default import SNNConfig
 from repro.core.dbscan import dbscan, normalized_mutual_information as nmi

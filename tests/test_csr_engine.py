@@ -1,0 +1,147 @@
+"""Two-pass exact CSR engine: equivalence to the host Algorithm-2 oracle.
+
+`query_radius_csr` (pass-1 count + prefix sum + pass-2 Pallas compaction, run
+in interpret mode here) must return bit-identical index sequences and matching
+distances to `query_radius_batch` — across metrics, block-misaligned n,
+empty-result queries and both kernel/oracle dispatches.
+"""
+import numpy as np
+import pytest
+from _hyp_compat import given, settings, st
+
+from repro.core import (build_index, query_radius_batch, query_radius_csr)
+from repro.core.sharded import prepare_query_arrays
+from repro.kernels import ops, ref
+from repro.kernels.snn_query import snn_compact, snn_count
+
+
+def _assert_csr_matches_batch(index, q, radius, csr, atol=1e-5):
+    want = query_radius_batch(index, q, radius)
+    assert csr.m == q.shape[0]
+    assert csr.indptr[0] == 0 and csr.nnz == sum(len(i) for i, _ in want)
+    for i in range(csr.m):
+        wi, wd = want[i]
+        gi, gd = csr.row(i)
+        # bit-identical ids in identical (ascending sorted-db) order
+        assert gi.tolist() == wi.tolist(), i
+        np.testing.assert_allclose(gd, wd, atol=atol)
+
+
+# derandomize: the engine evaluates its radius test on f32 inputs while the
+# host oracle keeps the threshold in f64 — for a fresh random draw a pair
+# sitting exactly between the two thresholds could (measure-zero but nonzero)
+# split the paths, and exact-equality assertions must not be flaky in CI.
+@settings(max_examples=10, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 700),
+       rscale=st.floats(0.2, 2.0),
+       metric=st.sampled_from(["euclidean", "cosine", "angular", "mips"]))
+def test_csr_matches_batch_property(seed, n, rscale, metric):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, 7)).astype(np.float32) + 0.1
+    q = rng.normal(size=(9, 7)).astype(np.float32) + 0.1
+    radius = {"euclidean": 1.5 * rscale, "cosine": 0.3 * rscale,
+              "angular": 0.6 * rscale, "mips": rscale}[metric]
+    index = build_index(x, metric=metric)
+    for use_pallas in (False, True):  # jnp oracle and interpret-mode kernels
+        csr = query_radius_csr(index, q, radius, block=128, query_tile=64,
+                               use_pallas=use_pallas)
+        _assert_csr_matches_batch(index, q, radius, csr)
+
+
+@pytest.mark.parametrize("n", [1, 127, 128, 129, 513])  # not block multiples
+def test_csr_block_misaligned_n(n):
+    rng = np.random.default_rng(n)
+    x = rng.normal(size=(n, 5)).astype(np.float32)
+    q = rng.normal(size=(6, 5)).astype(np.float32)
+    index = build_index(x)
+    csr = query_radius_csr(index, q, 2.0, block=128, query_tile=64,
+                           use_pallas=True)
+    _assert_csr_matches_batch(index, q, 2.0, csr)
+
+
+def test_csr_empty_results_and_mixed():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(300, 6)).astype(np.float32)
+    # half the queries are far away -> empty rows interleaved with full ones
+    q = np.concatenate([rng.normal(size=(5, 6)), 100.0 + rng.normal(size=(5, 6))],
+                       0).astype(np.float32)[np.argsort(rng.random(10))]
+    index = build_index(x)
+    csr = query_radius_csr(index, q, 2.0, block=128, query_tile=64,
+                           use_pallas=True)
+    _assert_csr_matches_batch(index, q, 2.0, csr)
+    assert any(len(csr.row(i)[0]) == 0 for i in range(10))
+    assert any(len(csr.row(i)[0]) > 0 for i in range(10))
+
+
+def test_csr_all_empty():
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(100, 4)).astype(np.float32)
+    index = build_index(x)
+    q = (100.0 + rng.normal(size=(3, 4))).astype(np.float32)
+    for use_pallas in (False, True):
+        csr = query_radius_csr(index, q, 0.5, use_pallas=use_pallas)
+        assert csr.nnz == 0 and csr.m == 3
+        assert csr.indices.size == 0 and csr.distances.size == 0
+
+
+def test_csr_whole_database_radius():
+    """Huge radius: every CSR row is the full database."""
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(150, 5)).astype(np.float32)
+    index = build_index(x)
+    q = rng.normal(size=(4, 5)).astype(np.float32)
+    csr = query_radius_csr(index, q, 1e6, block=128, query_tile=64,
+                           use_pallas=True)
+    assert csr.nnz == 4 * 150
+    for i in range(4):
+        assert sorted(csr.row(i)[0].tolist()) == list(range(150))
+
+
+def test_csr_native_false_returns_sq_euclidean():
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(200, 6)).astype(np.float32)
+    q = rng.normal(size=(5, 6)).astype(np.float32)
+    index = build_index(x)
+    sq = query_radius_csr(index, q, 2.0, native=False)
+    nat = query_radius_csr(index, q, 2.0)
+    np.testing.assert_allclose(np.sqrt(sq.distances), nat.distances, atol=1e-6)
+
+
+def _compact_args(seed, n, d, m, radius, tq=64, bn=128):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    q = rng.normal(size=(m, d)).astype(np.float32)
+    index = build_index(x)
+    xs, al, hn, _, _ = ops.pad_database(index.xs, index.alphas,
+                                        index.half_norms, bn=bn)
+    xq, aq, r, th = prepare_query_arrays(index, q, radius)
+    qp, aqp, rp, thp, _ = ops.pad_queries(
+        np.asarray(xq), np.asarray(aq), np.asarray(r), np.asarray(th), tq=tq)
+    cnt = np.asarray(snn_count(qp, aqp, rp, thp, xs, al, hn,
+                               tq=tq, bn=bn, interpret=True))[:m]
+    indptr = np.concatenate([[0], np.cumsum(cnt)]).astype(np.int64)
+    total = int(indptr[-1])
+    cap = ops.csr_capacity(total)
+    import jax.numpy as jnp
+    off = jnp.asarray(np.concatenate(
+        [indptr[:-1], np.full(qp.shape[0] - m, total)]).astype(np.int32))
+    return (qp, aqp, rp, thp, off, xs, al, hn), cap
+
+
+@pytest.mark.parametrize("n,d,m,radius", [(700, 12, 23, 2.0), (129, 5, 7, 1.0),
+                                          (1024, 40, 64, 3.5)])
+def test_compact_kernel_matches_ref(n, d, m, radius):
+    """Interpret-mode Pallas compaction == jnp scatter oracle, slot for slot."""
+    args, cap = _compact_args(0, n, d, m, radius)
+    ik, dk = snn_compact(*args, nnz=cap, tq=64, bn=128, interpret=True)
+    ir, dr = ref.snn_compact_ref(*args, nnz=cap)
+    assert np.asarray(ik).tolist() == np.asarray(ir).tolist()
+    np.testing.assert_allclose(np.asarray(dk), np.asarray(dr), rtol=1e-6)
+
+
+def test_csr_capacity_bucketing():
+    assert ops.csr_capacity(0) == 128
+    assert ops.csr_capacity(127) == 128
+    assert ops.csr_capacity(128) == 256     # +1 trash slot forces next bucket
+    assert ops.csr_capacity(1000) == 1024
+    assert ops.csr_capacity(1024) == 2048

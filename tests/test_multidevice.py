@@ -2,11 +2,14 @@
 (XLA_FLAGS is process-global, so these cannot run in the main pytest
 process — the brief requires tests to see 1 device by default)."""
 import json
+import os
 import subprocess
 import sys
 import textwrap
 
 import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 HEADER = """
 import os
@@ -23,7 +26,7 @@ assert len(jax.devices()) == 8
 def run_sub(body: str) -> dict:
     code = HEADER + textwrap.dedent(body)
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, cwd="/root/repo", timeout=600)
+                         text=True, cwd=REPO_ROOT, timeout=600)
     assert out.returncode == 0, out.stderr[-3000:]
     return json.loads(out.stdout.strip().splitlines()[-1])
 
@@ -52,6 +55,42 @@ def test_sharded_snn_matches_host_exact():
     print(json.dumps({"ok_counts": ok_counts, "ok_sets": ok_sets}))
     """)
     assert res["ok_counts"] and res["ok_sets"]
+
+
+def test_sharded_csr_matches_host_exact():
+    """Two-pass CSR engine over 8 shards == host Algorithm 2, bit-identical."""
+    res = run_sub("""
+    from repro.core import snn, sharded, query_radius_batch
+    rng = np.random.default_rng(1)
+    x = rng.normal(size=(4096, 12)).astype(np.float32)
+    q = rng.normal(size=(33, 12)).astype(np.float32)
+    index = snn.build_index(x)
+    mesh = jax.make_mesh((8,), ("data",))
+    csr = sharded.query_radius_csr_sharded(index, mesh, q, 3.0, block=64,
+                                           query_tile=64)
+    single = snn.query_radius_csr(index, q, 3.0, block=64, query_tile=64)
+    want = query_radius_batch(index, q, 3.0)
+    ok_single = bool((csr.indptr == single.indptr).all()
+                     and (csr.indices == single.indices).all())
+    # mesh-native pass-1 (shard_map) agrees with the engine's row sizes
+    xs, al, hn, od = sharded.shard_index(index, mesh, block=64)
+    xq, aq, r, th = sharded.prepare_query_arrays(index, q, 3.0)
+    per = np.asarray(sharded.make_sharded_percount_fn(mesh)(
+        xs, al, hn, xq, aq, r, th))
+    ok_percount = bool((per.sum(0) == np.diff(csr.indptr)).all())
+    ok_host, ok_dist = True, True
+    for i in range(33):
+        wi, wd = want[i]
+        gi, gd = csr.row(i)
+        ok_host = ok_host and gi.tolist() == wi.tolist()
+        ok_dist = ok_dist and bool(np.allclose(gd, wd, atol=1e-5))
+    print(json.dumps({"ok_single": ok_single, "ok_host": ok_host,
+                      "ok_dist": ok_dist, "ok_percount": ok_percount,
+                      "nnz": int(csr.nnz)}))
+    """)
+    assert res["ok_single"] and res["ok_host"] and res["ok_dist"]
+    assert res["ok_percount"]
+    assert res["nnz"] > 0
 
 
 def test_dp_training_matches_single_device():

@@ -2,7 +2,7 @@
 every metric, radius, dimension and data distribution (paper's core claim)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st
 
 from repro.core import (BruteForce1, build_index, query_counts, query_radius,
                         query_radius_batch, query_radius_fixed)
