@@ -1,0 +1,117 @@
+"""Streaming (LSM) index vs full rebuild: append throughput + query latency.
+
+The workload the paper's §1.4 "flexibility" claim describes: a served index
+absorbing a stream of append batches while answering radius queries.  Two
+ways to absorb a batch:
+
+* ``rebuild``   — `build_index` over the concatenated data (the old
+  `SNNServer.rebuild` path): re-center, re-run power iteration, re-sort
+  everything, O(n log n) per batch;
+* ``streaming`` — `StreamingSNNIndex.append`: project the batch onto the
+  frozen base mu/v1, sort only the batch into a delta segment,
+  O(b log b + segments), with size-ratio-triggered merges.
+
+Queries run through the unified CSR engine in both cases, and each cell
+cross-checks that the streaming index's neighbor sets match a fresh index
+built from scratch (exactness is never traded for speed).  Rows follow the
+``name,us_per_call,derived`` CSV contract and everything is collected into
+``BENCH_streaming.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import StreamingSNNIndex, build_index, query_radius_csr
+from repro.data.pipeline import make_uniform
+
+from .common import row, timeit
+
+OUT_JSON = "BENCH_streaming.json"
+
+
+def _one_cell(n0: int, d: int, batch: int, nbatches: int, radius: float,
+              record: list) -> dict:
+    x0 = make_uniform(n0, d, seed=0)
+    stream_batches = [make_uniform(batch, d, seed=10 + i)
+                      for i in range(nbatches)]
+    tag = f"n{n0}/d{d}/b{batch}x{nbatches}"
+
+    # ---- streaming appends -------------------------------------------------
+    stream = StreamingSNNIndex(x0)
+    t0 = time.perf_counter()
+    for b in stream_batches:
+        stream.append(b)
+    t_stream = time.perf_counter() - t0
+    record.append(row(f"streaming/append/{tag}", t_stream / nbatches,
+                      f"segments={len(stream.parts)}"))
+
+    # ---- full-rebuild appends (the old serving update path) ---------------
+    data = x0
+    t0 = time.perf_counter()
+    for b in stream_batches:
+        data = np.concatenate([data, b])
+        index = build_index(data)
+    t_rebuild = time.perf_counter() - t0
+    record.append(row(f"streaming/rebuild/{tag}", t_rebuild / nbatches,
+                      f"n_final={data.shape[0]}"))
+
+    # ---- query latency on the resulting indexes ---------------------------
+    q = make_uniform(128, d, seed=99)
+    t_q_stream = timeit(stream.query_radius_csr, q, radius,
+                        return_distance=False, repeat=2)
+    record.append(row(f"streaming/query_multiseg/{tag}", t_q_stream,
+                      f"segments={len(stream.parts)}"))
+    t_q_fresh = timeit(query_radius_csr, index, q, radius,
+                       return_distance=False, repeat=2)
+    record.append(row(f"streaming/query_fresh/{tag}", t_q_fresh, ""))
+
+    # ---- exactness cross-check (sets, row by row) -------------------------
+    got = stream.query_radius_csr(q, radius, return_distance=False)
+    want = query_radius_csr(index, q, radius, return_distance=False)
+    assert all(sorted(got.row(i).tolist()) == sorted(want.row(i).tolist())
+               for i in range(got.m)), "streaming result mismatch"
+
+    return {
+        "n0": n0, "d": d, "batch": batch, "nbatches": nbatches,
+        "radius": radius, "segments_final": len(stream.parts),
+        "append_us_per_batch": {"streaming": t_stream / nbatches * 1e6,
+                                "rebuild": t_rebuild / nbatches * 1e6},
+        "append_speedup": t_rebuild / max(t_stream, 1e-12),
+        "query_us": {"multiseg": t_q_stream * 1e6, "fresh": t_q_fresh * 1e6},
+        "nnz_checked": int(got.nnz),
+    }
+
+
+def run(full: bool = False, out_json: str = OUT_JSON):
+    rows: list[str] = []
+    cells: list[dict] = []
+    d = 16
+    grid = ([(20_000, 512, 8), (50_000, 1024, 8)] if not full
+            else [(100_000, 1024, 16), (250_000, 4096, 16),
+                  (1_000_000, 8192, 8)])
+    radius = 0.8
+    for n0, batch, nbatches in grid:
+        cells.append(_one_cell(n0, d, batch, nbatches, radius, rows))
+    import jax
+
+    payload = {
+        "benchmark": "streaming",
+        "backend": jax.default_backend(),
+        "full": full,
+        "grid": {"d": d, "cells": [{"n0": a, "batch": b, "nbatches": c}
+                                   for a, b, c in grid], "radius": radius},
+        "cells": cells,
+    }
+    with open(out_json, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {os.path.abspath(out_json)}", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -14,12 +14,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma list: fig2,fig3,table45,table7,theory,roofline,csr")
+                    help="comma list: fig2,fig3,table45,table7,theory,"
+                         "roofline,csr,streaming")
     args = ap.parse_args()
 
     from . import (bench_csr_engine, bench_fig2_synthetic, bench_fig3_grid,
-                   bench_roofline, bench_table45_realworld, bench_table7_dbscan,
-                   bench_theory)
+                   bench_roofline, bench_streaming, bench_table45_realworld,
+                   bench_table7_dbscan, bench_theory)
     suites = {
         "fig2": bench_fig2_synthetic.run,
         "fig3": bench_fig3_grid.run,
@@ -28,6 +29,7 @@ def main() -> None:
         "theory": bench_theory.run,
         "roofline": bench_roofline.run,
         "csr": bench_csr_engine.run,
+        "streaming": bench_streaming.run,
     }
     selected = args.only.split(",") if args.only else list(suites)
     unknown = [s for s in selected if s not in suites]

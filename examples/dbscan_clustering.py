@@ -5,7 +5,6 @@ Run:  PYTHONPATH=src python examples/dbscan_clustering.py
 """
 import time
 
-import numpy as np
 
 from repro.core.dbscan import dbscan, normalized_mutual_information as nmi
 from repro.data.pipeline import make_blobs

@@ -43,6 +43,18 @@ def main():
     assert all(set(a.tolist()) == set(b.tolist()) for a, b in zip(got, want))
     print("exactness vs brute force: OK")
 
+    # ---- streaming appends (LSM deltas on frozen mu/v1; exact) ----
+    from repro.core import StreamingSNNIndex
+    stream = StreamingSNNIndex(x)
+    stream.append(make_uniform(2_000, 16, seed=3))     # O(b log b), no re-index
+    scsr = stream.query_radius_csr(qs[:16], 0.4, return_distance=False)
+    fresh = build_index(stream.raw)
+    swant = query_radius_batch(fresh, qs[:16], 0.4, return_distance=False)
+    assert all(sorted(scsr.row(i).tolist()) == sorted(w.tolist())
+               for i, w in enumerate(swant))
+    print(f"streaming: {stream.n} points in {len(stream.parts)} segments, "
+          f"appends exact vs fresh index: OK")
+
     # ---- other metrics ----
     for metric, radius in [("cosine", 0.25), ("angular", 0.7), ("mips", 4.2)]:
         im = build_index(x, metric=metric)

@@ -20,6 +20,13 @@ class SNNConfig:
     serve_timeout_ms: float = 2.0   # batching window
     serve_exact: bool = True        # two-pass CSR engine (exact, untruncated);
                                     # False restores the fixed-shape top-K path
+    # streaming (LSM) index: appends become sorted delta segments on frozen
+    # mu/v1; deltas merge into the base past delta_merge_ratio × base rows or
+    # max_delta_segments; a full re-index (fresh mu/v1/xi) only happens once
+    # the database grows rebuild_ratio × beyond its last full build
+    delta_merge_ratio: float = 0.25
+    max_delta_segments: int = 4
+    rebuild_ratio: float = 4.0
 
 
 DEFAULT = SNNConfig()

@@ -9,6 +9,8 @@ from .snn import (  # noqa: F401
     query_counts,
     query_radius_fixed,
 )
+from .engine import Segment, make_segment, segment_from_index  # noqa: F401
+from .streaming import StreamingSNNIndex, merge_sorted_indexes  # noqa: F401
 from .baselines import BruteForce1, BruteForce2, KDTree, GridIndex  # noqa: F401
 from .dbscan import dbscan, normalized_mutual_information  # noqa: F401
 from . import metrics  # noqa: F401

@@ -17,6 +17,17 @@ def _neighbor_lists(x: np.ndarray, eps: float, backend: str):
     if backend == "snn":
         index = _snn.build_index(x)
         return _snn.query_radius_batch(index, x, eps, return_distance=False)
+    if backend == "snn-csr":
+        # the two-pass device engine; row order matches the host path exactly.
+        # Queries go in chunks: off-TPU the engine's oracle path materializes
+        # a dense (m, n) filter, so one all-points batch would be O(n^2)
+        index = _snn.build_index(x)
+        out: list = []
+        for s in range(0, x.shape[0], 2048):
+            csr = _snn.query_radius_csr(index, x[s:s + 2048], eps,
+                                        return_distance=False)
+            out.extend(csr.row(i) for i in range(csr.m))
+        return out
     if backend == "brute":
         return BruteForce2(x).query_radius(x, eps)
     if backend == "kdtree":
@@ -29,7 +40,9 @@ def dbscan(x: np.ndarray, eps: float, min_samples: int = 5,
     """Cluster ``x``; returns labels (n,), noise = -1.
 
     The region queries (the hot loop) are batched through the chosen backend —
-    with ``backend='snn'`` this is exactly the paper's DBSCAN+SNN combination.
+    with ``backend='snn'`` this is exactly the paper's DBSCAN+SNN combination;
+    ``backend='snn-csr'`` answers them through the two-pass CSR device engine
+    (identical labels, device-resident hot loop on TPU).
     """
     x = np.asarray(x, dtype=np.float32)
     n = x.shape[0]

@@ -1,0 +1,219 @@
+"""Unified multi-segment CSR execution engine.
+
+A *segment* is any contiguous sorted run of database rows — a whole index,
+one mesh shard's slice, or an LSM delta of a streaming index are all the
+same thing here.  The engine runs the ONE two-pass exact CSR orchestration
+shared by every device path:
+
+1. **pass 1 — count**: per-segment, per-query survivor counts via
+   ``kernels.snn_count`` (or one cached dense-filter evaluation on the
+   oracle path), giving a (S, m) matrix;
+2. **host prefix sums**: summing over segments yields the global CSR
+   ``indptr``; an *exclusive* prefix over the segment axis yields each
+   segment's per-query write base — segment k's survivors of query i land
+   in slots ``indptr[i] + sum(per[:k, i])``;
+3. **pass 2 — compact**: per-segment ``kernels.snn_compact`` scatters
+   survivors into disjoint slots of one shared flat array.
+
+Disjointness only needs each segment to be internally sorted by alpha (the
+kernels emit survivors in ascending local order) — segments may overlap in
+alpha range.  When they don't overlap (single index, mesh shards), the flat
+result is additionally in globally ascending sorted order, bit-identical to
+the host oracle ``query_radius_batch``.
+
+Both passes must see bit-identical float32 predicate inputs: a ULP-level
+disagreement between differently-compiled filters would corrupt the scatter
+layout (a final ``>= 0`` check fails loudly).  Segments whose alpha range
+cannot intersect any query window are skipped entirely (zero kernel
+launches), which is what makes many-segment streaming indexes and
+mostly-padding shards cheap.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops as _ops
+
+# Padding rows carry alpha = half_norm = +BIG; anything above this threshold
+# is sentinel, not data (used when recovering a segment's real alpha range).
+_REAL = _ops.BIG / 2
+
+
+@dataclasses.dataclass
+class Segment:
+    """One contiguous alpha-sorted run, padded and device-resident.
+
+    Attributes:
+      xs, alphas, half_norms: padded device arrays (rows to a block multiple
+        with +BIG sentinels, features to the 128-lane multiple).
+      ids:      (n,) original row ids for local sorted positions; sentinel
+        rows inside ``n`` (pre-padded shard slices) carry -1 and can never
+        survive the predicate, so they are never read.
+      alpha_lo/alpha_hi: range of the *real* alphas — the segment-level
+        window prune (lo > hi for an all-sentinel segment: always skipped).
+      block:    row-block size the arrays were padded to (the kernel ``bn``).
+    """
+
+    xs: jnp.ndarray
+    alphas: jnp.ndarray
+    half_norms: jnp.ndarray
+    ids: np.ndarray
+    alpha_lo: float
+    alpha_hi: float
+    block: int
+
+    @property
+    def n(self) -> int:
+        return self.ids.shape[0]
+
+
+def make_segment(xs, alphas, half_norms, ids, *, block: int = 512) -> Segment:
+    """Pad one sorted run for the kernels and record its real alpha range."""
+    alphas = np.asarray(alphas)
+    xs_p, al_p, hn_p, _, _ = _ops.pad_database(xs, alphas, half_norms, bn=block)
+    real = alphas[alphas < _REAL]
+    lo = float(real[0]) if real.size else float("inf")
+    hi = float(real[-1]) if real.size else float("-inf")
+    return Segment(xs_p, al_p, hn_p, np.asarray(ids, np.int64), lo, hi, block)
+
+
+def segment_from_index(index, *, block: int = 512) -> Segment:
+    """The whole of one `SNNIndex` (or index-shaped object) as a segment."""
+    return make_segment(index.xs, index.alphas, index.half_norms, index.order,
+                        block=block)
+
+
+def _window_may_hit(seg: Segment, aq: np.ndarray, r: np.ndarray) -> bool:
+    """Conservative host-side test: can ANY query window touch this segment?
+
+    The kernels evaluate ``|alpha - aq| <= r`` in float32; a few-ULP slack on
+    the float64 host comparison guarantees skipping never drops a pair the
+    kernel would keep.
+    """
+    if seg.alpha_lo > seg.alpha_hi or aq.size == 0:
+        return False
+    slack = 1e-6 * (np.abs(aq) + np.abs(r)
+                    + max(abs(seg.alpha_lo), abs(seg.alpha_hi)) + 1.0)
+    return bool(np.any((aq + r + slack >= seg.alpha_lo)
+                       & (aq - r - slack <= seg.alpha_hi)))
+
+
+def run_csr(
+    segments: list[Segment],
+    qp, aqp, rp, thp,
+    m: int,
+    *,
+    query_tile: int = 128,
+    use_pallas: bool | None = None,
+):
+    """The two-pass orchestration over padded queries and segments.
+
+    Args:
+      segments: alpha-sorted runs (see `Segment`); need not be disjoint.
+      qp/aqp/rp/thp: `kernels.ops.pad_queries` outputs.
+      m: real (unpadded) query count.
+
+    Returns ``(indptr (m+1,) int64, counts (m,) int64, flat_ids (nnz,) int64,
+    flat_dh (nnz,) float32)`` where ``flat_ids`` are original row ids in
+    segment-major, locally-ascending order.
+    """
+    if use_pallas is None:
+        use_pallas = _ops.on_tpu()
+    aq64 = np.asarray(aqp, np.float64)[:m]
+    r64 = np.asarray(rp, np.float64)[:m]
+
+    # ---- pass 1: per-segment counts --------------------------------------
+    per = np.zeros((len(segments), m), np.int64)
+    cached: list[np.ndarray | None] = [None] * len(segments)
+    live: list[int] = []
+    for k, seg in enumerate(segments):
+        if not _window_may_hit(seg, aq64, r64):
+            continue
+        live.append(k)
+        if use_pallas:
+            per[k] = np.asarray(_ops.snn_count(
+                qp, aqp, rp, thp, seg.xs, seg.alphas, seg.half_norms,
+                tq=query_tile, bn=seg.block, use_pallas=True))[:m]
+        else:
+            # Oracle fast path: one dense filter feeds BOTH passes (counts
+            # and scatter); np.nonzero's row-major order IS the CSR order.
+            dh = np.asarray(_ops.snn_filter(
+                qp, aqp, rp, thp, seg.xs, seg.alphas, seg.half_norms,
+                use_pallas=False))[:m]
+            cached[k] = dh
+            per[k] = (dh < _ops.BIG).sum(axis=1)
+
+    # ---- host prefix sums: global indptr + per-segment write bases -------
+    counts = per.sum(axis=0)
+    indptr = np.zeros(m + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    total = int(indptr[-1])
+    if total == 0:
+        return indptr, counts, np.zeros(0, np.int64), np.zeros(0, np.float32)
+    seg_base = np.cumsum(per, axis=0) - per  # exclusive prefix over segments
+
+    # ---- pass 2: per-segment compaction into disjoint flat slots ---------
+    cap = _ops.csr_capacity(total)
+    flat_ids = np.full(cap, -1, np.int64)
+    flat_dh = np.full(cap, np.float32(_ops.BIG), np.float32)
+    off_pad = np.full(qp.shape[0] - m, total, np.int64)  # padding queries
+    for k in live:
+        if not per[k].any():
+            continue
+        seg = segments[k]
+        if use_pallas:
+            off_k = jnp.asarray(np.concatenate(
+                [indptr[:-1] + seg_base[k], off_pad]).astype(np.int32))
+            fi, fd = _ops.snn_compact(
+                qp, aqp, rp, thp, off_k, seg.xs, seg.alphas, seg.half_norms,
+                nnz=cap, tq=query_tile, bn=seg.block, use_pallas=True)
+            fi = np.asarray(fi)
+            written = fi >= 0
+            flat_ids[written] = seg.ids[fi[written]]
+            flat_dh[written] = np.asarray(fd)[written]
+        else:
+            dh = cached[k]
+            keep = dh < _ops.BIG
+            rows, cols = np.nonzero(keep)
+            within = (np.cumsum(keep, axis=1) - 1)[rows, cols]
+            slots = indptr[rows] + seg_base[k][rows] + within
+            flat_ids[slots] = seg.ids[cols]
+            flat_dh[slots] = dh[rows, cols]
+    # both passes ran the same predicate pipeline, so every slot is written;
+    # a -1 would silently alias a wrong row, so fail loudly (not an assert:
+    # it must survive python -O)
+    if not (flat_ids[:total] >= 0).all():
+        raise RuntimeError("CSR pass-1/pass-2 disagreement")
+    return indptr, counts, flat_ids[:total], flat_dh[:total]
+
+
+def query_csr(
+    index,
+    segments: list[Segment],
+    q: np.ndarray,
+    radius,
+    return_distance: bool = True,
+    *,
+    query_tile: int = 128,
+    use_pallas: bool | None = None,
+    native: bool = True,
+):
+    """Full CSR query over ``segments``: predicates from ``index`` (the owner
+    of mu/v1/metric/xi), then `run_csr`, then distance finalization.
+
+    This is the single entry every front-end (single-device, sharded,
+    streaming, serving) routes through.
+    """
+    from . import snn as _snn  # deferred: snn imports this module lazily too
+
+    xq, aq, r, th, qsq = _snn.prepare_query_predicates(index, q, radius)
+    m = xq.shape[0]
+    qp, aqp, rp, thp, _ = _ops.pad_queries(xq, aq, r, th, tq=query_tile)
+    indptr, counts, ids, dh = run_csr(segments, qp, aqp, rp, thp, m,
+                                      query_tile=query_tile,
+                                      use_pallas=use_pallas)
+    return _snn.csr_finalize(index, indptr, ids, dh, xq, qsq, counts,
+                             return_distance, native)

@@ -30,11 +30,16 @@ def normalize_rows(a: np.ndarray, eps: float = 1e-30) -> np.ndarray:
     return a / np.maximum(nrm, eps)
 
 
-def lift_mips_data(p: np.ndarray) -> tuple[np.ndarray, float]:
-    """Lift data points for MIPS: ``p~ = [sqrt(xi^2 - ||p||^2), p]``."""
+def lift_mips_data(p: np.ndarray, xi: float | None = None) -> tuple[np.ndarray, float]:
+    """Lift data points for MIPS: ``p~ = [sqrt(xi^2 - ||p||^2), p]``.
+
+    ``xi`` defaults to the max data norm.  A *frozen* xi (streaming appends
+    against an existing index) keeps the lift identity valid as long as it is
+    >= every appended norm — callers must check and re-index otherwise.
+    """
     p = _as2d(p)
     sq = np.einsum("ij,ij->i", p, p)
-    xi2 = float(sq.max()) if p.shape[0] else 0.0
+    xi2 = (float(sq.max()) if p.shape[0] else 0.0) if xi is None else float(xi) ** 2
     extra = np.sqrt(np.maximum(xi2 - sq, 0.0))
     return np.concatenate([extra[:, None], p], axis=1), float(np.sqrt(xi2))
 
@@ -44,17 +49,20 @@ def lift_mips_query(q: np.ndarray) -> np.ndarray:
     return np.concatenate([np.zeros((q.shape[0], 1), q.dtype), q], axis=1)
 
 
-def transform_data(p: np.ndarray, metric: str) -> tuple[np.ndarray, float]:
+def transform_data(p: np.ndarray, metric: str,
+                   xi: float | None = None) -> tuple[np.ndarray, float]:
     """Map raw data into the Euclidean space used by the index.
 
-    Returns (transformed data, xi) where xi is only meaningful for mips.
+    Returns (transformed data, xi) where xi is only meaningful for mips; pass
+    a frozen ``xi`` to transform appended points consistently with an
+    existing mips index (only valid while it bounds every appended norm).
     """
     if metric == "euclidean":
         return _as2d(p), 0.0
     if metric in ("cosine", "angular"):
         return normalize_rows(p), 0.0
     if metric == "mips":
-        return lift_mips_data(p)
+        return lift_mips_data(p, xi)
     raise ValueError(f"unknown metric {metric!r}; valid: {VALID_METRICS}")
 
 

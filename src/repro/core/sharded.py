@@ -11,8 +11,6 @@ extraction stays a host-side operation, as in the single-device API.
 """
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -32,10 +30,12 @@ def _pad_for_shards(index: _snn.SNNIndex, nshards: int, block: int = 512):
     Returns (xs, alphas, half_norms, order, rows_per_shard); padding rows carry
     +BIG alpha / half-norm so they never match.
     """
+    from ..kernels.snn_query import BIG
+
     unit = nshards * block
     n, d = index.xs.shape
     npad = max((n + unit - 1) // unit, 1) * unit
-    big = np.float32(np.finfo(np.float32).max / 4)
+    big = np.float32(BIG)  # the one +BIG sentinel (kernels.snn_query.BIG)
     xs = np.concatenate([index.xs, np.zeros((npad - n, d), index.xs.dtype)], 0)
     al = np.concatenate([index.alphas, np.full(npad - n, big, np.float32)], 0)
     hn = np.concatenate([index.half_norms, np.full(npad - n, big, np.float32)], 0)
@@ -158,61 +158,34 @@ def query_radius_csr_sharded(
     the merged result is bit-identical to the single-device
     `query_radius_csr`.
 
-    Pass 1 (per-shard counts) runs `kernels.snn_count` on each shard's padded
-    slice — the SAME predicate pipeline pass 2 uses, which is load-bearing: a
-    ULP-level disagreement between differently-compiled float32 filters would
-    corrupt the scatter layout.  `make_sharded_percount_fn` (one shard_map
-    over the mesh) remains available for device-native counting, but its
-    `_local_filter` is a different XLA program, so it must not source scatter
-    offsets.  Both passes are host-orchestrated per shard here; the mesh
-    fixes the shard decomposition (device placement of each launch is a
-    deployment concern).
+    Each shard's padded slice becomes one `core.engine.Segment`; the engine
+    runs the ONE count → prefix-sum → compact orchestration (per-segment
+    `kernels.snn_count`, host prefix sums for the global `indptr` and the
+    per-shard write bases, per-segment `kernels.snn_compact` into disjoint
+    slots).  Both passes share the same compiled predicate pipeline, which is
+    load-bearing: a ULP-level disagreement between differently-compiled
+    float32 filters would corrupt the scatter layout.
+    `make_sharded_percount_fn` (one shard_map over the mesh) remains
+    available for device-native counting, but its `_local_filter` is a
+    different XLA program, so it must not source scatter offsets.  Both
+    passes are host-orchestrated per shard here; the mesh fixes the shard
+    decomposition (device placement of each launch is a deployment concern).
     """
-    from ..kernels import ops as _ops
+    from . import engine as _engine
 
     nshards = _axis_size(mesh, axis)
-    xs_h, al_h, hn_h, _, n_per = _pad_for_shards(index, nshards, block)
-    xq, aq, r, th, qsq = _snn.prepare_query_predicates(index, q, radius)
-    m = xq.shape[0]
-    qp, aqp, rp, thp, _ = _ops.pad_queries(xq, aq, r, th, tq=query_tile)
+    xs_h, al_h, hn_h, od_h, n_per = _pad_for_shards(index, nshards, block)
     # per-shard padded slices: row padding is a no-op (n_per is a block
-    # multiple); this pads d to the 128-lane multiple to match the queries
-    shards = [_ops.pad_database(xs_h[k * n_per:(k + 1) * n_per],
-                                al_h[k * n_per:(k + 1) * n_per],
-                                hn_h[k * n_per:(k + 1) * n_per], bn=block)[:3]
-              for k in range(nshards)]
-    per = np.stack([np.asarray(_ops.snn_count(
-        qp, aqp, rp, thp, *sh, tq=query_tile, bn=block,
-        use_pallas=use_pallas))[:m] for sh in shards]).astype(np.int64)
-    counts = per.sum(axis=0)
-    indptr = np.zeros(m + 1, np.int64)
-    np.cumsum(counts, out=indptr[1:])
-    total = int(indptr[-1])
-    if total == 0:
-        return _snn.csr_finalize(index, indptr, np.zeros(0, np.int64),
-                                 np.zeros(0, np.float32), xq, qsq,
-                                 counts, return_distance, native)
-    shard_base = np.cumsum(per, axis=0) - per  # exclusive prefix over shards
-    cap = _ops.csr_capacity(total)
-    off_pad = np.full(qp.shape[0] - m, total, np.int64)
-    flat_idx = np.full(cap, -1, np.int64)
-    flat_dh = np.full(cap, np.float32(np.finfo(np.float32).max / 8), np.float32)
-    for k, sh in enumerate(shards):
-        off_k = jnp.asarray(np.concatenate(
-            [indptr[:-1] + shard_base[k], off_pad]).astype(np.int32))
-        fi, fd = _ops.snn_compact(
-            qp, aqp, rp, thp, off_k, *sh, nnz=cap,
-            tq=query_tile, bn=block, use_pallas=use_pallas)
-        fi = np.asarray(fi)
-        written = fi >= 0
-        flat_idx[written] = fi[written] + k * n_per
-        flat_dh[written] = np.asarray(fd)[written]
-    # both passes ran the same pipeline, so every slot must be written; fail
-    # loudly (not an assert: it must survive python -O)
-    if not (flat_idx[:total] >= 0).all():
-        raise RuntimeError("CSR pass-1/pass-2 disagreement")
-    return _snn.csr_finalize(index, indptr, flat_idx[:total], flat_dh[:total],
-                             xq, qsq, counts, return_distance, native)
+    # multiple); make_segment pads d to the 128-lane multiple to match queries
+    segments = [_engine.make_segment(xs_h[k * n_per:(k + 1) * n_per],
+                                     al_h[k * n_per:(k + 1) * n_per],
+                                     hn_h[k * n_per:(k + 1) * n_per],
+                                     od_h[k * n_per:(k + 1) * n_per],
+                                     block=block)
+                for k in range(nshards)]
+    return _engine.query_csr(index, segments, q, radius, return_distance,
+                             query_tile=query_tile, use_pallas=use_pallas,
+                             native=native)
 
 
 def prepare_query_arrays(index: _snn.SNNIndex, q: np.ndarray, radius):

@@ -9,11 +9,11 @@ Three query paths are provided:
 * the **fixed-shape path** (`query_radius_fixed`): jit-friendly block-pruned
   filter used on TPU; dense (m, n) intermediate and K-truncated output.
 * the **two-pass CSR path** (`query_radius_csr`): the device engine of record —
-  pass 1 counts neighbors per query (kernels/snn_query.snn_count), a host
-  prefix sum produces CSR row offsets, and pass 2 re-runs the block-pruned
-  filter and scatters survivors straight into the CSR arrays
-  (kernels/snn_query.snn_compact).  Exact variable-length results with peak
-  device memory O(total_neighbors + m) instead of O(m * n).
+  a thin single-segment front-end over `core.engine` (pass-1 count, host
+  prefix sum, pass-2 compaction scattering survivors straight into their CSR
+  slots).  Exact variable-length results with peak device memory
+  O(total_neighbors + m) instead of O(m * n).  The same engine serves the
+  sharded (`core.sharded`) and streaming (`core.streaming`) front-ends.
 
 The index is built with a jit-compiled power iteration for the first principal
 component.  Exactness of SNN never depends on the accuracy of v1 (any direction
@@ -216,22 +216,6 @@ def query_counts(index: SNNIndex, q: np.ndarray, radius, group_size: int = 64) -
 # --------------------------------------------------------------------------- #
 # Fixed-shape (jit / TPU) path                                                 #
 # --------------------------------------------------------------------------- #
-def pad_blocks(index: SNNIndex, block: int = 512):
-    """Pad the sorted database to a whole number of row blocks.
-
-    Padding rows get alpha=+inf and half_norm=+inf so they can never pass either
-    the window test or the distance test.  Returns device arrays.
-    """
-    n, d = index.xs.shape
-    nb = max((n + block - 1) // block, 1)
-    pad = nb * block - n
-    big = np.float32(np.finfo(np.float32).max / 4)
-    xs = np.concatenate([index.xs, np.zeros((pad, d), index.xs.dtype)], 0)
-    al = np.concatenate([index.alphas, np.full((pad,), big, index.alphas.dtype)], 0)
-    hn = np.concatenate([index.half_norms, np.full((pad,), big, index.half_norms.dtype)], 0)
-    return jnp.asarray(xs), jnp.asarray(al), jnp.asarray(hn), nb, pad
-
-
 @partial(jax.jit, static_argnames=("block",))
 def _blocked_filter(xs, alphas, half_norms, xq, aq, r, block: int):
     """Pure-jnp block-pruned filter; the oracle for kernels/snn_query.
@@ -258,10 +242,15 @@ def query_radius_fixed(index: SNNIndex, q: np.ndarray, radius, max_neighbors: in
     as the true neighbor count <= K; the count output lets callers detect
     truncation).  This is the API the serving layer and TPU path use.
     """
-    xs, al, hn, nb, _ = pad_blocks(index, block)
+    from ..kernels import ops as _ops
+
+    # one padding contract for every path: rows to a block multiple with the
+    # +BIG sentinel, features to the 128-lane multiple (zeros: dot-neutral)
+    xs, al, hn, _, d = _ops.pad_database(index.xs, index.alphas,
+                                         index.half_norms, bn=block)
     xq, r = index.prepare_queries(q, radius)
-    xq = jnp.asarray(xq)
-    aq = xq @ jnp.asarray(index.v1)
+    xq = jnp.asarray(np.pad(xq, ((0, 0), (0, xs.shape[1] - d))))
+    aq = xq @ jnp.asarray(np.pad(index.v1, (0, xs.shape[1] - d)))
     rj = jnp.asarray(r, xq.dtype)
     dhalf = _blocked_filter(xs, al, hn, xq, aq, rj, block)
     big = jnp.finfo(dhalf.dtype).max / 8
@@ -359,74 +348,38 @@ def query_radius_csr(
 ) -> CSRNeighbors:
     """Exact device radius query with CSR output (two passes, no (m, n) array).
 
-    Pass 1 (`kernels.snn_count`) produces per-query neighbor counts; the host
-    prefix-sums them into CSR row offsets; pass 2 (`kernels.snn_compact`)
-    re-runs the identical block-pruned filter and scatters each survivor into
-    its final CSR slot.  Both passes see the same window + half-norm tests on
-    the same float32 inputs, so pass-2 survivors are exactly the pass-1 counted
-    points and every CSR row is filled completely — no truncation, no recount.
+    A single-segment front-end over `core.engine`: pass 1 produces per-query
+    neighbor counts, the host prefix-sums them into CSR row offsets, and pass
+    2 re-runs the identical block-pruned filter and scatters each survivor
+    into its final CSR slot.  Both passes see the same window + half-norm
+    tests on the same float32 inputs, so pass-2 survivors are exactly the
+    pass-1 counted points and every CSR row is filled completely — no
+    truncation, no recount.
 
     ``use_pallas=None`` dispatches to the Pallas kernels on TPU; elsewhere a
     single dense-filter evaluation feeds both passes (correctness reference,
     not the memory story; pass ``use_pallas=True`` off-TPU to force the
     kernels through interpret mode).
     """
-    from ..kernels import ops as _ops
+    from . import engine as _engine
 
-    if use_pallas is None:
-        use_pallas = _ops.on_tpu()
-    xq, aq, r, thresh, qsq = prepare_query_predicates(index, q, radius)
-    m = xq.shape[0]
-    xs, al, hn, _, _ = _ops.pad_database(index.xs, index.alphas,
-                                         index.half_norms, bn=block)
-    qp, aqp, rp, thp, _ = _ops.pad_queries(xq, aq, r, thresh, tq=query_tile)
-    if not use_pallas:
-        # Oracle fast path: one dense filter feeds both passes (counts AND
-        # scatter); np.nonzero's row-major order IS the CSR order.
-        dh = np.asarray(_ops.snn_filter(qp, aqp, rp, thp, xs, al, hn,
-                                        use_pallas=False))[:m]
-        keep = dh < _ops.BIG
-        counts = keep.sum(axis=1).astype(np.int64)
-        indptr = np.zeros(m + 1, np.int64)
-        np.cumsum(counts, out=indptr[1:])
-        _, fi = np.nonzero(keep)
-        return csr_finalize(index, indptr, fi, dh[keep], xq, qsq, counts,
-                            return_distance, native)
-    counts = np.asarray(_ops.snn_count(
-        qp, aqp, rp, thp, xs, al, hn, tq=query_tile, bn=block,
-        use_pallas=True))[:m].astype(np.int64)
-    indptr = np.zeros(m + 1, np.int64)
-    np.cumsum(counts, out=indptr[1:])
-    total = int(indptr[-1])
-    if total == 0:
-        dist = np.zeros(0, np.float64) if return_distance else None
-        return CSRNeighbors(indptr, np.zeros(0, np.int64), dist)
-    cap = _ops.csr_capacity(total)
-    # padding queries keep nothing; park their offsets on a valid slot
-    off = jnp.asarray(np.concatenate(
-        [indptr[:-1], np.full(qp.shape[0] - m, total)]).astype(np.int32))
-    fi, fd = _ops.snn_compact(qp, aqp, rp, thp, off, xs, al, hn, nnz=cap,
-                              tq=query_tile, bn=block, use_pallas=True)
-    fi = np.asarray(fi)[:total]
-    # both passes ran the same predicate pipeline, so every slot is written;
-    # a -1 here would silently alias index.order[-1], so fail loudly (not an
-    # assert: it must survive python -O)
-    if not (fi >= 0).all():
-        raise RuntimeError("CSR pass-1/pass-2 disagreement")
-    return csr_finalize(index, indptr, fi, np.asarray(fd)[:total], xq, qsq,
-                        counts, return_distance, native)
+    seg = _engine.segment_from_index(index, block=block)
+    return _engine.query_csr(index, [seg], q, radius, return_distance,
+                             query_tile=query_tile, use_pallas=use_pallas,
+                             native=native)
 
 
-def csr_finalize(index: SNNIndex, indptr, fi, fd, xq, qsq, counts,
+def csr_finalize(index: SNNIndex, indptr, indices, fd, xq, qsq, counts,
                  return_distance: bool, native: bool = True) -> CSRNeighbors:
-    """Map flat sorted-row positions + dhalf values to a `CSRNeighbors`.
+    """Wrap flat original-id positions + dhalf values into a `CSRNeighbors`.
 
     ``native=False`` leaves distances as squared Euclidean in index space (the
     fixed-shape path's convention) instead of converting to the metric.
     """
-    indices = index.order[fi]
+    indices = np.asarray(indices, np.int64)
     if not return_distance:
         return CSRNeighbors(indptr, indices, None)
+    fd = np.asarray(fd)
     sq = np.maximum(2.0 * fd.astype(np.float64) + np.repeat(qsq, counts), 0.0)
     if not native:
         return CSRNeighbors(indptr, indices, sq)

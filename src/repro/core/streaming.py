@@ -1,0 +1,300 @@
+"""Streaming (LSM-style) SNN index: sublinear appends, exact queries.
+
+`SNNServer.rebuild`-style online updates used to re-center, re-run power
+iteration and re-sort the *entire* database per append.  This module keeps
+the paper's exactness while making appends O(b log b + segments) for a
+b-point batch:
+
+* the **base** index is a normal `snn.SNNIndex`;
+* an `append` projects the new points onto the base's *frozen* ``mu``/``v1``
+  and sorts only the batch, producing a small **delta** segment (itself an
+  `SNNIndex` sharing mu/v1/metric/xi, with `order` holding global row ids);
+* queries run the identical predicate pipeline across base + deltas through
+  `core.engine` (one count → prefix-sum → compact orchestration), so results
+  are exact and bit-identical *as neighbor sets* to a fresh index over the
+  concatenated data;
+* a size-ratio trigger merge-sorts the deltas into the base — a vectorized
+  two-pointer merge of already-sorted runs (two `searchsorted` calls + one
+  scatter, O(n + b log n)), no re-sort, no power iteration;
+* only when the database outgrows ``rebuild_ratio`` × its size at the last
+  full build does a real `build_index` run (fresh mu/v1/xi).
+
+Why frozen mu/v1 stays exact: the Cauchy–Schwarz window argument
+(`snn._window`, docs/architecture.md) holds for ANY fixed direction with
+``||v1|| <= 1`` and any fixed centering — accuracy of v1 only *tightens* the
+window, never the correctness.  The one genuinely global statistic is the
+mips lift's xi (max raw norm): appends that exceed it invalidate the lift,
+so they trigger an immediate full re-index.
+
+Thread-safety: writers (append/rebuild) serialize on a mutation lock and do
+all heavy work — batch transform/sort, delta merges, even full re-indexes —
+*outside* the short state lock, publishing an immutable ``(parts, segments)``
+snapshot tuple in one locked swap.  Queries read one snapshot and never
+observe a half-applied append, and they never wait on index construction:
+no serving gap even across a full rebuild.
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+
+from . import engine as _engine
+from . import metrics as _metrics
+from . import snn as _snn
+
+
+def merge_sorted_indexes(a: _snn.SNNIndex, b: _snn.SNNIndex) -> _snn.SNNIndex:
+    """Stable merge of two alpha-sorted runs sharing mu/v1/metric/xi.
+
+    O(n) scatter after two binary-search passes; ``a``'s rows precede equal-
+    alpha rows of ``b`` (append order, matching a stable re-sort).
+    """
+    na, nb = a.n, b.n
+    pos_a = np.arange(na) + np.searchsorted(b.alphas, a.alphas, side="left")
+    pos_b = np.arange(nb) + np.searchsorted(a.alphas, b.alphas, side="right")
+    n = na + nb
+    xs = np.empty((n, a.d), a.xs.dtype)
+    al = np.empty(n, a.alphas.dtype)
+    hn = np.empty(n, a.half_norms.dtype)
+    od = np.empty(n, np.int64)
+    for pos, src in ((pos_a, a), (pos_b, b)):
+        xs[pos] = src.xs
+        al[pos] = src.alphas
+        hn[pos] = src.half_norms
+        od[pos] = src.order
+    return _snn.SNNIndex(a.mu, a.v1, xs, al, hn, od, a.metric, a.xi)
+
+
+class StreamingSNNIndex:
+    """An SNN index that absorbs appends as LSM-style delta segments.
+
+    Exposes the same query surface as the module-level functions
+    (`query_radius_csr`, `query_radius_batch`, `query_radius_fixed`,
+    `query_counts`) evaluated over base + deltas; all of them are exact at
+    every moment of the append/merge/rebuild lifecycle.
+    """
+
+    def __init__(
+        self,
+        data: np.ndarray,
+        metric: str = "euclidean",
+        n_iter: int = 64,
+        block: int = 512,
+        delta_ratio: float = 0.25,
+        max_deltas: int = 4,
+        rebuild_ratio: float = 4.0,
+    ):
+        self.metric = metric
+        self.n_iter = n_iter
+        self.block = block
+        self.delta_ratio = float(delta_ratio)
+        self.max_deltas = int(max_deltas)
+        self.rebuild_ratio = float(rebuild_ratio)
+        # _mutate serializes writers for their whole (possibly heavy) run;
+        # _lock guards only the published state and is never held across work
+        self._mutate = threading.Lock()
+        self._lock = threading.Lock()
+        # raw rows as a list of chunks: append is O(1) in index size (the
+        # O(n) concatenation is deferred to the rare `raw` materialization)
+        self._raw_parts = [np.atleast_2d(np.asarray(data, np.float32)).copy()]
+        base = _snn.build_index(self._raw_parts[0], metric=metric,
+                                n_iter=n_iter)
+        self._n_at_build = base.n
+        # published snapshot: (parts, segments); parts[0] is the base and
+        # segments[i] is the lazily-built engine Segment for parts[i]
+        self._state: tuple[tuple[_snn.SNNIndex, ...],
+                           tuple[_engine.Segment | None, ...]] = ((base,), (None,))
+
+    # ------------------------------------------------------------ metadata
+    @property
+    def base(self) -> _snn.SNNIndex:
+        return self._state[0][0]
+
+    @property
+    def parts(self) -> tuple[_snn.SNNIndex, ...]:
+        """Current (base, *deltas) snapshot — read-only."""
+        return self._state[0]
+
+    @property
+    def n(self) -> int:
+        return sum(p.n for p in self._state[0])
+
+    @property
+    def d(self) -> int:
+        return self._raw_parts[0].shape[1]
+
+    @property
+    def raw(self) -> np.ndarray:
+        """All points in original (append) order (materialized lazily)."""
+        with self._lock:
+            if len(self._raw_parts) > 1:
+                self._raw_parts = [np.concatenate(self._raw_parts)]
+            return self._raw_parts[0]
+
+    # ------------------------------------------------------------- updates
+    def append(self, points: np.ndarray) -> None:
+        """Absorb a batch: O(b log b + segments) between compactions.
+
+        No power iteration and no full re-sort happen here; at most a linear
+        delta merge (size-ratio trigger) or — past ``rebuild_ratio`` growth or
+        a mips-lift overflow — one full re-index.  All of it runs outside the
+        state lock: concurrent queries keep answering against the previous
+        snapshot until the one-assignment publish.
+        """
+        # np.array copies: the delta must not alias a caller-mutable buffer
+        pts = np.array(points, dtype=np.float32, ndmin=2)
+        if pts.ndim != 2 or pts.shape[1] != self.d:
+            # reject BEFORE touching any state (and before the empty-batch
+            # return: a wrong-width batch is a bug even when it has no rows)
+            raise ValueError(f"append expects (b, {self.d}) points, "
+                             f"got {pts.shape}")
+        if pts.shape[0] == 0:
+            return
+        with self._mutate:
+            with self._lock:
+                parts = list(self._state[0])
+                self._raw_parts.append(pts)
+            base = parts[0]
+            start_id = sum(p.n for p in parts)
+            if base.n == 0:
+                # an empty base has no meaningful mu/v1 to freeze; the first
+                # real batch IS the build
+                self._full_rebuild()
+                return
+            if self.metric == "mips":
+                if float(np.einsum("ij,ij->i", pts, pts).max()) > base.xi**2:
+                    # the frozen lift cannot represent a larger-norm point
+                    self._full_rebuild()
+                    return
+            t, _ = _metrics.transform_data(pts, self.metric, xi=base.xi)
+            x = (t - base.mu[None, :]).astype(base.xs.dtype)
+            al = x @ base.v1
+            loc = np.argsort(al, kind="stable")
+            xs = np.ascontiguousarray(x[loc])
+            delta = _snn.SNNIndex(
+                base.mu, base.v1, xs,
+                np.ascontiguousarray(al[loc]),
+                0.5 * np.einsum("ij,ij->i", xs, xs),
+                (start_id + loc).astype(np.int64),
+                self.metric, base.xi)
+            parts.append(delta)
+            n_total = start_id + delta.n
+            if n_total >= self.rebuild_ratio * max(self._n_at_build, 1):
+                self._full_rebuild()
+                return
+            n_delta = sum(p.n for p in parts[1:])
+            if (len(parts) - 1 > self.max_deltas
+                    or n_delta > self.delta_ratio * max(base.n, 1)):
+                merged = parts[0]
+                for p in parts[1:]:
+                    merged = merge_sorted_indexes(merged, p)
+                with self._lock:
+                    self._state = ((merged,), (None,))
+            else:
+                with self._lock:
+                    # re-read the segment cache at publish time: _mutate
+                    # guarantees parts didn't change, but a query may have
+                    # filled segments since we started — keep its work
+                    self._state = (tuple(parts), (*self._state[1], None))
+
+    def _full_rebuild(self) -> None:
+        """Build a fresh base (caller holds ``_mutate``) and publish it."""
+        base = _snn.build_index(self.raw, metric=self.metric,
+                                n_iter=self.n_iter)
+        with self._lock:
+            self._n_at_build = base.n
+            self._state = ((base,), (None,))
+
+    def rebuild(self) -> None:
+        """Force a full re-index (fresh mu/v1/xi) of everything appended."""
+        with self._mutate:
+            self._full_rebuild()
+
+    # ------------------------------------------------------------- queries
+    def _parts(self) -> tuple[_snn.SNNIndex, ...]:
+        """Consistent parts snapshot for the host paths — no segment builds."""
+        with self._lock:
+            return self._state[0]
+
+    def _snapshot(self):
+        """Parts + their engine segments, building missing segments.
+
+        Segment construction (an O(n) pad-copy + device transfer for a fresh
+        base) runs OUTSIDE the state lock — concurrent queries and appends
+        never stall on it; two racing queries at worst build the same
+        segment twice, and the cache write-back is dropped if a writer
+        published new parts in the meantime.
+        """
+        with self._lock:
+            parts, segs = self._state
+        if any(s is None for s in segs):
+            segs = tuple(
+                s if s is not None
+                else _engine.segment_from_index(p, block=self.block)
+                for p, s in zip(parts, segs))
+            with self._lock:
+                if self._state[0] is parts:
+                    self._state = (parts, segs)
+        return parts, list(segs)
+
+    def query_radius_csr(self, q: np.ndarray, radius,
+                         return_distance: bool = True, *,
+                         query_tile: int = 128,
+                         use_pallas: bool | None = None,
+                         native: bool = True) -> _snn.CSRNeighbors:
+        """Exact CSR results over base + deltas via the unified engine.
+
+        Row contents are segment-major (base first, then deltas in append
+        order), ascending in sorted position within each segment.
+        """
+        parts, segs = self._snapshot()
+        return _engine.query_csr(parts[0], segs, q, radius, return_distance,
+                                 query_tile=query_tile, use_pallas=use_pallas,
+                                 native=native)
+
+    def query_radius_batch(self, q: np.ndarray, radius,
+                           return_distance: bool = True,
+                           group_size: int = 64) -> list:
+        """Host Algorithm-2 path over every segment, merged per query."""
+        parts = self._parts()
+        outs = [_snn.query_radius_batch(p, q, radius, return_distance,
+                                        group_size) for p in parts]
+        if len(outs) == 1:
+            return outs[0]
+        merged = []
+        for per_q in zip(*outs):
+            if return_distance:
+                merged.append((np.concatenate([i for i, _ in per_q]),
+                               np.concatenate([d for _, d in per_q])))
+            else:
+                merged.append(np.concatenate(per_q))
+        return merged
+
+    def query_counts(self, q: np.ndarray, radius,
+                     group_size: int = 64) -> np.ndarray:
+        parts = self._parts()
+        return sum(_snn.query_counts(p, q, radius, group_size) for p in parts)
+
+    def query_radius_fixed(self, q: np.ndarray, radius, max_neighbors: int):
+        """Fixed-shape (K-bounded) results merged across segments.
+
+        Per-segment `snn.query_radius_fixed` top-Ks are concatenated and
+        re-truncated to the K best by squared distance; ``counts`` stays the
+        exact total, so truncation remains detectable.
+        """
+        parts = self._parts()
+        outs = [_snn.query_radius_fixed(p, q, radius, max_neighbors,
+                                        block=self.block) for p in parts]
+        if len(outs) == 1:
+            return outs[0]
+        idx = np.concatenate([o[0] for o in outs], axis=1)
+        sq = np.concatenate([o[1] for o in outs], axis=1)
+        valid = np.concatenate([o[2] for o in outs], axis=1)
+        counts = np.sum([o[3] for o in outs], axis=0)
+        k = min(max_neighbors, idx.shape[1])
+        pick = np.argsort(np.where(valid, sq, np.inf), axis=1,
+                          kind="stable")[:, :k]
+        return (np.take_along_axis(idx, pick, 1),
+                np.take_along_axis(sq, pick, 1),
+                np.take_along_axis(valid, pick, 1), counts)

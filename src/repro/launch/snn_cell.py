@@ -20,8 +20,6 @@ Two step variants share one signature:
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 
 import jax
 import jax.numpy as jnp

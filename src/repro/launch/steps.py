@@ -19,7 +19,6 @@ from jax.tree_util import DictKey, SequenceKey
 from ..configs.registry import ArchSpec, get_arch
 from ..models import gnn as gnn_mod
 from ..models import recsys as rs
-from ..models.moe import capacity as moe_capacity
 from ..models.transformer import (TransformerConfig, decode_step, init_cache,
                                   init_params as tf_init, loss_fn, prefill)
 from ..optim import adamw, clip_by_global_norm, partition_optimizer, sgd

@@ -14,7 +14,6 @@ All functions are pure; params are plain dicts of arrays.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,7 @@ import numpy as np
 
 from ..distributed.sharding import constrain
 from .layers import mlp_apply, mlp_params, uniform_init
-from .transformer import TransformerConfig, forward as tf_forward, init_params as tf_init
+from .transformer import TransformerConfig, init_params as tf_init
 
 
 # --------------------------------------------------------------------------- #
@@ -256,9 +256,7 @@ def _bert4rec_hidden(params, seq_ids, cfg: Bert4RecConfig):
     b, s = seq_ids.shape
     ids = jnp.maximum(seq_ids, 0)
     # bidirectional: non-causal full attention (chunk the mask through cfg)
-    import repro.models.transformer as tf_mod
     x = params["embed"].astype(tcfg.dtype)[ids] + params["pos"][None, :s, :]
-    from .attention import full_attention
     from .layers import rms_norm, rope_freqs, ACTIVATIONS
     cos, sin = rope_freqs(tcfg.rope_dim, tcfg.max_seq, tcfg.rope_theta)
     positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))

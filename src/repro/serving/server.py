@@ -1,17 +1,20 @@
 """Batched radius-query serving (the paper's online/streaming setting, §1.4).
 
-A `SNNServer` owns an SNN index and executes requests through the two-pass
-exact CSR engine (`core.snn.query_radius_csr`) by default: every response is
-the full, untruncated neighbor set, whatever its length.  Setting
+A `SNNServer` owns a `StreamingSNNIndex` and executes requests through the
+unified two-pass CSR engine (`core.engine`) by default: every response is the
+full, untruncated neighbor set, whatever its length.  Setting
 ``cfg.serve_exact = False`` restores the legacy fixed-shape top-K path
 (bounded response size, ``truncated`` flag when counts exceed K).  Requests
 are dynamically batched: the dispatcher collects up to ``serve_batch``
 requests or waits at most ``serve_timeout_ms``, runs one fused query per
-radius group, and scatters the per-request results.
+radius group, and scatters the per-request results, signalling each
+requester's `threading.Event`.
 
-Because SNN indexing is O(n log n) with a trivial constant (one power
-iteration + sort), `rebuild` makes the server usable for online streams:
-appended points trigger a cheap re-index (the paper's "flexibility" claim).
+Online updates go through `append`: new points become a sorted LSM delta
+segment on the index's frozen mu/v1 (O(b log b) for a b-point batch — no
+power iteration, no full re-sort, no serving gap) and queries remain exact
+across base + deltas; compactions and the rare full re-index are handled by
+the streaming index's size-ratio triggers (see `core.streaming`).
 """
 from __future__ import annotations
 
@@ -24,7 +27,7 @@ import traceback
 import numpy as np
 
 from ..configs.snn_default import SNNConfig
-from ..core import snn as _snn
+from ..core.streaming import StreamingSNNIndex
 
 
 @dataclasses.dataclass
@@ -32,6 +35,9 @@ class Request:
     query: np.ndarray
     radius: float
     id: int = 0
+    # stamped by submit(); a default keeps requests that reach the dispatcher
+    # by other routes (tests, replays) from crashing mid-batch
+    _t0: float = dataclasses.field(default=0.0, repr=False, compare=False)
 
 
 @dataclasses.dataclass
@@ -46,14 +52,29 @@ class Response:
 class SNNServer:
     def __init__(self, data: np.ndarray, cfg: SNNConfig = SNNConfig()):
         self.cfg = cfg
-        self._data = np.asarray(data, np.float32)
-        self.index = _snn.build_index(self._data, metric=cfg.metric,
-                                      n_iter=cfg.power_iters)
+        self.index = StreamingSNNIndex(
+            np.asarray(data, np.float32), metric=cfg.metric,
+            n_iter=cfg.power_iters, block=cfg.block_rows,
+            delta_ratio=cfg.delta_merge_ratio,
+            max_deltas=cfg.max_delta_segments,
+            rebuild_ratio=cfg.rebuild_ratio)
         self._q: queue.Queue = queue.Queue()
         self._results: dict[int, Response] = {}
+        self._events: dict[int, threading.Event] = {}
+        # responses whose waiter timed out (or never existed) have no event
+        # left to protect them; cap how many such orphans we keep
+        self._max_backlog = max(4 * cfg.serve_batch, 1024)
         self._done = threading.Event()
         self._lock = threading.Lock()
         self._thread: threading.Thread | None = None
+
+    @property
+    def data(self) -> np.ndarray:
+        """All served points (original append order)."""
+        return self.index.raw
+
+    # kept for callers that predate the streaming index
+    _data = data
 
     # ----------------------------------------------------------- lifecycle
     def start(self):
@@ -66,34 +87,39 @@ class SNNServer:
         if self._thread:
             self._thread.join()
 
+    def append(self, new_points: np.ndarray):
+        """Stream new points in: an O(b log b) delta append, no serving gap."""
+        self.index.append(new_points)
+
     def rebuild(self, new_points: np.ndarray):
-        """Append points and re-index (cheap: sort-based index)."""
-        self._data = np.concatenate([self._data, np.asarray(new_points, np.float32)])
-        new_index = _snn.build_index(self._data, metric=self.cfg.metric,
-                                     n_iter=self.cfg.power_iters)
-        with self._lock:
-            self.index = new_index
+        """Legacy name: appends now route through the streaming index."""
+        self.append(new_points)
 
     # ------------------------------------------------------------- client
     def submit(self, req: Request):
         req._t0 = time.monotonic()
+        with self._lock:
+            self._events.setdefault(req.id, threading.Event())
         self._q.put(req)
 
     def result(self, rid: int, timeout: float = 30.0) -> Response:
-        t0 = time.monotonic()
-        while time.monotonic() - t0 < timeout:
-            with self._lock:
-                if rid in self._results:
-                    return self._results.pop(rid)
-            time.sleep(0.0005)
+        """Block until request ``rid``'s response is ready (event-driven)."""
+        with self._lock:
+            if rid in self._results:
+                self._events.pop(rid, None)
+                return self._results.pop(rid)
+            ev = self._events.setdefault(rid, threading.Event())
+        ev.wait(timeout)
+        with self._lock:
+            self._events.pop(rid, None)
+            if rid in self._results:
+                return self._results.pop(rid)
         raise TimeoutError(f"request {rid}")
 
     def query_batch(self, queries: np.ndarray, radius: float):
         """Synchronous batched query (bypasses the dispatcher)."""
-        with self._lock:
-            index = self.index
-        return _snn.query_radius_batch(index, queries, radius,
-                                       group_size=self.cfg.batch_group)
+        return self.index.query_radius_batch(queries, radius,
+                                             group_size=self.cfg.batch_group)
 
     # ----------------------------------------------------------- dispatcher
     def _loop(self):
@@ -117,8 +143,7 @@ class SNNServer:
                 traceback.print_exc()
 
     def _run_batch(self, batch: list[Request]):
-        with self._lock:
-            index = self.index
+        index = self.index
         qs = np.stack([r.query for r in batch])
         # group identical radii into one fused call
         radii = np.asarray([r.radius for r in batch])
@@ -140,34 +165,62 @@ class SNNServer:
                 # this group's requests will time out; keep serving the rest
                 traceback.print_exc()
 
+    def _store(self, resp: Response):
+        with self._lock:
+            self._results[resp.id] = resp
+            # signal, never create: a missing event means the waiter already
+            # timed out and popped it (or never existed) — creating one here
+            # would leak it, since nobody is left to pop it
+            ev = self._events.get(resp.id)
+            if ev is not None:
+                ev.set()
+            # evict oldest orphaned responses (no live waiter event) so
+            # timed-out requests cannot grow _results without bound
+            if len(self._results) > self._max_backlog:
+                for rid in list(self._results):
+                    if len(self._results) <= self._max_backlog:
+                        break
+                    if rid not in self._events:
+                        del self._results[rid]
+            # hard cap (load shedding): fire-and-forget clients never pop
+            # their events, so past 4x the soft cap evict oldest entries
+            # outright — a parked waiter wakes into its TimeoutError
+            hard = 4 * self._max_backlog
+            while len(self._results) > hard:
+                rid = next(iter(self._results))
+                del self._results[rid]
+                stale = self._events.pop(rid, None)
+                if stale is not None:
+                    stale.set()
+            while len(self._events) > hard:
+                rid, stale = next(iter(self._events.items()))
+                del self._events[rid]
+                stale.set()
+
     def _respond_csr(self, index, batch, qs, sel, rad: float):
-        """Exact path: two-pass CSR engine, variable-length, never truncated."""
-        csr = _snn.query_radius_csr(index, qs[sel], rad,
-                                    block=self.cfg.block_rows,
-                                    query_tile=self.cfg.query_tile,
-                                    native=False)
+        """Exact path: unified CSR engine, variable-length, never truncated."""
+        csr = index.query_radius_csr(qs[sel], rad,
+                                     query_tile=self.cfg.query_tile,
+                                     native=False)
         now = time.monotonic()
         for j, bi in enumerate(sel):
             r = batch[bi]
             idx, sq = csr.row(j)
             # copy: row() returns views into the group-wide flat arrays, and a
             # Response parked in _results must not pin the whole group
-            resp = Response(id=r.id, indices=np.array(idx), sq_dists=np.array(sq),
-                            truncated=False, latency_ms=(now - r._t0) * 1e3)
-            with self._lock:
-                self._results[r.id] = resp
+            self._store(Response(
+                id=r.id, indices=np.array(idx), sq_dists=np.array(sq),
+                truncated=False,
+                latency_ms=(now - r._t0) * 1e3 if r._t0 else 0.0))
 
     def _respond_fixed(self, index, batch, qs, sel, rad: float):
         """Legacy fixed-shape path: K-bounded responses with a truncated flag."""
-        idx, sq, valid, counts = _snn.query_radius_fixed(
-            index, qs[sel], rad, self.cfg.max_neighbors,
-            block=self.cfg.block_rows)
+        idx, sq, valid, counts = index.query_radius_fixed(
+            qs[sel], rad, self.cfg.max_neighbors)
         now = time.monotonic()
         for j, bi in enumerate(sel):
             r = batch[bi]
-            resp = Response(
+            self._store(Response(
                 id=r.id, indices=idx[j][valid[j]], sq_dists=sq[j][valid[j]],
                 truncated=bool(counts[j] > self.cfg.max_neighbors),
-                latency_ms=(now - r._t0) * 1e3)
-            with self._lock:
-                self._results[r.id] = resp
+                latency_ms=(now - r._t0) * 1e3 if r._t0 else 0.0))

@@ -1,6 +1,5 @@
 """DBSCAN equivalence across backends + NMI + the serving layer."""
 import numpy as np
-import pytest
 from _hyp_compat import given, settings, st
 
 from repro.configs.snn_default import SNNConfig
@@ -16,10 +15,12 @@ def test_dbscan_backends_identical(seed, eps, min_samples):
     rng = np.random.default_rng(seed)
     x = rng.normal(size=(150, 3)).astype(np.float32)
     l_snn = dbscan(x, eps, min_samples, backend="snn")
+    l_csr = dbscan(x, eps, min_samples, backend="snn-csr")
     l_bf = dbscan(x, eps, min_samples, backend="brute")
     l_kd = dbscan(x, eps, min_samples, backend="kdtree")
     # labels must be identical up to permutation; our BFS order is shared,
     # so they are identical outright
+    assert (l_snn == l_csr).all()
     assert (l_snn == l_bf).all()
     assert (l_snn == l_kd).all()
 

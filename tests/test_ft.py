@@ -4,7 +4,6 @@ import os
 
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.ft.checkpoint import CheckpointManager
 from repro.ft.elastic import ElasticRunner, FailureInjector

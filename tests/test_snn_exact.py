@@ -1,7 +1,6 @@
 """Property tests: SNN is EXACT — identical result sets to brute force for
 every metric, radius, dimension and data distribution (paper's core claim)."""
 import numpy as np
-import pytest
 from _hyp_compat import given, settings, st
 
 from repro.core import (BruteForce1, build_index, query_counts, query_radius,

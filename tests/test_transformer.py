@@ -8,7 +8,7 @@ import numpy as np
 import pytest
 
 from repro.models.attention import MLADims
-from repro.models.moe import MoEConfig, capacity, moe_apply, moe_params
+from repro.models.moe import MoEConfig, moe_apply, moe_params
 from repro.models.transformer import (TransformerConfig, decode_step, forward,
                                       init_cache, init_params, lm_loss,
                                       loss_fn, prefill)
