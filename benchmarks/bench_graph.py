@@ -1,0 +1,167 @@
+"""Self-join neighbor graph + DBSCAN: sorted-chunk schedule vs the blind loop.
+
+Two things changed when `core.graph` landed, and this benchmark prices both:
+
+* **graph build** — the old DBSCAN hot loop answered all-points region
+  queries by walking the dataset in original order, 2048 queries at a time,
+  against the WHOLE index (every chunk pays the full O(chunk * n) predicate
+  grid on the oracle path).  `build_neighbor_graph` walks the queries in the
+  index's own sorted order, so each chunk's narrow alpha window prunes all
+  but a handful of segments; ``symmetric=True`` additionally evaluates each
+  cross-chunk pair once and mirrors it;
+* **clustering** — the per-point Python BFS became vectorized connected
+  components (`labels_from_graph`), so DBSCAN end-to-end is array code.
+
+Every cell cross-checks the scheduled graph against the blind loop (indptr +
+indices, bit-identical) and the CC labels against the BFS labels before
+recording a time.  Rows follow the ``name,us_per_call,derived`` CSV contract
+and everything lands in ``BENCH_graph.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import build_index, build_neighbor_graph, query_radius_csr
+from repro.core.dbscan import labels_from_graph
+from repro.core.snn import CSRNeighbors
+from repro.data.pipeline import make_blobs, make_uniform
+
+from .common import row
+
+OUT_JSON = "BENCH_graph.json"
+
+
+def _blind_chunk_graph(x: np.ndarray, eps: float, chunk: int = 2048) -> CSRNeighbors:
+    """The pre-graph-subsystem baseline: original-order queries, whole index."""
+    index = build_index(x)
+    indptrs, indices = [np.zeros(1, np.int64)], []
+    for s in range(0, x.shape[0], chunk):
+        csr = query_radius_csr(index, x[s:s + chunk], eps,
+                               return_distance=False)
+        indptrs.append(csr.indptr[1:] + indptrs[-1][-1])
+        indices.append(csr.indices)
+    return CSRNeighbors(np.concatenate(indptrs),
+                        np.concatenate(indices) if indices
+                        else np.zeros(0, np.int64))
+
+
+def _bfs_labels(graph: CSRNeighbors, min_samples: int) -> np.ndarray:
+    """The pre-vectorization per-point BFS (the DBSCAN clustering baseline)."""
+    n = graph.m
+    neigh = [graph.row(i) for i in range(n)]
+    core = np.fromiter((len(nb) >= min_samples for nb in neigh), bool, n)
+    labels = np.full(n, -1, dtype=np.int64)
+    cluster = 0
+    for seed in range(n):
+        if labels[seed] != -1 or not core[seed]:
+            continue
+        labels[seed] = cluster
+        frontier = [seed]
+        while frontier:
+            nxt: list[int] = []
+            for p in frontier:
+                for nb in neigh[p]:
+                    if labels[nb] == -1:
+                        labels[nb] = cluster
+                        if core[nb]:
+                            nxt.append(int(nb))
+            frontier = nxt
+        cluster += 1
+    return labels
+
+
+def _timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return time.perf_counter() - t0, out
+
+
+def _one_cell(name: str, x: np.ndarray, eps: float, min_samples: int,
+              record: list) -> dict:
+    n, d = x.shape
+    tag = f"{name}/n{n}/d{d}/eps{eps}"
+
+    # Each variant runs ONCE and its output is reused for the cross-checks
+    # and the clustering stage — these are seconds-scale end-to-end builds,
+    # not microbenchmarks, so single-shot wall time is the honest number.
+
+    # ---- graph build: blind loop vs sorted-chunk schedule (+symmetry) -----
+    t_blind, want = _timed(_blind_chunk_graph, x, eps)
+    t_sched, got = _timed(build_neighbor_graph, x, eps)
+    t_sym, got_sym = _timed(build_neighbor_graph, x, eps, symmetric=True)
+
+    # ---- exactness cross-check (never trade it for speed) -----------------
+    for g in (got, got_sym):
+        assert (g.indptr == want.indptr).all(), "graph indptr mismatch"
+        assert (g.indices == want.indices).all(), "graph indices mismatch"
+
+    record.append(row(f"graph/build_blind/{tag}", t_blind,
+                      f"nnz={want.nnz}"))
+    record.append(row(f"graph/build_scheduled/{tag}", t_sched,
+                      f"speedup={t_blind / max(t_sched, 1e-12):.2f}x"))
+    record.append(row(f"graph/build_symmetric/{tag}", t_sym,
+                      f"speedup={t_blind / max(t_sym, 1e-12):.2f}x"))
+
+    # ---- DBSCAN end-to-end: baseline (blind build + BFS) vs graph + CC ----
+    t_bfs, labels_bfs = _timed(_bfs_labels, want, min_samples)
+    t_cc, labels_cc = _timed(labels_from_graph, got_sym, min_samples)
+    assert (labels_bfs == labels_cc).all(), "label mismatch"
+    t_base = t_blind + t_bfs
+    t_graph = t_sym + t_cc
+    record.append(row(f"graph/dbscan_baseline/{tag}", t_base,
+                      f"clusters={int(labels_bfs.max()) + 1}"))
+    record.append(row(f"graph/dbscan_graph/{tag}", t_graph,
+                      f"speedup={t_base / max(t_graph, 1e-12):.2f}x"))
+
+    return {
+        "dataset": name, "n": n, "d": d, "eps": eps,
+        "min_samples": min_samples, "nnz": int(want.nnz),
+        "graph_build_s": {"blind_chunk_loop": t_blind,
+                          "scheduled": t_sched, "symmetric": t_sym},
+        "graph_build_speedup": t_blind / max(t_sched, 1e-12),
+        "graph_build_speedup_symmetric": t_blind / max(t_sym, 1e-12),
+        "dbscan_s": {"blind_loop_plus_bfs": t_base, "graph_plus_cc": t_graph},
+        "dbscan_speedup": t_base / max(t_graph, 1e-12),
+    }
+
+
+def _blob_centers(k: int, d: int, spread: float = 6.0, seed: int = 42):
+    rng = np.random.default_rng(seed)
+    return rng.normal(0.0, spread, size=(k, d))
+
+
+def run(full: bool = False, out_json: str = OUT_JSON):
+    rows: list[str] = []
+    cells: list[dict] = []
+    sizes = [20_000, 50_000] if not full else [50_000, 200_000, 500_000]
+    for n in sizes:
+        d = 8
+        # uniform cube (paper §6.1 synthetic): eps tuned to ~tens of neighbors
+        cells.append(_one_cell("uniform", make_uniform(n, d, seed=0), 0.3,
+                               5, rows))
+        # labeled blobs (the DBSCAN workload): clusters well separated along
+        # the principal direction, where the sorted schedule shines
+        x, _ = make_blobs(n // 10, _blob_centers(10, d), std=0.5, seed=1)
+        cells.append(_one_cell("blobs", x, 0.5, 5, rows))
+    import jax
+
+    payload = {
+        "benchmark": "graph",
+        "backend": jax.default_backend(),
+        "full": full,
+        "grid": {"sizes": sizes, "d": 8},
+        "cells": cells,
+    }
+    with open(out_json, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {os.path.abspath(out_json)}", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

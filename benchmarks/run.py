@@ -3,11 +3,69 @@
 Prints ``name,us_per_call,derived`` CSV. ``--full`` uses the paper's original
 sizes (hours on 1 CPU); the default is a scaled suite that preserves every
 comparison in the paper.
+
+Every suite that records machine-readable results writes its own
+``BENCH_<suite>.json``; after the selected suites finish, `aggregate` folds
+every ``BENCH_*.json`` present into ``BENCH_trajectory.json`` — one
+artifact summarizing the whole benchmark trajectory (which suites have
+recorded numbers, on which backend, and every speedup they claim), so CI
+uploads a single file that answers "what has been measured so far".
+``--aggregate-only`` rebuilds that summary without re-running anything.
 """
 from __future__ import annotations
 
 import argparse
+import glob
+import json
+import os
 import sys
+
+TRAJECTORY_JSON = "BENCH_trajectory.json"
+
+
+def _collect_speedups(node, path="", out=None):
+    """Every numeric leaf whose key path mentions 'speedup', with its path."""
+    if out is None:
+        out = []
+    if isinstance(node, dict):
+        for k, v in node.items():
+            _collect_speedups(v, f"{path}.{k}" if path else str(k), out)
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            _collect_speedups(v, f"{path}[{i}]", out)
+    elif isinstance(node, (int, float)) and "speedup" in path.rsplit(".", 1)[-1]:
+        out.append({"path": path, "value": float(node)})
+    return out
+
+
+def aggregate(out_json: str = TRAJECTORY_JSON) -> dict:
+    """Fold all ``BENCH_*.json`` into one trajectory summary and write it."""
+    entries = []
+    for fname in sorted(glob.glob("BENCH_*.json")):
+        if os.path.basename(fname) == out_json:
+            continue
+        try:
+            with open(fname) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            entries.append({"file": fname, "error": str(e)})
+            continue
+        speedups = _collect_speedups(payload)
+        entries.append({
+            "file": fname,
+            "benchmark": payload.get("benchmark"),
+            "backend": payload.get("backend"),
+            "full": payload.get("full"),
+            "cells": len(payload.get("cells", [])),
+            "speedups": speedups,
+            "max_speedup": max((s["value"] for s in speedups), default=None),
+        })
+    summary = {"benchmarks_recorded": len(entries), "trajectory": entries}
+    with open(out_json, "w") as f:
+        json.dump(summary, f, indent=2)
+    print(f"# wrote {os.path.abspath(out_json)} "
+          f"({len(entries)} recorded benchmark(s))", file=sys.stderr)
+    return summary
 
 
 def main() -> None:
@@ -15,12 +73,18 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,fig3,table45,table7,theory,"
-                         "roofline,csr,streaming")
+                         "roofline,csr,streaming,graph")
+    ap.add_argument("--aggregate-only", action="store_true",
+                    help=f"just rebuild {TRAJECTORY_JSON} from existing "
+                         "BENCH_*.json files")
     args = ap.parse_args()
+    if args.aggregate_only:
+        aggregate()
+        return
 
     from . import (bench_csr_engine, bench_fig2_synthetic, bench_fig3_grid,
-                   bench_roofline, bench_streaming, bench_table45_realworld,
-                   bench_table7_dbscan, bench_theory)
+                   bench_graph, bench_roofline, bench_streaming,
+                   bench_table45_realworld, bench_table7_dbscan, bench_theory)
     suites = {
         "fig2": bench_fig2_synthetic.run,
         "fig3": bench_fig3_grid.run,
@@ -30,6 +94,7 @@ def main() -> None:
         "roofline": bench_roofline.run,
         "csr": bench_csr_engine.run,
         "streaming": bench_streaming.run,
+        "graph": bench_graph.run,
     }
     selected = args.only.split(",") if args.only else list(suites)
     unknown = [s for s in selected if s not in suites]
@@ -39,6 +104,7 @@ def main() -> None:
     for name in selected:
         print(f"# --- {name} ---", file=sys.stderr)
         suites[name](full=args.full)
+    aggregate()
 
 
 if __name__ == "__main__":

@@ -16,7 +16,7 @@ def main():
     print(f"clustering {x.shape[0]} points in {x.shape[1]}D, 5 true blobs")
 
     results = {}
-    for backend in ("snn", "brute", "kdtree"):
+    for backend in ("snn", "snn-graph", "brute", "kdtree"):
         t0 = time.perf_counter()
         labels = dbscan(x, eps=0.7, min_samples=5, backend=backend)
         dt = time.perf_counter() - t0
@@ -24,6 +24,7 @@ def main():
         print(f"{backend:7s}: {dt*1e3:8.1f} ms, "
               f"{labels.max()+1} clusters, NMI={nmi(labels, y):.4f}")
 
+    assert (results["snn"] == results["snn-graph"]).all()
     assert (results["snn"] == results["brute"]).all()
     assert (results["snn"] == results["kdtree"]).all()
     print("all backends return identical clusterings (exactness)")

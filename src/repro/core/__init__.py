@@ -9,8 +9,12 @@ from .snn import (  # noqa: F401
     query_counts,
     query_radius_fixed,
 )
-from .engine import Segment, make_segment, segment_from_index  # noqa: F401
+from .engine import (Segment, make_segment, segment_from_index,  # noqa: F401
+                     segments_from_index)
+from .graph import (build_neighbor_graph, build_neighbor_graph_sharded,  # noqa: F401
+                    min_label_components)
 from .streaming import StreamingSNNIndex, merge_sorted_indexes  # noqa: F401
 from .baselines import BruteForce1, BruteForce2, KDTree, GridIndex  # noqa: F401
-from .dbscan import dbscan, normalized_mutual_information  # noqa: F401
+from .dbscan import (dbscan, labels_from_graph, neighbor_graph,  # noqa: F401
+                     normalized_mutual_information)
 from . import metrics  # noqa: F401

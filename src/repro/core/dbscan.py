@@ -2,8 +2,22 @@
 
 Semantics match scikit-learn's DBSCAN: a point is *core* iff its eps-ball
 contains >= min_samples points (itself included); clusters are the connected
-components of core points under eps-adjacency; non-core points in a core's ball
-become border members of (one of) its clusters; everything else is noise (-1).
+components of core points under eps-adjacency; non-core points in a core's
+ball become border members of (one of) its clusters; everything else is
+noise (-1).
+
+The hot loop is fully array-based: every backend materializes the (n, n)
+eps-neighbor graph as one `CSRNeighbors` (the SNN backends through
+`core.graph.build_neighbor_graph`, the baselines via a list->CSR repack) and
+`labels_from_graph` clusters it with vectorized connected components — core
+mask from `indptr` diffs, components by min-label propagation with pointer
+jumping, border points claimed by the lowest-id adjacent cluster.  The old
+per-point Python BFS produced exactly these labels: BFS seeds scan ascending
+point ids, so cluster c's seed is the smallest core id of its component
+(clusters sorted by component representative), and a border point reachable
+from several clusters is claimed by the first — lowest-id — one
+(`tests/test_graph.py::test_labels_match_reference_bfs` pits the two
+implementations against each other on random graphs).
 """
 from __future__ import annotations
 
@@ -11,62 +25,97 @@ import numpy as np
 
 from . import snn as _snn
 from .baselines import BruteForce2, KDTree
+from .graph import build_neighbor_graph, min_label_components
+
+BACKENDS = ("snn", "snn-csr", "snn-graph", "brute", "kdtree")
 
 
-def _neighbor_lists(x: np.ndarray, eps: float, backend: str):
+def _lists_to_graph(lists) -> _snn.CSRNeighbors:
+    """Repack per-point neighbor lists (host/baseline backends) as CSR."""
+    counts = np.fromiter((len(nb) for nb in lists), np.int64, len(lists))
+    flat = (np.concatenate(lists).astype(np.int64) if len(lists)
+            else np.zeros(0, np.int64))
+    indptr = np.zeros(len(lists) + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return _snn.CSRNeighbors(indptr, flat)
+
+
+def neighbor_graph(x: np.ndarray, eps: float, backend: str = "snn",
+                   query_chunk: int = 2048) -> _snn.CSRNeighbors:
+    """The eps-neighbor graph a DBSCAN backend answers its region queries with.
+
+    Backends:
+      * ``snn``       — host Algorithm-2 path (grouped level-3 BLAS);
+      * ``snn-csr``   — the two-pass CSR device engine via the graph
+        builder's sorted-chunk schedule (``query_chunk`` tunes
+        device-memory pressure);
+      * ``snn-graph`` — same, with the symmetric self-join (each cross-chunk
+        pair evaluated once and mirrored);
+      * ``brute`` / ``kdtree`` — baseline exact searches.
+    """
     if backend == "snn":
         index = _snn.build_index(x)
-        return _snn.query_radius_batch(index, x, eps, return_distance=False)
-    if backend == "snn-csr":
-        # the two-pass device engine; row order matches the host path exactly.
-        # Queries go in chunks: off-TPU the engine's oracle path materializes
-        # a dense (m, n) filter, so one all-points batch would be O(n^2)
-        index = _snn.build_index(x)
-        out: list = []
-        for s in range(0, x.shape[0], 2048):
-            csr = _snn.query_radius_csr(index, x[s:s + 2048], eps,
-                                        return_distance=False)
-            out.extend(csr.row(i) for i in range(csr.m))
-        return out
+        return _lists_to_graph(
+            _snn.query_radius_batch(index, x, eps, return_distance=False))
+    if backend in ("snn-csr", "snn-graph"):
+        return build_neighbor_graph(x, eps, query_chunk=query_chunk,
+                                    symmetric=(backend == "snn-graph"))
     if backend == "brute":
-        return BruteForce2(x).query_radius(x, eps)
+        return _lists_to_graph(BruteForce2(x).query_radius(x, eps))
     if backend == "kdtree":
-        return KDTree(x).query_radius(x, eps)
-    raise ValueError(f"unknown backend {backend!r}")
+        return _lists_to_graph(KDTree(x).query_radius(x, eps))
+    raise ValueError(f"unknown backend {backend!r}; valid: {BACKENDS}")
+
+
+def labels_from_graph(graph: _snn.CSRNeighbors, min_samples: int) -> np.ndarray:
+    """DBSCAN labels from a prebuilt eps-neighbor graph (noise = -1).
+
+    The graph must be the symmetric self-join of the dataset with rows
+    including the point itself when it is its own neighbor — exactly what
+    `core.graph.build_neighbor_graph` (or any exact radius search run
+    point-against-database) produces.  No Python loop over points: core
+    mask from `indptr` diffs, components via `min_label_components` over
+    the core-core edge list, borders via one scatter-min.
+    """
+    n = graph.m
+    counts = np.diff(graph.indptr)
+    core = counts >= min_samples
+    labels = np.full(n, -1, np.int64)
+    if not core.any():
+        return labels
+    rows = np.repeat(np.arange(n, dtype=np.int64), counts)
+    cols = np.asarray(graph.indices, np.int64)
+    cc = core[rows] & core[cols]
+    comp = min_label_components(n, rows[cc], cols[cc])
+    # components sorted by their minimum core id == BFS seed order
+    reps = np.unique(comp[core])
+    labels[core] = np.searchsorted(reps, comp[core])
+    border = ~core[rows] & core[cols]
+    if border.any():
+        # a border point joins its lowest-id adjacent cluster (the first BFS
+        # that reached it); component reps order like cluster ids, so the
+        # min rep over adjacent cores IS the min cluster id
+        best = np.full(n, n, np.int64)
+        np.minimum.at(best, rows[border], comp[cols[border]])
+        hit = best < n
+        labels[hit] = np.searchsorted(reps, best[hit])
+    return labels
 
 
 def dbscan(x: np.ndarray, eps: float, min_samples: int = 5,
-           backend: str = "snn") -> np.ndarray:
+           backend: str = "snn", query_chunk: int = 2048) -> np.ndarray:
     """Cluster ``x``; returns labels (n,), noise = -1.
 
-    The region queries (the hot loop) are batched through the chosen backend —
-    with ``backend='snn'`` this is exactly the paper's DBSCAN+SNN combination;
-    ``backend='snn-csr'`` answers them through the two-pass CSR device engine
-    (identical labels, device-resident hot loop on TPU).
+    The region queries (the hot loop) run through the chosen backend's
+    neighbor graph — with ``backend='snn'`` this is exactly the paper's
+    DBSCAN+SNN combination; ``snn-csr`` / ``snn-graph`` build the graph
+    through the two-pass CSR device engine's sorted-chunk self-join
+    (identical labels, device-resident hot loop on TPU; ``query_chunk``
+    bounds per-chunk memory).  Labels are identical across all backends.
     """
     x = np.asarray(x, dtype=np.float32)
-    n = x.shape[0]
-    neigh = _neighbor_lists(x, eps, backend)
-    core = np.fromiter((len(nb) >= min_samples for nb in neigh), bool, n)
-    labels = np.full(n, -1, dtype=np.int64)
-    cluster = 0
-    for seed in range(n):
-        if labels[seed] != -1 or not core[seed]:
-            continue
-        # BFS over core connectivity
-        labels[seed] = cluster
-        frontier = [seed]
-        while frontier:
-            nxt: list[int] = []
-            for p in frontier:
-                for nb in neigh[p]:
-                    if labels[nb] == -1:
-                        labels[nb] = cluster
-                        if core[nb]:
-                            nxt.append(int(nb))
-            frontier = nxt
-        cluster += 1
-    return labels
+    graph = neighbor_graph(x, eps, backend, query_chunk)
+    return labels_from_graph(graph, min_samples)
 
 
 def normalized_mutual_information(a: np.ndarray, b: np.ndarray) -> float:

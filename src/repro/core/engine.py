@@ -86,6 +86,37 @@ def segment_from_index(index, *, block: int = 512) -> Segment:
                         block=block)
 
 
+def segments_from_index(
+    index,
+    *,
+    rows_per_segment: int,
+    block: int = 512,
+    ids: np.ndarray | None = None,
+) -> list[Segment]:
+    """Partition one index's sorted rows into contiguous equal-size segments.
+
+    The point of splitting a single sorted database: `run_csr` prunes whole
+    segments whose alpha range cannot touch any query window, so a query
+    batch with a narrow alpha footprint (e.g. the sorted query chunks of
+    `core.graph`'s self-join) only pays for the segments it can actually
+    hit, at `rows_per_segment` granularity.  Segment k covers sorted rows
+    ``[k * rows_per_segment, (k+1) * rows_per_segment)``; concatenating the
+    segments in order reproduces the index, so segment-major engine output
+    stays in globally ascending sorted order (`run_csr` docstring).
+
+    ``ids`` overrides the per-row id map (default ``index.order``, yielding
+    original row ids; pass ``np.arange(n)`` to get sorted positions back —
+    the representation `core.graph`'s symmetric join works in).
+    """
+    n = index.n
+    ids = index.order if ids is None else np.asarray(ids, np.int64)
+    rs = max(int(rows_per_segment), 1)
+    return [make_segment(index.xs[s:s + rs], index.alphas[s:s + rs],
+                         index.half_norms[s:s + rs], ids[s:s + rs],
+                         block=block)
+            for s in range(0, n, rs)]
+
+
 def _window_may_hit(seg: Segment, aq: np.ndarray, r: np.ndarray) -> bool:
     """Conservative host-side test: can ANY query window touch this segment?
 

@@ -1,0 +1,369 @@
+"""Exact all-pairs eps-neighborhood self-join: the fixed-radius neighbor graph.
+
+The paper's flagship application (§6.4, DBSCAN) and every radius-graph
+workload (GNN edge construction, correlation clustering, percolation
+analysis) need the *same* artifact: the full (n, n) graph whose row i lists
+every database point within ``eps`` of point i.  `build_neighbor_graph`
+materializes it once as a `CSRNeighbors`, exactly, through the two-pass
+segment engine — and exploits the one structural fact a self-join has that
+an arbitrary query batch does not: **the queries ARE the database**, so the
+index's own alpha-sorted order is also a schedule.
+
+Scheduling (vs the blind chunk loop):
+
+* the sorted database is partitioned into contiguous `engine.Segment` runs
+  of ``segment_rows`` rows (`engine.segments_from_index`);
+* queries are processed in **sorted order**, ``query_chunk`` rows at a time:
+  a chunk of alpha-adjacent queries spans a narrow alpha window, so the
+  engine's segment-level window prune (`engine._window_may_hit`) discards
+  almost every segment before any kernel launch.  A blind loop over queries
+  in original order pays the full O(m_chunk * n) predicate grid per chunk;
+  the sorted schedule pays O(m_chunk * (window density) * n);
+* ``symmetric=True`` additionally halves the predicate work using
+  d(i, j) = d(j, i): chunk k only joins against segments at or after its own
+  first segment (the block upper triangle), and the missing lower-triangle
+  pairs are reconstructed by a vectorized CSR mirror+merge.  Row contents
+  still ascend in sorted position, so the output is identical to the plain
+  join up to float-boundary ties (each cross-chunk pair's predicate is
+  evaluated once instead of twice; an exactly-on-the-boundary pair could in
+  principle round differently per direction — the same measure-zero caveat
+  as docs/architecture.md notes for host-vs-device thresholds);
+* ``memory_budget_mb`` sizes ``query_chunk`` so the worst-case oracle-path
+  footprint (one dense (chunk, n) filter) fits the budget — the knob callers
+  tune for device-memory pressure.
+
+Rows and column ids of the returned graph are in ORIGINAL (pre-sort) point
+order, so ``graph.row(i)`` is exactly ``query_radius_csr(index, x[i:i+1],
+eps).row(0)`` — downstream consumers never see the sort.
+
+`min_label_components` is the vectorized connected-components routine
+`core.dbscan` clusters with (min-label propagation + pointer jumping over
+the CSR edge list); it is exposed here because it is useful on any graph
+this module builds.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..kernels import ops as _ops
+from . import engine as _engine
+from . import snn as _snn
+
+
+# --------------------------------------------------------------------------- #
+# Connected components (vectorized)                                            #
+# --------------------------------------------------------------------------- #
+def min_label_components(n: int, rows: np.ndarray, cols: np.ndarray) -> np.ndarray:
+    """Per-node component labels: the minimum node id reachable from each node.
+
+    Vectorized min-label propagation with pointer jumping (Shiloach–Vishkin
+    flavour): every round scatter-mins neighbor labels along both edge
+    directions, then compresses label chains (``lab = lab[lab]``) until
+    idempotent.  Labels are monotonically non-increasing and bounded below,
+    so the loop terminates; at the fixed point no edge can lower a label,
+    hence labels are constant on components and equal to the component's
+    minimum id.  Pointer jumping makes path graphs converge in O(log n)
+    rounds instead of O(diameter); each round is O(|E|) with no Python loop
+    over nodes.  Edges may be given in either or both directions.
+    """
+    lab = np.arange(n, dtype=np.int64)
+    if n == 0 or rows.size == 0:
+        return lab
+    rows = np.asarray(rows, np.int64)
+    cols = np.asarray(cols, np.int64)
+    while True:
+        new = lab.copy()
+        np.minimum.at(new, rows, lab[cols])
+        np.minimum.at(new, cols, lab[rows])
+        changed = bool((new < lab).any())
+        lab = new
+        while True:
+            jumped = lab[lab]
+            if (jumped == lab).all():
+                break
+            lab = jumped
+        if not changed:
+            return lab
+
+
+# --------------------------------------------------------------------------- #
+# CSR plumbing                                                                 #
+# --------------------------------------------------------------------------- #
+def _indptr_from_counts(counts: np.ndarray) -> np.ndarray:
+    out = np.zeros(counts.size + 1, np.int64)
+    np.cumsum(counts, out=out[1:])
+    return out
+
+
+def _permute_rows(indptr, indices, distances, dest):
+    """Reorder CSR rows: input row i becomes output row ``dest[i]``.
+
+    One O(nnz) gather; used to undo the alpha sort (``dest = index.order``)
+    so the public graph is in original point order.
+    """
+    counts = np.diff(indptr)
+    counts_out = np.empty_like(counts)
+    counts_out[dest] = counts
+    out_indptr = _indptr_from_counts(counts_out)
+    pos = np.repeat(out_indptr[:-1][dest] - indptr[:-1], counts) \
+        + np.arange(indices.size)
+    out_idx = np.empty_like(indices)
+    out_idx[pos] = indices
+    out_d = None
+    if distances is not None:
+        out_d = np.empty_like(distances)
+        out_d[pos] = distances
+    return out_indptr, out_idx, out_d
+
+
+def _mirror_merge(indptr, cols, dists, chunk: int):
+    """Complete a block-upper-triangular self-join with its mirror pairs.
+
+    Input rows/cols are sorted positions; every pair (i, j) whose column
+    falls in a LATER query chunk than its row was evaluated exactly once, so
+    its mirror (j, i) is added here (intra-chunk pairs were evaluated in
+    both directions already).  Mirrored neighbors of row j all precede j's
+    chunk and are inserted ahead of the direct ones in ascending source
+    order, so merged rows stay ascending in sorted position — the invariant
+    every other engine path guarantees.  Distances mirror verbatim — valid
+    because native-metric distances (and non-native squared Euclidean for
+    the query-independent transforms) are symmetric in exact arithmetic;
+    the one asymmetric combination (mips with ``native=False``, whose
+    lifted distance depends on which point is the query) is rejected in
+    `build_neighbor_graph` before this runs.
+    """
+    n = indptr.size - 1
+    counts_d = np.diff(indptr)
+    rows = np.repeat(np.arange(n, dtype=np.int64), counts_d)
+    cross = (cols // chunk) > (rows // chunk)
+    rows_m, cols_m = cols[cross], rows[cross]
+    d_m = dists[cross] if dists is not None else None
+    src = np.argsort(rows_m, kind="stable")  # group by target row, keep order
+    rows_m, cols_m = rows_m[src], cols_m[src]
+    counts_m = np.bincount(rows_m, minlength=n).astype(np.int64)
+    indptr_m = _indptr_from_counts(counts_m)
+    out_indptr = _indptr_from_counts(counts_m + counts_d)
+    start = out_indptr[:-1]
+    pos_m = np.repeat(start - indptr_m[:-1], counts_m) + np.arange(rows_m.size)
+    pos_d = np.repeat(start + counts_m - indptr[:-1], counts_d) \
+        + np.arange(cols.size)
+    out_cols = np.empty(rows_m.size + cols.size, np.int64)
+    out_cols[pos_m] = cols_m
+    out_cols[pos_d] = cols
+    out_d = None
+    if dists is not None:
+        out_d = np.empty(out_cols.size, dists.dtype)
+        out_d[pos_m] = d_m[src]
+        out_d[pos_d] = dists
+    return out_indptr, out_cols, out_d
+
+
+# --------------------------------------------------------------------------- #
+# The chunked self-join loop                                                   #
+# --------------------------------------------------------------------------- #
+def _self_join(index, segments, xq, aq, r, th, *, query_chunk: int,
+               segs_per_chunk: int, query_tile: int, use_pallas):
+    """Run sorted query chunks through `engine.run_csr` over ``segments``.
+
+    ``segs_per_chunk > 0`` turns on the triangular schedule: chunk k only
+    sees segments from its own first segment onward (requires chunks and
+    segments to tile the sorted order with ``query_chunk`` an exact multiple
+    of the segment size).  Returns chunk-major (= ascending sorted row)
+    ``(counts, flat_ids, flat_dh)``.
+    """
+    m = xq.shape[0]
+    aq64 = np.asarray(aq, np.float64)
+    r64 = np.asarray(r, np.float64)
+    counts = np.zeros(m, np.int64)
+    ids_parts: list[np.ndarray] = []
+    dh_parts: list[np.ndarray] = []
+    for c0 in range(0, m, query_chunk):
+        c1 = min(c0 + query_chunk, m)
+        k0 = (c0 // query_chunk) * segs_per_chunk if segs_per_chunk else 0
+        # the schedule: alpha-adjacent queries span a narrow window, so most
+        # segments fail this interval test and never launch a kernel
+        live = [s for s in segments[k0:]
+                if _engine._window_may_hit(s, aq64[c0:c1], r64[c0:c1])]
+        qp, aqp, rp, thp, _ = _ops.pad_queries(
+            xq[c0:c1], aq[c0:c1], r[c0:c1], th[c0:c1], tq=query_tile)
+        _, cnt, ids, dh = _engine.run_csr(
+            live, qp, aqp, rp, thp, c1 - c0,
+            query_tile=query_tile, use_pallas=use_pallas)
+        counts[c0:c1] = cnt
+        ids_parts.append(ids)
+        dh_parts.append(dh)
+    flat_ids = (np.concatenate(ids_parts) if ids_parts
+                else np.zeros(0, np.int64))
+    flat_dh = (np.concatenate(dh_parts) if dh_parts
+               else np.zeros(0, np.float32))
+    return counts, flat_ids, flat_dh
+
+
+def _resolve_chunk(n: int, query_chunk: int | None, memory_budget_mb,
+                   align: int | None, block: int) -> int:
+    """Pick the query chunk size: explicit, or sized to a memory budget.
+
+    The budget bounds the worst case of the oracle (CPU) path — one cached
+    dense float32 filter of shape (chunk, n_padded) per chunk when every
+    segment is live — which is also a safe proxy for device-memory pressure
+    on TPU (flat CSR outputs scale with the same product).  A budget is a
+    CEILING: it floors the derived chunk, never inflates it.
+
+    ``align`` is the segment size the symmetric triangular schedule needs
+    chunks to tile in whole multiples of (None when any chunk size works:
+    the plain and sharded schedules).  Alignment floors to whole segments —
+    again never inflating a budgeted chunk — except that one segment is the
+    minimum a chunk can be.
+    """
+    if memory_budget_mb is not None:
+        n_pad = _ops.round_up(n, block)
+        cs = int(memory_budget_mb * 2**20) // (4 * n_pad)
+    else:
+        cs = int(query_chunk) if query_chunk else 2048
+    cs = max(cs, 1)
+    if align:
+        cs = max(cs // align, 1) * align
+    return cs
+
+
+def _graph_from_join(index, segments, x_sorted, eps, *, symmetric: bool,
+                     query_chunk: int, segs_per_chunk: int, query_tile: int,
+                     use_pallas, return_distance: bool, native: bool):
+    """Shared tail of both public builders: join, finalize, mirror, unsort."""
+    xq, aq, r, th, qsq = _snn.prepare_query_predicates(index, x_sorted, eps)
+    counts, flat_ids, flat_dh = _self_join(
+        index, segments, xq, aq, r, th, query_chunk=query_chunk,
+        segs_per_chunk=segs_per_chunk if symmetric else 0,
+        query_tile=query_tile, use_pallas=use_pallas)
+    indptr = _indptr_from_counts(counts)
+    fin = _snn.csr_finalize(index, indptr, flat_ids, flat_dh, xq, qsq, counts,
+                            return_distance, native)
+    cols, dists = fin.indices, fin.distances
+    if symmetric:
+        indptr, cols, dists = _mirror_merge(indptr, cols, dists, query_chunk)
+        cols = index.order[cols]  # sorted positions -> original ids
+    indptr, cols, dists = _permute_rows(indptr, cols, dists, index.order)
+    return _snn.CSRNeighbors(indptr, cols, dists)
+
+
+# --------------------------------------------------------------------------- #
+# Public builders                                                              #
+# --------------------------------------------------------------------------- #
+def build_neighbor_graph(
+    x: np.ndarray,
+    eps,
+    *,
+    index: _snn.SNNIndex | None = None,
+    metric: str = "euclidean",
+    return_distance: bool = False,
+    symmetric: bool = False,
+    query_chunk: int | None = 2048,
+    memory_budget_mb: float | None = None,
+    segment_rows: int | None = None,
+    block: int = 512,
+    query_tile: int = 128,
+    use_pallas: bool | None = None,
+    native: bool = True,
+    n_iter: int = 64,
+) -> _snn.CSRNeighbors:
+    """Exact (n, n) eps-neighbor self-join of ``x`` as one `CSRNeighbors`.
+
+    Row i lists every point of ``x`` within ``eps`` of ``x[i]`` (itself
+    included for metrics where d(i, i) <= eps), with rows and column ids in
+    original point order and row contents ascending in the index's sorted
+    order — bit-identical per row to ``query_radius_csr(index, x, eps)``.
+
+    Args:
+      x: (n, d) points; the database and the query set.
+      eps: radius in the native metric (inner-product threshold for mips).
+      index: prebuilt `SNNIndex` over exactly ``x`` (built here if None).
+      symmetric: evaluate each cross-chunk pair once and mirror it (roughly
+        halves predicate work; see module docstring for the boundary-tie
+        caveat).
+      query_chunk / memory_budget_mb: rows per scheduled chunk, given
+        directly or derived from a device-memory budget (the budget wins
+        when both are set).
+      segment_rows: rows per engine segment (window-prune granularity);
+        defaults to ``block``.
+      block / query_tile / use_pallas / native: engine knobs, as in
+        `query_radius_csr`.
+
+    Returns:
+      `CSRNeighbors` with ``distances`` populated iff ``return_distance``.
+    """
+    x = np.asarray(x)
+    if index is None:
+        index = _snn.build_index(x, metric=metric, n_iter=n_iter)
+    n = index.n
+    if x.ndim != 2 or x.shape[0] != n:
+        raise ValueError(f"x must be the index's (n, d) data; got shape "
+                         f"{x.shape} for an index of n={n}")
+    if symmetric and return_distance and not native and index.metric == "mips":
+        # the lifted squared-Euclidean distance is query-dependent
+        # (||p~_j - q~_i||^2 carries ||q_i||^2), so mirroring it is wrong;
+        # native mips distances (p.q) are symmetric and fine
+        raise ValueError("symmetric=True cannot mirror non-native mips "
+                         "distances; use native=True or symmetric=False")
+    if n == 0:
+        return _snn.CSRNeighbors(
+            np.zeros(1, np.int64), np.zeros(0, np.int64),
+            np.zeros(0, np.float64) if return_distance else None)
+    sr = max(int(segment_rows), 1) if segment_rows is not None else block
+    cs = _resolve_chunk(n, query_chunk, memory_budget_mb,
+                        sr if symmetric else None, block)
+    ids = np.arange(n, dtype=np.int64) if symmetric else None
+    segments = _engine.segments_from_index(index, rows_per_segment=sr,
+                                           block=block, ids=ids)
+    return _graph_from_join(
+        index, segments, x[index.order], eps, symmetric=symmetric,
+        query_chunk=cs, segs_per_chunk=cs // sr, query_tile=query_tile,
+        use_pallas=use_pallas, return_distance=return_distance, native=native)
+
+
+def build_neighbor_graph_sharded(
+    x: np.ndarray,
+    mesh,
+    eps,
+    *,
+    index: _snn.SNNIndex | None = None,
+    metric: str = "euclidean",
+    axis: str = "data",
+    return_distance: bool = False,
+    query_chunk: int | None = 2048,
+    memory_budget_mb: float | None = None,
+    block: int = 512,
+    query_tile: int = 128,
+    use_pallas: bool | None = None,
+    native: bool = True,
+    n_iter: int = 64,
+) -> _snn.CSRNeighbors:
+    """`build_neighbor_graph` over a mesh-sharded database.
+
+    The segment list is the mesh's shard decomposition (one `Segment` per
+    device of ``axis``, exactly as `query_radius_csr_sharded` uses), so the
+    sorted-chunk schedule prunes whole shards per chunk: a query chunk
+    touches only the contiguous run of shards its alpha window overlaps.
+    Symmetry is not exploited here — the shard decomposition is the mesh's,
+    not the chunk schedule's, so the triangular split does not apply.
+    Results are bit-identical to the single-device `build_neighbor_graph`
+    with ``symmetric=False``.
+    """
+    from . import sharded as _sharded
+
+    x = np.asarray(x)
+    if index is None:
+        index = _snn.build_index(x, metric=metric, n_iter=n_iter)
+    n = index.n
+    if x.ndim != 2 or x.shape[0] != n:
+        raise ValueError(f"x must be the index's (n, d) data; got shape "
+                         f"{x.shape} for an index of n={n}")
+    if n == 0:
+        return _snn.CSRNeighbors(
+            np.zeros(1, np.int64), np.zeros(0, np.int64),
+            np.zeros(0, np.float64) if return_distance else None)
+    cs = _resolve_chunk(n, query_chunk, memory_budget_mb, None, block)
+    segments = _sharded.mesh_segments(index, mesh, axis=axis, block=block)
+    return _graph_from_join(
+        index, segments, x[index.order], eps, symmetric=False,
+        query_chunk=cs, segs_per_chunk=0, query_tile=query_tile,
+        use_pallas=use_pallas, return_distance=return_distance, native=native)

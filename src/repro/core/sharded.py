@@ -173,19 +173,31 @@ def query_radius_csr_sharded(
     """
     from . import engine as _engine
 
-    nshards = _axis_size(mesh, axis)
-    xs_h, al_h, hn_h, od_h, n_per = _pad_for_shards(index, nshards, block)
-    # per-shard padded slices: row padding is a no-op (n_per is a block
-    # multiple); make_segment pads d to the 128-lane multiple to match queries
-    segments = [_engine.make_segment(xs_h[k * n_per:(k + 1) * n_per],
-                                     al_h[k * n_per:(k + 1) * n_per],
-                                     hn_h[k * n_per:(k + 1) * n_per],
-                                     od_h[k * n_per:(k + 1) * n_per],
-                                     block=block)
-                for k in range(nshards)]
+    segments = mesh_segments(index, mesh, axis=axis, block=block)
     return _engine.query_csr(index, segments, q, radius, return_distance,
                              query_tile=query_tile, use_pallas=use_pallas,
                              native=native)
+
+
+def mesh_segments(index: _snn.SNNIndex, mesh: Mesh, axis: str = "data",
+                  block: int = 512) -> list:
+    """One engine `Segment` per device of ``axis`` (the shard decomposition
+    used by `query_radius_csr_sharded` and `core.graph`'s sharded self-join).
+
+    Per-shard padded slices of the contiguously sharded sort order: row
+    padding inside a shard is a no-op (rows-per-shard is a block multiple);
+    `make_segment` pads d to the 128-lane multiple to match padded queries.
+    """
+    from . import engine as _engine
+
+    nshards = _axis_size(mesh, axis)
+    xs_h, al_h, hn_h, od_h, n_per = _pad_for_shards(index, nshards, block)
+    return [_engine.make_segment(xs_h[k * n_per:(k + 1) * n_per],
+                                 al_h[k * n_per:(k + 1) * n_per],
+                                 hn_h[k * n_per:(k + 1) * n_per],
+                                 od_h[k * n_per:(k + 1) * n_per],
+                                 block=block)
+            for k in range(nshards)]
 
 
 def prepare_query_arrays(index: _snn.SNNIndex, q: np.ndarray, radius):

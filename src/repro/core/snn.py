@@ -102,12 +102,19 @@ def build_index(
     """Algorithm 1: center, score by first PC, sort, precompute half-norms."""
     x_raw, xi = _metrics.transform_data(np.asarray(p), metric)
     x_raw = x_raw.astype(dtype)
-    mu = x_raw.mean(axis=0)
+    # an empty database has no mean; zeros keep every downstream predicate
+    # finite (a NaN mu would poison query centering even though the result
+    # set is necessarily empty)
+    mu = x_raw.mean(axis=0) if x_raw.shape[0] else np.zeros(x_raw.shape[1], dtype)
     x = x_raw - mu[None, :]
-    if x.shape[0] == 0:
-        d = x.shape[1]
-        return SNNIndex(mu, np.zeros(d, dtype), x, np.zeros(0, dtype),
-                        np.zeros(0, dtype), np.zeros(0, np.int64), metric, xi)
+    if x.shape[0] == 0 or x.shape[1] == 0:
+        # n == 0: nothing to sort; d == 0: every point is the origin and
+        # power iteration has no dimension to pick — alphas are all zero
+        # (v1 = 0 still yields a valid Cauchy–Schwarz window)
+        n, d = x.shape
+        return SNNIndex(mu, np.zeros(d, dtype), x, np.zeros(n, dtype),
+                        np.zeros(n, dtype), np.arange(n, dtype=np.int64),
+                        metric, xi)
     v1 = np.asarray(_power_iteration(jnp.asarray(x), n_iter=n_iter))
     alphas = x @ v1
     order = np.argsort(alphas, kind="stable")
@@ -244,6 +251,12 @@ def query_radius_fixed(index: SNNIndex, q: np.ndarray, radius, max_neighbors: in
     """
     from ..kernels import ops as _ops
 
+    if index.n == 0:
+        # ``order[idx % n]`` below would divide by zero; an empty database
+        # has well-defined results: K = min(max_neighbors, 0) = 0 columns
+        m = _metrics.transform_query(np.asarray(q), index.metric).shape[0]
+        return (np.zeros((m, 0), np.int64), np.zeros((m, 0), np.float64),
+                np.zeros((m, 0), bool), np.zeros(m, np.int64))
     # one padding contract for every path: rows to a block multiple with the
     # +BIG sentinel, features to the 128-lane multiple (zeros: dot-neutral)
     xs, al, hn, _, d = _ops.pad_database(index.xs, index.alphas,

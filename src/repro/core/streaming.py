@@ -44,6 +44,21 @@ from . import metrics as _metrics
 from . import snn as _snn
 
 
+def _as_batch(a: np.ndarray, d: int | None = None) -> np.ndarray:
+    """Normalize seed/append input to (b, d) rows.
+
+    A 1-D ``(k,)`` array is one point; a 1-D *empty* array is zero points —
+    of width ``d`` when a width is already known, else width 0, which marks
+    "no width committed yet" (``np.atleast_2d`` used to turn ``(0,)`` into
+    ``(1, 0)``, poisoning ``d`` so the first real append was rejected).
+    """
+    if a.ndim == 1:
+        a = a.reshape(1, -1) if a.size else a.reshape(0, d or 0)
+    if a.ndim != 2:
+        raise ValueError(f"expected (b, d) or (d,) points, got shape {a.shape}")
+    return a
+
+
 def merge_sorted_indexes(a: _snn.SNNIndex, b: _snn.SNNIndex) -> _snn.SNNIndex:
     """Stable merge of two alpha-sorted runs sharing mu/v1/metric/xi.
 
@@ -97,7 +112,8 @@ class StreamingSNNIndex:
         self._lock = threading.Lock()
         # raw rows as a list of chunks: append is O(1) in index size (the
         # O(n) concatenation is deferred to the rare `raw` materialization)
-        self._raw_parts = [np.atleast_2d(np.asarray(data, np.float32)).copy()]
+        # np.array copies: the seed must not alias a caller-mutable buffer
+        self._raw_parts = [_as_batch(np.array(data, dtype=np.float32))]
         base = _snn.build_index(self._raw_parts[0], metric=metric,
                                 n_iter=n_iter)
         self._n_at_build = base.n
@@ -143,16 +159,24 @@ class StreamingSNNIndex:
         snapshot until the one-assignment publish.
         """
         # np.array copies: the delta must not alias a caller-mutable buffer
-        pts = np.array(points, dtype=np.float32, ndmin=2)
-        if pts.ndim != 2 or pts.shape[1] != self.d:
-            # reject BEFORE touching any state (and before the empty-batch
-            # return: a wrong-width batch is a bug even when it has no rows)
-            raise ValueError(f"append expects (b, {self.d}) points, "
-                             f"got {pts.shape}")
-        if pts.shape[0] == 0:
-            return
+        pts = _as_batch(np.array(points, dtype=np.float32), self.d)
         with self._mutate:
+            # width validation runs under _mutate: a concurrent first append
+            # may have just committed the width of an empty seed, and a
+            # stale check here would let a second width slip through
+            width_free = self.n == 0 and self.d == 0  # width-unknown seed
+            if pts.shape[1] != self.d and not width_free:
+                # reject BEFORE touching any state (and before the
+                # empty-batch return: a wrong-width batch is a bug even
+                # when it has no rows)
+                raise ValueError(f"append expects (b, {self.d}) points, "
+                                 f"got {pts.shape}")
+            if pts.shape[0] == 0:
+                return
             with self._lock:
+                if width_free and self._raw_parts[0].shape[1] != pts.shape[1]:
+                    # the first real batch commits the width of an empty seed
+                    self._raw_parts = [np.zeros((0, pts.shape[1]), np.float32)]
                 parts = list(self._state[0])
                 self._raw_parts.append(pts)
             base = parts[0]

@@ -45,6 +45,10 @@ except ModuleNotFoundError:
             opts = list(elements)
             return _Strategy(lambda rng: opts[int(rng.integers(0, len(opts)))])
 
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
     def given(**strats):
         def deco(fn):
             seed0 = zlib.crc32(fn.__name__.encode())

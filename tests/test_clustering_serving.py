@@ -15,14 +15,12 @@ def test_dbscan_backends_identical(seed, eps, min_samples):
     rng = np.random.default_rng(seed)
     x = rng.normal(size=(150, 3)).astype(np.float32)
     l_snn = dbscan(x, eps, min_samples, backend="snn")
-    l_csr = dbscan(x, eps, min_samples, backend="snn-csr")
-    l_bf = dbscan(x, eps, min_samples, backend="brute")
-    l_kd = dbscan(x, eps, min_samples, backend="kdtree")
-    # labels must be identical up to permutation; our BFS order is shared,
-    # so they are identical outright
-    assert (l_snn == l_csr).all()
-    assert (l_snn == l_bf).all()
-    assert (l_snn == l_kd).all()
+    # labels must be identical up to permutation; every backend shares the
+    # vectorized connected-components labeling (cluster ids ordered by each
+    # component's smallest core point), so they are identical outright
+    for backend in ("snn-csr", "snn-graph", "brute", "kdtree"):
+        assert (l_snn == dbscan(x, eps, min_samples, backend=backend)).all(), \
+            backend
 
 
 def test_dbscan_recovers_blobs():

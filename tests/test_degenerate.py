@@ -1,0 +1,178 @@
+"""Degenerate-geometry and edge-case suite.
+
+Empty databases, empty query batches, single points, and zero-variance
+(all-identical) data across every query path and the graph builder, plus
+hand-computed NMI values.  These inputs historically crashed:
+``query_radius_fixed`` divided by zero on an empty index (``order[idx % n]``)
+and `StreamingSNNIndex` turned a ``(0,)`` seed into a (1, 0) database.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (StreamingSNNIndex, build_index, build_neighbor_graph,
+                        dbscan, query_radius, query_radius_batch,
+                        query_radius_csr, query_radius_fixed)
+from repro.core.dbscan import normalized_mutual_information as nmi
+
+
+# --------------------------------------------------------------------------- #
+# n = 0 (empty database)                                                       #
+# --------------------------------------------------------------------------- #
+def test_empty_database_index_is_finite():
+    index = build_index(np.zeros((0, 3), np.float32))
+    assert index.n == 0 and index.d == 3
+    assert np.isfinite(index.mu).all(), "empty index must not have NaN mu"
+
+
+def test_empty_database_all_query_paths():
+    index = build_index(np.zeros((0, 3), np.float32))
+    q = np.ones((2, 3), np.float32)
+
+    idx, dist = query_radius(index, q[0], 0.5)
+    assert idx.size == 0 and dist.size == 0
+
+    res = query_radius_batch(index, q, 0.5)
+    assert all(i.size == 0 and d.size == 0 for i, d in res)
+
+    csr = query_radius_csr(index, q, 0.5)
+    assert csr.m == 2 and csr.nnz == 0
+
+    # used to raise: ``order[idx % index.n]`` is a division by zero at n == 0
+    idx, sq, valid, counts = query_radius_fixed(index, q, 0.5, 8)
+    assert idx.shape == (2, 0) and sq.shape == (2, 0)
+    assert valid.shape == (2, 0) and counts.tolist() == [0, 0]
+
+
+def test_empty_database_graph_and_dbscan():
+    x = np.zeros((0, 3), np.float32)
+    g = build_neighbor_graph(x, 0.5, return_distance=True)
+    assert g.m == 0 and g.nnz == 0 and g.distances.size == 0
+    for backend in ("snn", "snn-csr", "snn-graph", "brute", "kdtree"):
+        assert dbscan(x, 0.5, 5, backend=backend).size == 0
+
+
+# --------------------------------------------------------------------------- #
+# m = 0 (empty query batch)                                                    #
+# --------------------------------------------------------------------------- #
+def test_empty_query_batch():
+    rng = np.random.default_rng(0)
+    index = build_index(rng.random((40, 3)).astype(np.float32))
+    q = np.zeros((0, 3), np.float32)
+
+    assert query_radius_batch(index, q, 0.5) == []
+
+    csr = query_radius_csr(index, q, 0.5)
+    assert csr.m == 0 and csr.nnz == 0
+
+    idx, sq, valid, counts = query_radius_fixed(index, q, 0.5, 8)
+    assert idx.shape[0] == 0 and counts.size == 0
+
+
+# --------------------------------------------------------------------------- #
+# single point / all-identical points (zero-variance power iteration)          #
+# --------------------------------------------------------------------------- #
+def test_single_point_database():
+    x = np.full((1, 4), 3.0, np.float32)
+    index = build_index(x)
+    assert query_radius(index, x[0], 0.1, return_distance=False).tolist() == [0]
+    csr = query_radius_csr(index, x, 0.1, return_distance=False)
+    assert csr.row(0).tolist() == [0]
+    idx, sq, valid, counts = query_radius_fixed(index, x, 0.1, 4)
+    assert idx[0][valid[0]].tolist() == [0] and counts.tolist() == [1]
+    g = build_neighbor_graph(x, 0.1, return_distance=True)
+    assert g.row(0)[0].tolist() == [0] and g.row(0)[1].tolist() == [0.0]
+
+
+def test_all_identical_points():
+    """Zero-variance data: power iteration has no direction to find (v1 = 0
+    is still a valid Cauchy–Schwarz window direction — every alpha is 0)."""
+    n = 9
+    x = np.full((n, 3), 2.5, np.float32)
+    index = build_index(x)
+    assert np.isfinite(index.v1).all() and np.isfinite(index.alphas).all()
+
+    everyone = set(range(n))
+    assert set(query_radius(index, x[0], 1e-9,
+                            return_distance=False).tolist()) == everyone
+    csr = query_radius_csr(index, x, 1e-9, return_distance=False)
+    assert all(set(csr.row(i).tolist()) == everyone for i in range(n))
+    idx, sq, valid, counts = query_radius_fixed(index, x, 1e-9, n)
+    assert counts.tolist() == [n] * n
+
+    for symmetric in (False, True):
+        g = build_neighbor_graph(x, 1e-9, symmetric=symmetric)
+        assert np.diff(g.indptr).tolist() == [n] * n
+
+    # one dense cluster when min_samples is met, all-noise when it is not
+    for backend in ("snn", "snn-csr", "snn-graph", "brute", "kdtree"):
+        assert dbscan(x, 1e-9, min_samples=n, backend=backend).tolist() == [0] * n
+        assert dbscan(x, 1e-9, min_samples=n + 1,
+                      backend=backend).tolist() == [-1] * n
+
+
+def test_zero_width_database():
+    """d = 0: every point is the (0-dim) origin; nothing crashes."""
+    x = np.zeros((4, 0), np.float32)
+    index = build_index(x)
+    assert index.n == 4 and index.d == 0
+    got = query_radius_batch(index, x, 0.5, return_distance=False)
+    assert all(set(g.tolist()) == {0, 1, 2, 3} for g in got)
+
+
+# --------------------------------------------------------------------------- #
+# streaming seed validation                                                    #
+# --------------------------------------------------------------------------- #
+def test_streaming_empty_seed_adopts_first_batch_width():
+    # (0,) used to become a (1, 0) database, so d was 0 and appends rejected
+    s = StreamingSNNIndex(np.zeros((0,), np.float32))
+    assert s.n == 0
+    s.append(np.ones((3, 4), np.float32))
+    assert (s.n, s.d) == (3, 4)
+    got = s.query_radius_csr(np.ones((1, 4), np.float32), 0.5,
+                             return_distance=False)
+    assert set(got.row(0).tolist()) == {0, 1, 2}
+
+
+def test_streaming_sized_empty_seed_keeps_width():
+    s = StreamingSNNIndex(np.zeros((0, 5), np.float32))
+    assert (s.n, s.d) == (0, 5)
+    with pytest.raises(ValueError):
+        s.append(np.ones((2, 3), np.float32))   # wrong width stays an error
+    s.append(np.ones((2, 5), np.float32))
+    assert (s.n, s.d) == (2, 5)
+
+
+def test_streaming_one_dim_seed_is_one_point():
+    s = StreamingSNNIndex(np.ones(4, np.float32))
+    assert (s.n, s.d) == (1, 4)
+    s.append(np.zeros(4, np.float32))            # 1-D append: one point
+    assert s.n == 2
+    s.append(np.zeros((0,), np.float32))         # 1-D empty append: no-op
+    assert s.n == 2
+    with pytest.raises(ValueError):
+        StreamingSNNIndex(np.zeros((2, 2, 2), np.float32))
+
+
+# --------------------------------------------------------------------------- #
+# NMI against hand-computed values                                             #
+# --------------------------------------------------------------------------- #
+def test_nmi_hand_computed():
+    # identical / permuted labelings: NMI = 1
+    a = np.array([0, 0, 1, 1, 2, 2])
+    assert abs(nmi(a, a) - 1.0) < 1e-12
+    assert abs(nmi(a, np.array([2, 2, 0, 0, 1, 1])) - 1.0) < 1e-12
+
+    # independent labelings: contingency is uniform, MI = 0
+    assert nmi([0, 0, 1, 1], [0, 1, 0, 1]) == 0.0
+
+    # constant labeling carries no information against any labeling
+    assert nmi([0, 0, 0, 0], [0, 0, 1, 1]) == 0.0
+
+    # refinement: a = {0,1}{2,3}{4,5} vs b = {0..3}{4,5}.
+    # MI = (2 ln(3/2) + ln 3) / 3, H(a) = ln 3, H(b) = ln 3 - (2/3) ln 2,
+    # NMI = MI / ((H(a) + H(b)) / 2) = 0.7336804366512110
+    got = nmi([0, 0, 1, 1, 2, 2], [0, 0, 0, 0, 1, 1])
+    assert abs(got - 0.7336804366512110) < 1e-12
+
+    # empty input is defined as 0
+    assert nmi(np.zeros(0, int), np.zeros(0, int)) == 0.0

@@ -1,0 +1,176 @@
+"""The self-join neighbor-graph subsystem (core.graph) + array-based DBSCAN.
+
+The graph builder must be *indistinguishable* from running the CSR engine
+over the whole dataset as queries — same indptr, same indices, same row
+ordering — for every schedule (chunk size, segment size, memory budget,
+symmetric triangular join, sharded segment lists), and the vectorized
+connected-components labeling must reproduce the per-point BFS labels
+exactly.
+"""
+import types
+
+import numpy as np
+from _hyp_compat import given, settings, st
+
+from repro.core import (build_index, build_neighbor_graph,
+                        build_neighbor_graph_sharded, min_label_components,
+                        query_radius_csr)
+from repro.core.dbscan import dbscan, labels_from_graph, neighbor_graph
+
+
+def _assert_same_graph(got, want, check_dist=True):
+    assert (got.indptr == want.indptr).all()
+    assert (got.indices == want.indices).all()
+    if check_dist and want.distances is not None:
+        np.testing.assert_allclose(got.distances, want.distances,
+                                   rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(2, 400),
+       d=st.integers(1, 8), rscale=st.floats(0.2, 2.0),
+       symmetric=st.booleans())
+def test_graph_matches_csr_engine(seed, n, d, rscale, symmetric):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    eps = rscale * np.sqrt(d) * 0.4
+    index = build_index(x)
+    want = query_radius_csr(index, x, eps, return_distance=True)
+    got = build_neighbor_graph(x, eps, index=index, return_distance=True,
+                               symmetric=symmetric, query_chunk=96,
+                               segment_rows=48)
+    _assert_same_graph(got, want)
+
+
+def test_graph_other_metrics():
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(300, 5)).astype(np.float32) + 0.2
+    for metric, eps in (("cosine", 0.3), ("angular", 0.7), ("mips", 0.5)):
+        index = build_index(x, metric=metric)
+        want = query_radius_csr(index, x, eps, return_distance=True)
+        for symmetric in (False, True):
+            got = build_neighbor_graph(x, eps, metric=metric,
+                                       symmetric=symmetric,
+                                       return_distance=True,
+                                       query_chunk=128, segment_rows=64)
+            _assert_same_graph(got, want)
+
+
+def test_graph_schedule_invariance():
+    """Every (chunk, segment, budget, symmetry) schedule yields ONE graph."""
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(350, 4)).astype(np.float32)
+    base = build_neighbor_graph(x, 1.0)
+    for kw in (dict(query_chunk=64), dict(query_chunk=5000),
+               dict(query_chunk=64, segment_rows=32),
+               dict(memory_budget_mb=0.25), dict(memory_budget_mb=64),
+               dict(query_chunk=64, segment_rows=32, symmetric=True),
+               dict(symmetric=True)):
+        got = build_neighbor_graph(x, 1.0, **kw)
+        _assert_same_graph(got, base, check_dist=False)
+
+
+def test_graph_sharded_matches_single_device():
+    """The sharded builder over S shard segments == the plain builder.
+
+    `mesh_segments` only reads the mesh's axis sizes, so a shape-only stand-in
+    exercises a genuine multi-shard decomposition on one host.
+    """
+    rng = np.random.default_rng(11)
+    x = rng.normal(size=(500, 6)).astype(np.float32)
+    want = build_neighbor_graph(x, 1.2, return_distance=True)
+    for nshards in (1, 3, 4):
+        mesh = types.SimpleNamespace(shape={"data": nshards})
+        got = build_neighbor_graph_sharded(x, mesh, 1.2, return_distance=True,
+                                           query_chunk=128)
+        _assert_same_graph(got, want)
+
+
+def test_graph_rows_are_self_inclusive_and_symmetric():
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(150, 3)).astype(np.float32)
+    g = build_neighbor_graph(x, 0.9, symmetric=True)
+    rows = np.repeat(np.arange(g.m), np.diff(g.indptr))
+    assert ((g.indices == rows).sum() == g.m), "every point neighbors itself"
+    # symmetry: the set of (row, col) pairs equals the set of (col, row)
+    fwd = set(zip(rows.tolist(), g.indices.tolist()))
+    assert fwd == {(c, r) for r, c in fwd}
+
+
+def test_symmetric_mips_nonnative_distances_rejected():
+    """Lifted (non-native) mips distances are query-dependent — mirroring
+    them would be silently wrong, so the combination must raise."""
+    import pytest
+
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(50, 4)).astype(np.float32) + 0.1
+    with pytest.raises(ValueError, match="mips"):
+        build_neighbor_graph(x, 0.5, metric="mips", symmetric=True,
+                             return_distance=True, native=False)
+    # native mips distances (p.q) ARE symmetric: allowed and correct
+    index = build_index(x, metric="mips")
+    want = query_radius_csr(index, x, 0.5, return_distance=True)
+    got = build_neighbor_graph(x, 0.5, metric="mips", symmetric=True,
+                               return_distance=True, query_chunk=16,
+                               segment_rows=8)
+    _assert_same_graph(got, want)
+
+
+def test_resolve_chunk_honors_budget_and_explicit_size():
+    """A memory budget is a ceiling (floor, never inflate); an explicit
+    query_chunk is honored exactly on the non-symmetric schedules."""
+    from repro.core.graph import _resolve_chunk
+
+    # explicit chunk, no alignment required: taken verbatim
+    assert _resolve_chunk(10_000, 64, None, None, 512) == 64
+    # budget-derived: floor(budget / row_bytes), not rounded up
+    n, block = 50_000, 512
+    n_pad = 50_176
+    cs = _resolve_chunk(n, None, 100, None, block)
+    assert cs == int(100 * 2**20) // (4 * n_pad)
+    # symmetric alignment floors to whole segments (min one segment)
+    assert _resolve_chunk(n, 522, None, 512, block) == 512
+    assert _resolve_chunk(n, 100, None, 512, block) == 512
+    assert _resolve_chunk(n, 1500, None, 512, block) == 1024
+
+
+def test_min_label_components_hand_graphs():
+    # path 0-1-2-3 plus isolated 4, and a 5-6 pair
+    rows = np.array([0, 1, 2, 5])
+    cols = np.array([1, 2, 3, 6])
+    lab = min_label_components(7, rows, cols)
+    assert lab.tolist() == [0, 0, 0, 0, 4, 5, 5]
+    # no edges / no nodes
+    assert min_label_components(3, np.zeros(0, int), np.zeros(0, int)).tolist() \
+        == [0, 1, 2]
+    assert min_label_components(0, np.zeros(0, int), np.zeros(0, int)).size == 0
+    # long path converges (pointer jumping, not O(diameter) scans)
+    n = 500
+    lab = min_label_components(n, np.arange(n - 1), np.arange(1, n))
+    assert (lab == 0).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000), eps=st.floats(0.3, 1.2),
+       min_samples=st.integers(2, 8))
+def test_labels_match_reference_bfs(seed, eps, min_samples):
+    # the retired per-point BFS lives on in benchmarks.bench_graph as the
+    # ONE semantics oracle (shared here so a tie-rule tweak can't fork it)
+    from benchmarks.bench_graph import _bfs_labels
+
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(180, 3)).astype(np.float32)
+    graph = neighbor_graph(x, eps, "brute")
+    got = labels_from_graph(graph, min_samples)
+    assert (got == _bfs_labels(graph, min_samples)).all()
+
+
+def test_dbscan_query_chunk_passthrough():
+    """`query_chunk` reaches the graph builder and never changes labels."""
+    rng = np.random.default_rng(9)
+    x = rng.normal(size=(300, 3)).astype(np.float32)
+    want = dbscan(x, 0.7, 5, backend="snn")
+    for backend in ("snn-csr", "snn-graph"):
+        for chunk in (64, 300, 4096):
+            got = dbscan(x, 0.7, 5, backend=backend, query_chunk=chunk)
+            assert (got == want).all(), (backend, chunk)
