@@ -1,0 +1,137 @@
+"""Packed (plan/execute) vs looped engine in dispatch-bound regimes.
+
+The packed executor (`engine.run_csr_packed` over a `SegmentPack` plan)
+exists to delete per-segment dispatch: the looped engine launches one kernel
+(plus a host sync) per live segment per pass, so many-segment indexes — a
+streaming LSM index with dozens of deltas, a graph build whose sorted chunks
+sweep hundreds of narrow segments — pay orchestration, not math.  Each cell
+here runs the SAME query through both executors (outputs are bit-identical;
+tests/test_engine_packed.py asserts it) and records wall time AND the
+engine's dispatch counters (`benchmarks.common.dispatch_counts`), so the
+trajectory shows the overhead being removed, not just the end effect.
+
+Two regimes:
+
+* ``engine/S{S}`` — a single uniform index split into S segments of
+  ``rows`` rows (the streaming/many-delta shape), queried with a radius
+  that keeps >= S_live segments live;
+* ``graph`` — `build_neighbor_graph` with narrow sorted chunks, packed vs
+  looped, end-to-end (one plan reused by every chunk vs per-chunk per-
+  segment launches).
+
+Writes ``BENCH_engine_packed.json`` (folded into ``BENCH_trajectory.json``
+by benchmarks.run's aggregate step).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core import build_index
+from repro.core import engine as eng
+from repro.core.graph import build_neighbor_graph
+from repro.core.snn import prepare_query_predicates
+from repro.data.pipeline import make_uniform
+from repro.kernels import ops as _ops
+
+from .common import dispatch_counts, row, timeit
+
+OUT_JSON = "BENCH_engine_packed.json"
+
+
+def _engine_cell(S: int, rows: int, m: int, tq: int, radius: float,
+                 record: list) -> dict:
+    n = S * rows
+    x = make_uniform(n, 16, seed=0).astype(np.float32)
+    index = build_index(x)
+    q = x[:m]
+    xq, aq, r, th, _ = prepare_query_predicates(index, q, radius)
+    qp, aqp, rp, thp, _ = _ops.pad_queries(xq, aq, r, th, tq=tq)
+    segments = eng.segments_from_index(index, rows_per_segment=rows,
+                                       block=rows)
+    pack = eng.SegmentPack.build(segments)
+    live = int(pack.live_mask(np.asarray(aqp, np.float64)[:m],
+                              np.asarray(rp, np.float64)[:m]).sum())
+
+    looped_disp: dict = {}
+    with dispatch_counts(looped_disp):
+        indptr, *_ = eng.run_csr(segments, qp, aqp, rp, thp, m, query_tile=tq)
+    packed_disp: dict = {}
+    with dispatch_counts(packed_disp):
+        eng.run_csr_packed(pack, qp, aqp, rp, thp, m, query_tile=tq)
+
+    t_loop = timeit(eng.run_csr, segments, qp, aqp, rp, thp, m,
+                    query_tile=tq, repeat=3)
+    t_pack = timeit(eng.run_csr_packed, pack, qp, aqp, rp, thp, m,
+                    query_tile=tq, repeat=3)
+    tag = f"S{S}/rows{rows}/m{m}"
+    record.append(row(f"engine_packed/looped/{tag}", t_loop,
+                      f"launches={looped_disp['kernel_launches']}"))
+    record.append(row(f"engine_packed/packed/{tag}", t_pack,
+                      f"launches={packed_disp['kernel_launches']}"))
+    return {
+        "regime": "engine", "segments": S, "rows_per_segment": rows,
+        "n": n, "m": m, "query_tile": tq, "radius": radius,
+        "live_segments": live, "nnz": int(indptr[-1]),
+        "timings_us": {"looped": t_loop * 1e6, "packed": t_pack * 1e6},
+        "dispatch": {"looped": looped_disp, "packed": packed_disp},
+        "speedup": t_loop / t_pack,
+    }
+
+
+def _graph_cell(n: int, record: list) -> dict:
+    x = make_uniform(n, 8, seed=1).astype(np.float32)
+    kw = dict(eps=0.45, query_chunk=128, segment_rows=128, block=128,
+              query_tile=128)
+    looped_disp: dict = {}
+    with dispatch_counts(looped_disp):
+        g = build_neighbor_graph(x, packed=False, **kw)
+    packed_disp: dict = {}
+    with dispatch_counts(packed_disp):
+        build_neighbor_graph(x, packed=True, **kw)
+    t_loop = timeit(build_neighbor_graph, x, packed=False, repeat=2, **kw)
+    t_pack = timeit(build_neighbor_graph, x, packed=True, repeat=2, **kw)
+    record.append(row(f"engine_packed/graph_looped/n{n}", t_loop,
+                      f"launches={looped_disp['kernel_launches']}"))
+    record.append(row(f"engine_packed/graph_packed/n{n}", t_pack,
+                      f"launches={packed_disp['kernel_launches']}"))
+    return {
+        "regime": "graph", "n": n, "nnz": g.nnz, **kw,
+        "timings_us": {"looped": t_loop * 1e6, "packed": t_pack * 1e6},
+        "dispatch": {"looped": looped_disp, "packed": packed_disp},
+        "speedup": t_loop / t_pack,
+    }
+
+
+def run(full: bool = False, out_json: str = OUT_JSON):
+    rows_csv: list[str] = []
+    cells: list[dict] = []
+    # many-segment regimes; all keep >= 64 segments live (recorded per cell)
+    grid = [(64, 128, 64, 64, 0.9), (128, 128, 64, 64, 0.9),
+            (256, 64, 64, 64, 0.9)]
+    if full:
+        grid.append((512, 64, 128, 128, 0.9))
+    for S, seg_rows, m, tq, radius in grid:
+        cells.append(_engine_cell(S, seg_rows, m, tq, radius, rows_csv))
+    cells.append(_graph_cell(32768 if full else 16384, rows_csv))
+    import jax
+
+    payload = {
+        "benchmark": "engine_packed",
+        "backend": jax.default_backend(),
+        "full": full,
+        "cells": cells,
+        "max_engine_speedup": max(c["speedup"] for c in cells
+                                  if c["regime"] == "engine"),
+    }
+    with open(out_json, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {os.path.abspath(out_json)}", flush=True)
+    return rows_csv
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

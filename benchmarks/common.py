@@ -1,13 +1,42 @@
-"""Shared benchmark utilities: timing + CSV emission.
+"""Shared benchmark utilities: timing, CSV emission, dispatch accounting.
 
 Every benchmark prints ``name,us_per_call,derived`` CSV rows (the contract of
-benchmarks.run) and returns the rows for aggregation.
+benchmarks.run) and returns the rows for aggregation.  `dispatch_counts`
+snapshots the engine's kernel-launch / host-transfer counters around a block,
+so benchmarks can record dispatch overhead (the thing the packed execution
+plan removes) alongside wall time in the trajectory.
 """
 from __future__ import annotations
 
+import contextlib
 import time
 
 import numpy as np
+
+
+@contextlib.contextmanager
+def dispatch_counts(record: dict):
+    """Record engine dispatch deltas (kernel launches, host transfers).
+
+    Usage::
+
+        stats = {}
+        with dispatch_counts(stats):
+            run_query(...)
+        # stats == {"kernel_launches": ..., "host_transfers": ...}
+
+    Counters come from `repro.core.engine.DISPATCH_STATS`; only the delta
+    across the block is recorded, so nesting and interleaving with warmup
+    calls is safe.
+    """
+    from repro.core import engine as _engine
+
+    before = _engine.DISPATCH_STATS.snapshot()
+    try:
+        yield record
+    finally:
+        after = _engine.DISPATCH_STATS.snapshot()
+        record.update({k: after[k] - before[k] for k in after})
 
 
 def timeit(fn, *args, repeat: int = 3, number: int = 1, **kw):

@@ -73,7 +73,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,fig3,table45,table7,theory,"
-                         "roofline,csr,streaming,graph")
+                         "roofline,csr,streaming,graph,packed")
     ap.add_argument("--aggregate-only", action="store_true",
                     help=f"just rebuild {TRAJECTORY_JSON} from existing "
                          "BENCH_*.json files")
@@ -82,9 +82,10 @@ def main() -> None:
         aggregate()
         return
 
-    from . import (bench_csr_engine, bench_fig2_synthetic, bench_fig3_grid,
-                   bench_graph, bench_roofline, bench_streaming,
-                   bench_table45_realworld, bench_table7_dbscan, bench_theory)
+    from . import (bench_csr_engine, bench_engine_packed, bench_fig2_synthetic,
+                   bench_fig3_grid, bench_graph, bench_roofline,
+                   bench_streaming, bench_table45_realworld,
+                   bench_table7_dbscan, bench_theory)
     suites = {
         "fig2": bench_fig2_synthetic.run,
         "fig3": bench_fig3_grid.run,
@@ -95,6 +96,7 @@ def main() -> None:
         "csr": bench_csr_engine.run,
         "streaming": bench_streaming.run,
         "graph": bench_graph.run,
+        "packed": bench_engine_packed.run,
     }
     selected = args.only.split(",") if args.only else list(suites)
     unknown = [s for s in selected if s not in suites]

@@ -20,6 +20,10 @@ class SNNConfig:
     serve_timeout_ms: float = 2.0   # batching window
     serve_exact: bool = True        # two-pass CSR engine (exact, untruncated);
                                     # False restores the fixed-shape top-K path
+    serve_packed: bool = True       # execute the cached SegmentPack plan (one
+                                    # stacked launch per pass, plan reused
+                                    # across requests of an index generation);
+                                    # False loops one launch per segment
     # streaming (LSM) index: appends become sorted delta segments on frozen
     # mu/v1; deltas merge into the base past delta_merge_ratio × base rows or
     # max_delta_segments; a full re-index (fresh mu/v1/xi) only happens once

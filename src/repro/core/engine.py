@@ -1,19 +1,37 @@
-"""Unified multi-segment CSR execution engine.
+"""Unified multi-segment CSR execution engine: plan / execute.
 
 A *segment* is any contiguous sorted run of database rows — a whole index,
 one mesh shard's slice, or an LSM delta of a streaming index are all the
 same thing here.  The engine runs the ONE two-pass exact CSR orchestration
 shared by every device path:
 
-1. **pass 1 — count**: per-segment, per-query survivor counts via
-   ``kernels.snn_count`` (or one cached dense-filter evaluation on the
-   oracle path), giving a (S, m) matrix;
-2. **host prefix sums**: summing over segments yields the global CSR
-   ``indptr``; an *exclusive* prefix over the segment axis yields each
-   segment's per-query write base — segment k's survivors of query i land
-   in slots ``indptr[i] + sum(per[:k, i])``;
-3. **pass 2 — compact**: per-segment ``kernels.snn_compact`` scatters
-   survivors into disjoint slots of one shared flat array.
+1. **pass 1 — count**: per-segment, per-query survivor counts,
+   giving a (S, m) matrix;
+2. **prefix sums**: summing over segments yields the global CSR ``indptr``;
+   an *exclusive* prefix over the segment axis yields each segment's
+   per-query write base — segment k's survivors of query i land in slots
+   ``indptr[i] + sum(per[:k, i])``;
+3. **pass 2 — compact**: survivors scatter into disjoint slots of one
+   shared flat array.
+
+Two executors share that orchestration:
+
+* the **looped** executor (`run_csr`) launches ``kernels.snn_count`` /
+  ``snn_compact`` once per live segment with a host sync after each, and
+  does the prefix sums in numpy — the original engine, kept as the
+  cross-check oracle and as the fallback for oversized oracle batches;
+* the **packed** executor (`run_csr_packed`) executes a prebuilt *plan* —
+  a `SegmentPack` stacking all of an index's segments into one
+  ``(S, n_pad, lanes)`` device tensor, built once per index epoch.  The
+  per-segment Python prune loop becomes a single vectorized interval-
+  overlap bitmask, each pass is ONE stacked-grid launch over (live
+  segments × query tiles × db blocks), the prefix sums run on device
+  (``jnp.cumsum``), and exactly one scalar (the total neighbor count —
+  unavoidable: it sizes the flat output) crosses to the host between the
+  passes, followed by the single transfer of the final CSR triple.  In
+  many-segment regimes (streaming LSM indexes, `core.graph`'s narrow
+  sorted chunks) this removes the S-fold dispatch + sync overhead that
+  dominates small-radius queries.
 
 Disjointness only needs each segment to be internally sorted by alpha (the
 kernels emit survivors in ascending local order) — segments may overlap in
@@ -26,20 +44,100 @@ disagreement between differently-compiled filters would corrupt the scatter
 layout (a final ``>= 0`` check fails loudly).  Segments whose alpha range
 cannot intersect any query window are skipped entirely (zero kernel
 launches), which is what makes many-segment streaming indexes and
-mostly-padding shards cheap.
+mostly-padding shards cheap.  Packed output is bit-identical to looped
+output: both evaluate the same predicate pipeline per element (the stacked
+matmul reduces the same d-length vectors per output element) and share the
+slot formula above.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
 
 import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops as _ops
+from ..kernels import ref as _ref
 
 # Padding rows carry alpha = half_norm = +BIG; anything above this threshold
 # is sentinel, not data (used when recovering a segment's real alpha range).
 _REAL = _ops.BIG / 2
+
+
+# --------------------------------------------------------------------------- #
+# Dispatch instrumentation                                                     #
+# --------------------------------------------------------------------------- #
+class DispatchStats(threading.local):
+    """Counters for the dispatch overhead the packed plan exists to remove.
+
+    ``kernel_launches`` counts device computations dispatched (Pallas kernel
+    or jitted oracle evaluations); ``host_transfers`` counts device->host
+    materializations (``np.asarray`` of a device array, including the
+    scalar pass-boundary sync).  `benchmarks.common.dispatch_counts` reads
+    these to make packed-vs-looped overhead visible in the trajectory.
+    Per-thread (``threading.local``): the engine is queried concurrently
+    (streaming/serving), and cross-thread increments would corrupt a
+    benchmark's deltas.
+    """
+
+    def __init__(self) -> None:
+        self.kernel_launches = 0
+        self.host_transfers = 0
+
+    def reset(self) -> None:
+        self.kernel_launches = 0
+        self.host_transfers = 0
+
+    def snapshot(self) -> dict:
+        return {"kernel_launches": self.kernel_launches,
+                "host_transfers": self.host_transfers}
+
+
+DISPATCH_STATS = DispatchStats()
+
+
+# --------------------------------------------------------------------------- #
+# Flat scratch reuse (serving hot path)                                        #
+# --------------------------------------------------------------------------- #
+# requests above this many flat slots are served by one-off arrays instead
+# of the cached scratch: a single huge result set must not pin GBs of
+# staging memory in a thread for the rest of the process
+_SCRATCH_CACHE_MAX = 1 << 24
+
+
+class _FlatScratch(threading.local):
+    """Grow-only per-thread staging buffers for the flat CSR assembly.
+
+    `csr_capacity` rounds every request up to a power-of-two of whole lanes
+    (bounding kernel recompiles), which used to allocate-and-fill two fresh
+    rounded-up arrays per call — wasteful for the serving path's many tiny
+    result sets.  The scratch grows monotonically (capped at
+    `_SCRATCH_CACHE_MAX` slots) and is reused across calls; results are
+    copied out at their exact size, so callers still own their arrays.
+    """
+
+    ids: np.ndarray | None = None
+    dh: np.ndarray | None = None
+
+    def take(self, cap: int) -> tuple[np.ndarray, np.ndarray, bool]:
+        """(ids, dh, owned): ``owned`` means the arrays are one-off (too big
+        to cache) and the caller may hand out trimmed views instead of
+        copying — copying a multi-GB one-off would transiently double peak
+        memory in exactly the regime the cache ceiling protects."""
+        if cap > _SCRATCH_CACHE_MAX:
+            return (np.full(cap, -1, np.int64),
+                    np.full(cap, np.float32(_ops.BIG), np.float32), True)
+        if self.ids is None or self.ids.size < cap:
+            self.ids = np.empty(cap, np.int64)
+            self.dh = np.empty(cap, np.float32)
+        ids, dh = self.ids[:cap], self.dh[:cap]
+        ids.fill(-1)
+        dh.fill(np.float32(_ops.BIG))
+        return ids, dh, False
+
+
+_SCRATCH = _FlatScratch()
 
 
 @dataclasses.dataclass
@@ -139,13 +237,24 @@ def run_csr(
     *,
     query_tile: int = 128,
     use_pallas: bool | None = None,
+    memory_budget_mb: float | None = None,
 ):
-    """The two-pass orchestration over padded queries and segments.
+    """The two-pass LOOPED orchestration over padded queries and segments.
+
+    One kernel launch (plus host sync) per live segment per pass — the
+    cross-check oracle for `run_csr_packed`, and the path of record when a
+    packed oracle batch would exceed its memory budget.
 
     Args:
       segments: alpha-sorted runs (see `Segment`); need not be disjoint.
       qp/aqp/rp/thp: `kernels.ops.pad_queries` outputs.
       m: real (unpadded) query count.
+      memory_budget_mb: oracle-path cache ceiling.  Pass-1 dense filters are
+        cached for pass 2 only while their cumulative size stays under the
+        budget; segments past it recompute the identical jitted filter in
+        pass 2 (bit-identical by construction — same compiled function on
+        the same inputs), trading one extra evaluation for bounded peak
+        memory.  Each cached filter is released right after its scatter.
 
     Returns ``(indptr (m+1,) int64, counts (m,) int64, flat_ids (nnz,) int64,
     flat_dh (nnz,) float32)`` where ``flat_ids`` are original row ids in
@@ -155,26 +264,35 @@ def run_csr(
         use_pallas = _ops.on_tpu()
     aq64 = np.asarray(aqp, np.float64)[:m]
     r64 = np.asarray(rp, np.float64)[:m]
+    budget = (float("inf") if memory_budget_mb is None
+              else memory_budget_mb * 2**20)
 
     # ---- pass 1: per-segment counts --------------------------------------
     per = np.zeros((len(segments), m), np.int64)
     cached: list[np.ndarray | None] = [None] * len(segments)
+    cached_bytes = 0
     live: list[int] = []
     for k, seg in enumerate(segments):
         if not _window_may_hit(seg, aq64, r64):
             continue
         live.append(k)
         if use_pallas:
+            DISPATCH_STATS.kernel_launches += 1
+            DISPATCH_STATS.host_transfers += 1
             per[k] = np.asarray(_ops.snn_count(
                 qp, aqp, rp, thp, seg.xs, seg.alphas, seg.half_norms,
                 tq=query_tile, bn=seg.block, use_pallas=True))[:m]
         else:
             # Oracle fast path: one dense filter feeds BOTH passes (counts
             # and scatter); np.nonzero's row-major order IS the CSR order.
+            DISPATCH_STATS.kernel_launches += 1
+            DISPATCH_STATS.host_transfers += 1
             dh = np.asarray(_ops.snn_filter(
                 qp, aqp, rp, thp, seg.xs, seg.alphas, seg.half_norms,
                 use_pallas=False))[:m]
-            cached[k] = dh
+            if cached_bytes + dh.nbytes <= budget:
+                cached[k] = dh
+                cached_bytes += dh.nbytes
             per[k] = (dh < _ops.BIG).sum(axis=1)
 
     # ---- host prefix sums: global indptr + per-segment write bases -------
@@ -188,16 +306,18 @@ def run_csr(
 
     # ---- pass 2: per-segment compaction into disjoint flat slots ---------
     cap = _ops.csr_capacity(total)
-    flat_ids = np.full(cap, -1, np.int64)
-    flat_dh = np.full(cap, np.float32(_ops.BIG), np.float32)
+    flat_ids, flat_dh, owned = _SCRATCH.take(cap)
     off_pad = np.full(qp.shape[0] - m, total, np.int64)  # padding queries
     for k in live:
         if not per[k].any():
+            cached[k] = None
             continue
         seg = segments[k]
         if use_pallas:
             off_k = jnp.asarray(np.concatenate(
                 [indptr[:-1] + seg_base[k], off_pad]).astype(np.int32))
+            DISPATCH_STATS.kernel_launches += 1
+            DISPATCH_STATS.host_transfers += 2
             fi, fd = _ops.snn_compact(
                 qp, aqp, rp, thp, off_k, seg.xs, seg.alphas, seg.half_norms,
                 nnz=cap, tq=query_tile, bn=seg.block, use_pallas=True)
@@ -207,18 +327,382 @@ def run_csr(
             flat_dh[written] = np.asarray(fd)[written]
         else:
             dh = cached[k]
+            if dh is None:  # over-budget segment: identical jitted recompute
+                DISPATCH_STATS.kernel_launches += 1
+                DISPATCH_STATS.host_transfers += 1
+                dh = np.asarray(_ops.snn_filter(
+                    qp, aqp, rp, thp, seg.xs, seg.alphas, seg.half_norms,
+                    use_pallas=False))[:m]
             keep = dh < _ops.BIG
             rows, cols = np.nonzero(keep)
             within = (np.cumsum(keep, axis=1) - 1)[rows, cols]
             slots = indptr[rows] + seg_base[k][rows] + within
             flat_ids[slots] = seg.ids[cols]
             flat_dh[slots] = dh[rows, cols]
+            cached[k] = None  # release right after the scatter
     # both passes ran the same predicate pipeline, so every slot is written;
     # a -1 would silently alias a wrong row, so fail loudly (not an assert:
     # it must survive python -O)
     if not (flat_ids[:total] >= 0).all():
         raise RuntimeError("CSR pass-1/pass-2 disagreement")
-    return indptr, counts, flat_ids[:total], flat_dh[:total]
+    if owned:  # one-off arrays: the trimmed views are the caller's already
+        return indptr, counts, flat_ids[:total], flat_dh[:total]
+    # copy out of the reusable scratch at exact size — callers own these
+    return indptr, counts, flat_ids[:total].copy(), flat_dh[:total].copy()
+
+
+# --------------------------------------------------------------------------- #
+# The packed plan: SegmentPack + stacked execution                             #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass
+class SegmentPack:
+    """A device-resident execution *plan*: every segment of an index, packed.
+
+    Built once per index epoch and reused across query batches (every chunk
+    of a graph build, every serving request of an index generation).  Two
+    device representations are built lazily, because each executor wants a
+    different shape and most deployments only ever touch one:
+
+    * **stacked** (`stacked()`): every segment padded to the pack-wide row
+      count ``n_pad`` (+BIG sentinels keep extra rows inert) and stacked
+      into ``(S, n_pad, lanes)`` tensors — what the stacked-grid Pallas
+      kernels consume.  Sentinel-padding blocks are pruned per grid cell,
+      so uniform padding costs skipped cells, not math.
+    * **concat** (`concat()`): the segments' own padded arrays concatenated
+      ragged into ``(sum n_pad_k, lanes)`` — what the CPU oracle consumes.
+      No uniform padding: a streaming index whose base dwarfs its deltas
+      would otherwise pay S x base-size dense-filter work.
+
+    Attributes:
+      segments: the source per-segment views (also the looped cross-check
+        oracle and the memory-budget fallback).
+      alpha_lo / alpha_hi: (S,) float64 real alpha ranges — the inputs of
+        the vectorized interval-overlap prune (`live_mask`).
+      block: the kernel row-block size every segment was padded to.
+      epoch: build generation — owners bump it when the plan is rebuilt or
+        extended so caches (serving, graph chunks) can validate reuse.
+    """
+
+    segments: list[Segment]
+    alpha_lo: np.ndarray
+    alpha_hi: np.ndarray
+    block: int
+    epoch: int = 0
+    _stacked: tuple | None = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _concat: tuple | None = dataclasses.field(
+        default=None, repr=False, compare=False)
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.segments)
+
+    @property
+    def n_pad(self) -> int:
+        """Padded rows of the largest segment (the stacked row count)."""
+        return max((s.xs.shape[0] for s in self.segments), default=0)
+
+    @classmethod
+    def build(cls, segments: list[Segment], *, epoch: int = 0) -> "SegmentPack":
+        """Plan over ``segments`` (uniform block and lane padding required)."""
+        segments = list(segments)
+        if segments:
+            block = segments[0].block
+            d_pad = segments[0].xs.shape[1]
+            for s in segments:
+                if s.block != block or s.xs.shape[1] != d_pad:
+                    raise ValueError("SegmentPack needs uniform block and "
+                                     "lane padding across segments")
+        else:
+            block = 0
+        lo = np.asarray([s.alpha_lo for s in segments], np.float64)
+        hi = np.asarray([s.alpha_hi for s in segments], np.float64)
+        return cls(segments, lo, hi, block, epoch)
+
+    def stacked(self):
+        """(xs (S, n_pad, d), alphas (S, n_pad), half_norms (S, n_pad),
+        ids (S, n_pad) host int64 with -1 padding) — built on first use."""
+        if self._stacked is None:
+            if not self.segments:
+                z2 = jnp.zeros((0, 0), jnp.float32)
+                return (jnp.zeros((0, 0, 0), jnp.float32), z2, z2,
+                        np.zeros((0, 0), np.int64))
+            n_pad = self.n_pad
+            if len(self.segments) == 1:  # zero-copy: reshape, don't restack
+                s = self.segments[0]
+                xs, al, hn = s.xs[None], s.alphas[None], s.half_norms[None]
+            else:
+                big = np.float32(_ops.BIG)
+                xs = jnp.stack([jnp.pad(s.xs, ((0, n_pad - s.xs.shape[0]),
+                                               (0, 0)))
+                                for s in self.segments])
+                al = jnp.stack([jnp.pad(s.alphas,
+                                        (0, n_pad - s.alphas.shape[0]),
+                                        constant_values=big)
+                                for s in self.segments])
+                hn = jnp.stack([jnp.pad(s.half_norms,
+                                        (0, n_pad - s.half_norms.shape[0]),
+                                        constant_values=big)
+                                for s in self.segments])
+            ids = np.full((self.n_segments, n_pad), -1, np.int64)
+            for k, s in enumerate(self.segments):
+                ids[k, :s.n] = s.ids
+            self._stacked = (xs, al, hn, ids)
+        return self._stacked
+
+    def concat(self):
+        """(xs (N, d), alphas (N,), half_norms (N,), ids (N,) host int64,
+        starts (S+1,) host row offsets) — the ragged oracle representation,
+        built on first use (zero-copy for a single-segment pack)."""
+        if self._concat is None:
+            segs = self.segments
+            if not segs:
+                z1 = jnp.zeros(0, jnp.float32)
+                return (jnp.zeros((0, 0), jnp.float32), z1, z1,
+                        np.zeros(0, np.int64), np.zeros(1, np.int64))
+            sizes = [s.xs.shape[0] for s in segs]
+            starts = np.zeros(len(segs) + 1, np.int64)
+            np.cumsum(sizes, out=starts[1:])
+            if len(segs) == 1:
+                xs, al, hn = segs[0].xs, segs[0].alphas, segs[0].half_norms
+            else:
+                xs = jnp.concatenate([s.xs for s in segs])
+                al = jnp.concatenate([s.alphas for s in segs])
+                hn = jnp.concatenate([s.half_norms for s in segs])
+            ids = np.full(int(starts[-1]), -1, np.int64)
+            for k, s in enumerate(segs):
+                ids[starts[k]:starts[k] + s.n] = s.ids
+            self._concat = (xs, al, hn, ids, starts)
+        return self._concat
+
+    def extend(self, new_segments: list[Segment]) -> "SegmentPack":
+        """A NEW plan with ``new_segments`` appended (incremental epoch).
+
+        The LSM append path: already-built device representations are
+        extended by one concatenation each (the base's buffers are reused,
+        not re-padded); representations not yet built stay lazy.  The
+        receiver is never mutated — owners publish the returned pack in one
+        snapshot swap.
+        """
+        if not new_segments:
+            return self
+        # build() validates block/lane uniformity over the combined list
+        out = SegmentPack.build(self.segments + list(new_segments),
+                                epoch=self.epoch + 1)
+        if self._concat is not None:
+            tail = SegmentPack.build(list(new_segments)).concat()
+            xs, al, hn, ids, starts = self._concat
+            out._concat = (jnp.concatenate([xs, tail[0]]),
+                           jnp.concatenate([al, tail[1]]),
+                           jnp.concatenate([hn, tail[2]]),
+                           np.concatenate([ids, tail[3]]),
+                           np.concatenate([starts,
+                                           starts[-1] + tail[4][1:]]))
+        if (self._stacked is not None
+                and max(s.xs.shape[0] for s in new_segments) <= self.n_pad):
+            tail_pack = SegmentPack.build(list(new_segments))
+            txs, tal, thn, tids = tail_pack.stacked()
+            pad = self.n_pad - tail_pack.n_pad
+            big = np.float32(_ops.BIG)
+            xs, al, hn, ids = self._stacked
+            out._stacked = (
+                jnp.concatenate([xs, jnp.pad(txs, ((0, 0), (0, pad),
+                                                   (0, 0)))]),
+                jnp.concatenate([al, jnp.pad(tal, ((0, 0), (0, pad)),
+                                             constant_values=big)]),
+                jnp.concatenate([hn, jnp.pad(thn, ((0, 0), (0, pad)),
+                                             constant_values=big)]),
+                np.concatenate([ids, np.pad(tids, ((0, 0), (0, pad)),
+                                            constant_values=-1)]))
+        return out
+
+    def live_mask(self, aq: np.ndarray, r: np.ndarray) -> np.ndarray:
+        """Vectorized `_window_may_hit` over every segment at once.
+
+        One (S, m) float64 broadcast replaces the per-segment Python loop;
+        decision-identical to the scalar test (same formula, same float64
+        arithmetic), so packed and looped engines prune the same segments.
+        """
+        S = self.n_segments
+        if S == 0 or aq.size == 0:
+            return np.zeros(S, bool)
+        nonempty = self.alpha_lo <= self.alpha_hi
+        amax = np.maximum(np.abs(self.alpha_lo), np.abs(self.alpha_hi))
+        amax = np.where(nonempty, amax, 0.0)  # keep the slack finite
+        slack = 1e-6 * ((np.abs(aq) + np.abs(r))[None, :]
+                        + amax[:, None] + 1.0)
+        hit = ((aq[None, :] + r[None, :] + slack >= self.alpha_lo[:, None])
+               & (aq[None, :] - r[None, :] - slack <= self.alpha_hi[:, None]))
+        return hit.any(axis=1) & nonempty
+
+
+def pack_from_index(index, *, block: int = 512, epoch: int = 0) -> SegmentPack:
+    """The whole of one index as a single-segment plan."""
+    return SegmentPack.build([segment_from_index(index, block=block)],
+                             epoch=epoch)
+
+
+def run_csr_packed(
+    pack: SegmentPack,
+    qp, aqp, rp, thp,
+    m: int,
+    *,
+    query_tile: int = 128,
+    use_pallas: bool | None = None,
+    first_seg: int = 0,
+    memory_budget_mb: float | None = None,
+):
+    """Execute a `SegmentPack` plan: the two passes as single launches.
+
+    Same contract and bit-identical output as `run_csr` over
+    ``pack.segments`` — but the prune is one vectorized bitmask and each
+    pass is ONE launch, however many segments are live:
+
+    * **Pallas** (TPU): pass 1 is one stacked-grid count launch over (live
+      segments x query tiles x db blocks) on the pack's `stacked()` rep;
+      the prefix sums (global ``indptr`` + segment-axis exclusive write
+      bases) run on device (``jnp.cumsum``); pass 2 is one stacked
+      compaction launch.  One small pass-boundary transfer (the row
+      offsets — the total must reach the host because it sizes the flat
+      output) plus the final CSR-triple transfer.
+    * **Oracle** (CPU): one dense-filter evaluation over the pack's ragged
+      `concat()` rep feeds BOTH passes; counts, prefix sums and the
+      scatter are vectorized numpy over the whole stack (host and device
+      are the same memory on CPU, the filter view is zero-copy, and XLA's
+      serial CPU scatter is pathological — numpy fancy indexing is the
+      fast spelling of the identical slot formula).
+
+    Args:
+      first_seg: ignore segments before this pack position (the triangular
+        schedule of `core.graph`'s symmetric self-join).
+      memory_budget_mb: oracle-path ceiling.  The packed oracle holds ONE
+        dense (m_pad, live rows) filter for both passes; when that would
+        exceed the budget, execution falls back to the looped `run_csr`
+        (budgeted, cache-releasing) over the live segments.
+
+    Flat totals are int32 on the Pallas path (~2^31 pair ceiling); use the
+    looped engine for result sets beyond that.
+    """
+    if use_pallas is None:
+        use_pallas = _ops.on_tpu()
+    aq64 = np.asarray(aqp, np.float64)[:m]
+    r64 = np.asarray(rp, np.float64)[:m]
+    mask = pack.live_mask(aq64, r64)
+    if first_seg:
+        mask[:first_seg] = False
+    live_idx = np.nonzero(mask)[0]
+    indptr0 = np.zeros(m + 1, np.int64)
+    if live_idx.size == 0:
+        return (indptr0, np.zeros(m, np.int64), np.zeros(0, np.int64),
+                np.zeros(0, np.float32))
+    L = int(live_idx.size)
+
+    if use_pallas:
+        return _execute_stacked(pack, qp, aqp, rp, thp, m, live_idx,
+                                query_tile=query_tile)
+    xs_c, al_c, hn_c, ids_c, starts_c = pack.concat()
+    if L == pack.n_segments:
+        sizes = np.diff(starts_c)
+        ids = ids_c
+    else:  # one device gather of the live segments' row ranges
+        sizes = np.diff(starts_c)[live_idx]
+        rows_sel = np.concatenate(
+            [np.arange(starts_c[k], starts_c[k + 1]) for k in live_idx])
+        sel = jnp.asarray(rows_sel)
+        xs_c, al_c, hn_c = xs_c[sel], al_c[sel], hn_c[sel]
+        ids = ids_c[rows_sel]
+    n_live_rows = int(sizes.sum())
+    if memory_budget_mb is not None \
+            and qp.shape[0] * n_live_rows * 4 > memory_budget_mb * 2**20:
+        return run_csr([pack.segments[k] for k in live_idx],
+                       qp, aqp, rp, thp, m, query_tile=query_tile,
+                       use_pallas=False, memory_budget_mb=memory_budget_mb)
+
+    # ---- pass 1: ONE filter launch over the ragged concatenation ---------
+    # evaluated once and reused for the compaction — counts and scatter
+    # cannot disagree
+    DISPATCH_STATS.kernel_launches += 1
+    DISPATCH_STATS.host_transfers += 1
+    dh_np = np.asarray(_ops.snn_filter(qp, aqp, rp, thp, xs_c, al_c, hn_c,
+                                       use_pallas=False))  # zero-copy on CPU
+    keep = dh_np < _ops.BIG
+
+    # ---- prefix sums (vectorized; host == device memory on CPU) ----------
+    # One pass over the survivor coordinates yields the per-(query, segment)
+    # count matrix in O(nnz): np.nonzero is row-major, so survivors arrive
+    # per query row in ascending (segment, local row) order — the CSR order.
+    starts_l = np.zeros(L + 1, np.int64)
+    np.cumsum(sizes, out=starts_l[1:])
+    rows, cols = np.nonzero(keep)
+    seg_of = np.searchsorted(starts_l, cols, side="right") - 1
+    gk = rows * np.int64(L) + seg_of      # non-decreasing in nonzero order
+    per = np.bincount(gk, minlength=keep.shape[0] * L) \
+        .reshape(keep.shape[0], L).T      # (L, m_pad)
+    counts = per[:, :m].sum(axis=0)
+    indptr = np.zeros(m + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    total = int(indptr[-1])
+    if total == 0:
+        return indptr, counts, np.zeros(0, np.int64), np.zeros(0, np.float32)
+    seg_base = np.cumsum(per, axis=0) - per  # exclusive prefix over segments
+
+    # ---- pass 2: ONE vectorized scatter over the whole stack -------------
+    # an O(nnz) group-rank replaces a dense per-cell cumsum
+    gstart = np.flatnonzero(np.r_[True, gk[1:] != gk[:-1]])
+    within = np.arange(gk.size, dtype=np.int64) \
+        - np.repeat(gstart, np.diff(np.r_[gstart, gk.size]))
+    slots = indptr[rows] + seg_base[seg_of, rows] + within
+    flat_ids, flat_dh, owned = _SCRATCH.take(total + 1)
+    flat_ids[slots] = ids[cols]
+    flat_dh[slots] = dh_np[rows, cols]
+    if not (flat_ids[:total] >= 0).all():
+        raise RuntimeError("CSR pass-1/pass-2 disagreement (packed)")
+    if owned:  # one-off arrays: the trimmed views are the caller's already
+        return indptr, counts, flat_ids[:total], flat_dh[:total]
+    return indptr, counts, flat_ids[:total].copy(), flat_dh[:total].copy()
+
+
+def _execute_stacked(pack: SegmentPack, qp, aqp, rp, thp, m: int,
+                     live_idx: np.ndarray, *, query_tile: int):
+    """The Pallas executor of `run_csr_packed`: stacked-grid kernels with
+    on-device prefix sums (see `run_csr_packed` docstring)."""
+    xs, al, hn, ids = pack.stacked()
+    L = int(live_idx.size)
+    if L < pack.n_segments:  # one device gather of the live slabs
+        sel = jnp.asarray(live_idx)
+        xs, al, hn = xs[sel], al[sel], hn[sel]
+        ids = ids[live_idx]
+
+    # ---- pass 1: ONE stacked count launch --------------------------------
+    DISPATCH_STATS.kernel_launches += 1
+    per = _ops.snn_count_stacked(qp, aqp, rp, thp, xs, al, hn,
+                                 tq=query_tile, bn=pack.block,
+                                 use_pallas=True)
+
+    # ---- device prefix sums + the one pass-boundary sync -----------------
+    DISPATCH_STATS.kernel_launches += 1
+    _, indptr_dev, offsets_dev = _ref.stacked_prefix(per)
+    DISPATCH_STATS.host_transfers += 1
+    indptr_pad = np.asarray(indptr_dev)  # (m_pad + 1,) int32
+    total = int(indptr_pad[m])
+    indptr = indptr_pad[:m + 1].astype(np.int64)
+    counts = np.diff(indptr)
+    if total == 0:
+        return indptr, counts, np.zeros(0, np.int64), np.zeros(0, np.float32)
+
+    # ---- pass 2: ONE stacked compaction launch ---------------------------
+    cap = _ops.csr_capacity(total)
+    DISPATCH_STATS.kernel_launches += 1
+    fi, fd = _ops.snn_compact_stacked(
+        qp, aqp, rp, thp, offsets_dev, xs, al, hn,
+        nnz=cap, tq=query_tile, bn=pack.block, use_pallas=True)
+    DISPATCH_STATS.host_transfers += 2
+    fi = np.asarray(fi)[:total]
+    if not (fi >= 0).all():
+        raise RuntimeError("CSR pass-1/pass-2 disagreement (packed)")
+    flat_ids = ids.reshape(-1)[fi]
+    flat_dh = np.asarray(fd)[:total].copy()
+    return indptr, counts, flat_ids, flat_dh
 
 
 def query_csr(
@@ -246,5 +730,37 @@ def query_csr(
     indptr, counts, ids, dh = run_csr(segments, qp, aqp, rp, thp, m,
                                       query_tile=query_tile,
                                       use_pallas=use_pallas)
+    return _snn.csr_finalize(index, indptr, ids, dh, xq, qsq, counts,
+                             return_distance, native)
+
+
+def query_csr_packed(
+    index,
+    pack: SegmentPack,
+    q: np.ndarray,
+    radius,
+    return_distance: bool = True,
+    *,
+    query_tile: int = 128,
+    use_pallas: bool | None = None,
+    native: bool = True,
+    memory_budget_mb: float | None = None,
+):
+    """`query_csr` executed through a prebuilt `SegmentPack` plan.
+
+    The packed twin of `query_csr`: predicates from ``index`` (the owner of
+    mu/v1/metric/xi), then `run_csr_packed`, then distance finalization.
+    Front-ends that own a long-lived index (streaming snapshots, serving
+    generations, graph builds) build the pack once per epoch and route every
+    query batch through here.
+    """
+    from . import snn as _snn  # deferred: snn imports this module lazily too
+
+    xq, aq, r, th, qsq = _snn.prepare_query_predicates(index, q, radius)
+    m = xq.shape[0]
+    qp, aqp, rp, thp, _ = _ops.pad_queries(xq, aq, r, th, tq=query_tile)
+    indptr, counts, ids, dh = run_csr_packed(
+        pack, qp, aqp, rp, thp, m, query_tile=query_tile,
+        use_pallas=use_pallas, memory_budget_mb=memory_budget_mb)
     return _snn.csr_finalize(index, indptr, ids, dh, xq, qsq, counts,
                              return_distance, native)

@@ -162,8 +162,17 @@ def _mirror_merge(indptr, cols, dists, chunk: int):
 # The chunked self-join loop                                                   #
 # --------------------------------------------------------------------------- #
 def _self_join(index, segments, xq, aq, r, th, *, query_chunk: int,
-               segs_per_chunk: int, query_tile: int, use_pallas):
-    """Run sorted query chunks through `engine.run_csr` over ``segments``.
+               segs_per_chunk: int, query_tile: int, use_pallas,
+               packed: bool = True, memory_budget_mb=None):
+    """Run sorted query chunks through the engine over ``segments``.
+
+    ``packed=True`` (default) builds ONE `engine.SegmentPack` plan for the
+    whole build and executes every chunk through `engine.run_csr_packed` —
+    the stack, padding and device transfer happen once, and each chunk pays
+    two stacked launches instead of two per live segment (the biggest
+    throughput win of the plan/execute split: a build has m/query_chunk
+    chunks all querying the same segments).  ``packed=False`` keeps the
+    looped `engine.run_csr` cross-check path.
 
     ``segs_per_chunk > 0`` turns on the triangular schedule: chunk k only
     sees segments from its own first segment onward (requires chunks and
@@ -177,18 +186,28 @@ def _self_join(index, segments, xq, aq, r, th, *, query_chunk: int,
     counts = np.zeros(m, np.int64)
     ids_parts: list[np.ndarray] = []
     dh_parts: list[np.ndarray] = []
+    pack = _engine.SegmentPack.build(segments) if packed else None
     for c0 in range(0, m, query_chunk):
         c1 = min(c0 + query_chunk, m)
         k0 = (c0 // query_chunk) * segs_per_chunk if segs_per_chunk else 0
-        # the schedule: alpha-adjacent queries span a narrow window, so most
-        # segments fail this interval test and never launch a kernel
-        live = [s for s in segments[k0:]
-                if _engine._window_may_hit(s, aq64[c0:c1], r64[c0:c1])]
         qp, aqp, rp, thp, _ = _ops.pad_queries(
             xq[c0:c1], aq[c0:c1], r[c0:c1], th[c0:c1], tq=query_tile)
-        _, cnt, ids, dh = _engine.run_csr(
-            live, qp, aqp, rp, thp, c1 - c0,
-            query_tile=query_tile, use_pallas=use_pallas)
+        if packed:
+            # the vectorized interval-overlap prune inside the packed
+            # executor plays the role of the per-segment window loop
+            _, cnt, ids, dh = _engine.run_csr_packed(
+                pack, qp, aqp, rp, thp, c1 - c0,
+                query_tile=query_tile, use_pallas=use_pallas,
+                first_seg=k0, memory_budget_mb=memory_budget_mb)
+        else:
+            # the schedule: alpha-adjacent queries span a narrow window, so
+            # most segments fail this interval test and never launch
+            live = [s for s in segments[k0:]
+                    if _engine._window_may_hit(s, aq64[c0:c1], r64[c0:c1])]
+            _, cnt, ids, dh = _engine.run_csr(
+                live, qp, aqp, rp, thp, c1 - c0,
+                query_tile=query_tile, use_pallas=use_pallas,
+                memory_budget_mb=memory_budget_mb)
         counts[c0:c1] = cnt
         ids_parts.append(ids)
         dh_parts.append(dh)
@@ -228,13 +247,15 @@ def _resolve_chunk(n: int, query_chunk: int | None, memory_budget_mb,
 
 def _graph_from_join(index, segments, x_sorted, eps, *, symmetric: bool,
                      query_chunk: int, segs_per_chunk: int, query_tile: int,
-                     use_pallas, return_distance: bool, native: bool):
+                     use_pallas, return_distance: bool, native: bool,
+                     packed: bool = True, memory_budget_mb=None):
     """Shared tail of both public builders: join, finalize, mirror, unsort."""
     xq, aq, r, th, qsq = _snn.prepare_query_predicates(index, x_sorted, eps)
     counts, flat_ids, flat_dh = _self_join(
         index, segments, xq, aq, r, th, query_chunk=query_chunk,
         segs_per_chunk=segs_per_chunk if symmetric else 0,
-        query_tile=query_tile, use_pallas=use_pallas)
+        query_tile=query_tile, use_pallas=use_pallas, packed=packed,
+        memory_budget_mb=memory_budget_mb)
     indptr = _indptr_from_counts(counts)
     fin = _snn.csr_finalize(index, indptr, flat_ids, flat_dh, xq, qsq, counts,
                             return_distance, native)
@@ -265,6 +286,7 @@ def build_neighbor_graph(
     use_pallas: bool | None = None,
     native: bool = True,
     n_iter: int = 64,
+    packed: bool = True,
 ) -> _snn.CSRNeighbors:
     """Exact (n, n) eps-neighbor self-join of ``x`` as one `CSRNeighbors`.
 
@@ -287,6 +309,9 @@ def build_neighbor_graph(
         defaults to ``block``.
       block / query_tile / use_pallas / native: engine knobs, as in
         `query_radius_csr`.
+      packed: build one `engine.SegmentPack` plan for the whole join and
+        execute every chunk through it (default); False keeps the looped
+        per-segment cross-check path.  Bit-identical either way.
 
     Returns:
       `CSRNeighbors` with ``distances`` populated iff ``return_distance``.
@@ -317,7 +342,8 @@ def build_neighbor_graph(
     return _graph_from_join(
         index, segments, x[index.order], eps, symmetric=symmetric,
         query_chunk=cs, segs_per_chunk=cs // sr, query_tile=query_tile,
-        use_pallas=use_pallas, return_distance=return_distance, native=native)
+        use_pallas=use_pallas, return_distance=return_distance, native=native,
+        packed=packed, memory_budget_mb=memory_budget_mb)
 
 
 def build_neighbor_graph_sharded(
@@ -336,6 +362,7 @@ def build_neighbor_graph_sharded(
     use_pallas: bool | None = None,
     native: bool = True,
     n_iter: int = 64,
+    packed: bool = True,
 ) -> _snn.CSRNeighbors:
     """`build_neighbor_graph` over a mesh-sharded database.
 
@@ -366,4 +393,5 @@ def build_neighbor_graph_sharded(
     return _graph_from_join(
         index, segments, x[index.order], eps, symmetric=False,
         query_chunk=cs, segs_per_chunk=0, query_tile=query_tile,
-        use_pallas=use_pallas, return_distance=return_distance, native=native)
+        use_pallas=use_pallas, return_distance=return_distance, native=native,
+        packed=packed, memory_budget_mb=memory_budget_mb)

@@ -148,6 +148,8 @@ def query_radius_csr_sharded(
     query_tile: int = 128,
     use_pallas: bool | None = None,
     native: bool = True,
+    packed: bool = True,
+    pack=None,
 ) -> _snn.CSRNeighbors:
     """Exact variable-length CSR results with the database sharded over a mesh.
 
@@ -167,12 +169,25 @@ def query_radius_csr_sharded(
     float32 filters would corrupt the scatter layout.
     `make_sharded_percount_fn` (one shard_map over the mesh) remains
     available for device-native counting, but its `_local_filter` is a
-    different XLA program, so it must not source scatter offsets.  Both
-    passes are host-orchestrated per shard here; the mesh fixes the shard
-    decomposition (device placement of each launch is a deployment concern).
+    different XLA program, so it must not source scatter offsets.
+    ``packed=True`` (default) stacks the shard segments into one
+    `engine.SegmentPack` plan and runs each pass as a single stacked launch;
+    callers issuing repeated batches against a static index should build the
+    plan once with `mesh_pack` and pass it as ``pack`` so its device
+    representations amortize (this one-shot entry otherwise rebuilds it per
+    call).  ``packed=False`` keeps the one-launch-per-shard looped executor.
+    The mesh fixes the shard decomposition either way (device placement of
+    each launch is a deployment concern).
     """
     from . import engine as _engine
 
+    if packed:
+        if pack is None:
+            pack = mesh_pack(index, mesh, axis=axis, block=block)
+        return _engine.query_csr_packed(index, pack, q, radius,
+                                        return_distance,
+                                        query_tile=query_tile,
+                                        use_pallas=use_pallas, native=native)
     segments = mesh_segments(index, mesh, axis=axis, block=block)
     return _engine.query_csr(index, segments, q, radius, return_distance,
                              query_tile=query_tile, use_pallas=use_pallas,
@@ -198,6 +213,21 @@ def mesh_segments(index: _snn.SNNIndex, mesh: Mesh, axis: str = "data",
                                  od_h[k * n_per:(k + 1) * n_per],
                                  block=block)
             for k in range(nshards)]
+
+
+def mesh_pack(index: _snn.SNNIndex, mesh: Mesh, axis: str = "data",
+              block: int = 512, epoch: int = 0):
+    """The mesh's shard decomposition as one `engine.SegmentPack` plan.
+
+    Shards are equal-size slices of the padded sort order, so the pack needs
+    no re-padding: it is exactly `mesh_segments` stacked.  Long-lived owners
+    build it once per index epoch and pass it to `engine.query_csr_packed`
+    / `engine.run_csr_packed` for every batch.
+    """
+    from . import engine as _engine
+
+    return _engine.SegmentPack.build(
+        mesh_segments(index, mesh, axis=axis, block=block), epoch=epoch)
 
 
 def prepare_query_arrays(index: _snn.SNNIndex, q: np.ndarray, radius):

@@ -358,24 +358,34 @@ def query_radius_csr(
     query_tile: int = 128,
     use_pallas: bool | None = None,
     native: bool = True,
+    packed: bool = True,
 ) -> CSRNeighbors:
     """Exact device radius query with CSR output (two passes, no (m, n) array).
 
     A single-segment front-end over `core.engine`: pass 1 produces per-query
-    neighbor counts, the host prefix-sums them into CSR row offsets, and pass
+    neighbor counts, the prefix sums turn them into CSR row offsets, and pass
     2 re-runs the identical block-pruned filter and scatters each survivor
     into its final CSR slot.  Both passes see the same window + half-norm
     tests on the same float32 inputs, so pass-2 survivors are exactly the
     pass-1 counted points and every CSR row is filled completely — no
     truncation, no recount.
 
-    ``use_pallas=None`` dispatches to the Pallas kernels on TPU; elsewhere a
-    single dense-filter evaluation feeds both passes (correctness reference,
-    not the memory story; pass ``use_pallas=True`` off-TPU to force the
-    kernels through interpret mode).
+    ``packed=True`` (the default) executes through the plan/execute engine
+    (`engine.query_csr_packed` over a one-segment `SegmentPack`, prefix sums
+    on device); ``packed=False`` keeps the looped executor — the cross-check
+    oracle, bit-identical by construction.  ``use_pallas=None`` dispatches to
+    the Pallas kernels on TPU; elsewhere a single dense-filter evaluation
+    feeds both passes (correctness reference, not the memory story; pass
+    ``use_pallas=True`` off-TPU to force the kernels through interpret mode).
     """
     from . import engine as _engine
 
+    if packed:
+        pack = _engine.pack_from_index(index, block=block)
+        return _engine.query_csr_packed(index, pack, q, radius,
+                                        return_distance,
+                                        query_tile=query_tile,
+                                        use_pallas=use_pallas, native=native)
     seg = _engine.segment_from_index(index, block=block)
     return _engine.query_csr(index, [seg], q, radius, return_distance,
                              query_tile=query_tile, use_pallas=use_pallas,

@@ -28,10 +28,18 @@ so they trigger an immediate full re-index.
 
 Thread-safety: writers (append/rebuild) serialize on a mutation lock and do
 all heavy work — batch transform/sort, delta merges, even full re-indexes —
-*outside* the short state lock, publishing an immutable ``(parts, segments)``
-snapshot tuple in one locked swap.  Queries read one snapshot and never
-observe a half-applied append, and they never wait on index construction:
-no serving gap even across a full rebuild.
+*outside* the short state lock, publishing an immutable ``(parts, segments,
+plan)`` snapshot tuple in one locked swap.  Queries read one snapshot and
+never observe a half-applied append, and they never wait on index
+construction: no serving gap even across a full rebuild.
+
+The ``plan`` is the engine's device-resident `SegmentPack` (stacked
+segments, see `core.engine`): built lazily on first query, *extended* by one
+slab concatenation on each delta append (an incremental pack epoch — the
+base's device stack is reused, not rebuilt), and invalidated (None) by
+merges and rebuilds, whose next query builds a fresh epoch.  Packed queries
+run one stacked launch per pass over base + all deltas instead of one
+launch (plus host sync) per segment.
 """
 from __future__ import annotations
 
@@ -117,10 +125,17 @@ class StreamingSNNIndex:
         base = _snn.build_index(self._raw_parts[0], metric=metric,
                                 n_iter=n_iter)
         self._n_at_build = base.n
-        # published snapshot: (parts, segments); parts[0] is the base and
-        # segments[i] is the lazily-built engine Segment for parts[i]
+        # generation counts snapshot publishes; the cached SegmentPack plan
+        # is tagged with it, so stale plans are impossible by construction
+        # (a new generation publishes with plan=None or an extended plan)
+        self._generation = 0
+        # published snapshot: (parts, segments, plan); parts[0] is the base,
+        # segments[i] the lazily-built engine Segment for parts[i], and plan
+        # the lazily-built `engine.SegmentPack` over all of them
         self._state: tuple[tuple[_snn.SNNIndex, ...],
-                           tuple[_engine.Segment | None, ...]] = ((base,), (None,))
+                           tuple[_engine.Segment | None, ...],
+                           _engine.SegmentPack | None] = ((base,), (None,),
+                                                         None)
 
     # ------------------------------------------------------------ metadata
     @property
@@ -147,6 +162,17 @@ class StreamingSNNIndex:
             if len(self._raw_parts) > 1:
                 self._raw_parts = [np.concatenate(self._raw_parts)]
             return self._raw_parts[0]
+
+    @property
+    def generation(self) -> int:
+        """Snapshot publish counter — bumps on every append/merge/rebuild.
+
+        The serving layer exposes this as the index generation its cached
+        plan is valid for; any cached `SegmentPack` built for generation g
+        is dead the moment generation g+1 publishes (the publish itself
+        swaps the plan to None or to the incrementally-extended pack).
+        """
+        return self._generation
 
     # ------------------------------------------------------------- updates
     def append(self, points: np.ndarray) -> None:
@@ -214,13 +240,32 @@ class StreamingSNNIndex:
                 for p in parts[1:]:
                     merged = merge_sorted_indexes(merged, p)
                 with self._lock:
-                    self._state = ((merged,), (None,))
+                    self._generation += 1
+                    self._state = ((merged,), (None,), None)
             else:
+                # incremental plan epoch: pad-stack the delta's segment now
+                # (outside the state lock) and extend the cached plan with
+                # one slab concatenation — queries on the new snapshot reuse
+                # the base's device-resident stack instead of rebuilding it
+                seg_delta = _engine.segment_from_index(delta,
+                                                      block=self.block)
+                # read as late as possible: a plan a racing query built
+                # during the heavy batch work above is seen here and
+                # extended rather than dropped.  (If the read is None, the
+                # publish follows within microseconds — a query completing
+                # a build inside that window loses only its cache
+                # write-back, never correctness.)
+                with self._lock:
+                    prev_plan = self._state[2]
+                if prev_plan is not None:
+                    prev_plan = prev_plan.extend([seg_delta])
                 with self._lock:
                     # re-read the segment cache at publish time: _mutate
                     # guarantees parts didn't change, but a query may have
                     # filled segments since we started — keep its work
-                    self._state = (tuple(parts), (*self._state[1], None))
+                    self._generation += 1
+                    self._state = (tuple(parts),
+                                   (*self._state[1], seg_delta), prev_plan)
 
     def _full_rebuild(self) -> None:
         """Build a fresh base (caller holds ``_mutate``) and publish it."""
@@ -228,7 +273,8 @@ class StreamingSNNIndex:
                                 n_iter=self.n_iter)
         with self._lock:
             self._n_at_build = base.n
-            self._state = ((base,), (None,))
+            self._generation += 1
+            self._state = ((base,), (None,), None)
 
     def rebuild(self) -> None:
         """Force a full re-index (fresh mu/v1/xi) of everything appended."""
@@ -242,37 +288,52 @@ class StreamingSNNIndex:
             return self._state[0]
 
     def _snapshot(self):
-        """Parts + their engine segments, building missing segments.
+        """Parts + segments + the `SegmentPack` plan, building what's missing.
 
-        Segment construction (an O(n) pad-copy + device transfer for a fresh
-        base) runs OUTSIDE the state lock — concurrent queries and appends
-        never stall on it; two racing queries at worst build the same
-        segment twice, and the cache write-back is dropped if a writer
+        Segment/plan construction (an O(n) pad-copy + device transfer for a
+        fresh base) runs OUTSIDE the state lock — concurrent queries and
+        appends never stall on it; two racing queries at worst build the
+        same plan twice, and the cache write-back is dropped if a writer
         published new parts in the meantime.
         """
         with self._lock:
-            parts, segs = self._state
-        if any(s is None for s in segs):
+            parts, segs, plan = self._state
+        if any(s is None for s in segs) or plan is None:
             segs = tuple(
                 s if s is not None
                 else _engine.segment_from_index(p, block=self.block)
                 for p, s in zip(parts, segs))
+            if plan is None:
+                plan = _engine.SegmentPack.build(list(segs),
+                                                 epoch=self._generation)
             with self._lock:
                 if self._state[0] is parts:
-                    self._state = (parts, segs)
-        return parts, list(segs)
+                    self._state = (parts, segs, plan)
+        return parts, list(segs), plan
+
+    def plan(self) -> _engine.SegmentPack:
+        """The current snapshot's `SegmentPack` (built on first use)."""
+        return self._snapshot()[2]
 
     def query_radius_csr(self, q: np.ndarray, radius,
                          return_distance: bool = True, *,
                          query_tile: int = 128,
                          use_pallas: bool | None = None,
-                         native: bool = True) -> _snn.CSRNeighbors:
+                         native: bool = True,
+                         packed: bool = True) -> _snn.CSRNeighbors:
         """Exact CSR results over base + deltas via the unified engine.
 
         Row contents are segment-major (base first, then deltas in append
         order), ascending in sorted position within each segment.
+        ``packed=True`` (default) executes the snapshot's cached
+        `SegmentPack` plan — one stacked launch per pass over base + all
+        live deltas; ``packed=False`` keeps the per-segment looped executor.
         """
-        parts, segs = self._snapshot()
+        parts, segs, plan = self._snapshot()
+        if packed:
+            return _engine.query_csr_packed(
+                parts[0], plan, q, radius, return_distance,
+                query_tile=query_tile, use_pallas=use_pallas, native=native)
         return _engine.query_csr(parts[0], segs, q, radius, return_distance,
                                  query_tile=query_tile, use_pallas=use_pallas,
                                  native=native)

@@ -13,7 +13,10 @@ import numpy as np
 from . import ref as _ref
 from .embedding_bag import embedding_bag as _bag_kernel
 from .snn_query import (BIG, snn_compact as _compact_kernel,
-                        snn_count as _count_kernel, snn_filter as _filter_kernel)
+                        snn_compact_stacked as _compact_stacked_kernel,
+                        snn_count as _count_kernel,
+                        snn_count_stacked as _count_stacked_kernel,
+                        snn_filter as _filter_kernel)
 
 
 def on_tpu() -> bool:
@@ -95,6 +98,43 @@ def snn_compact(q, aq, r, thresh, offsets, xs, alphas, half_norms, *,
                                     half_norms, nnz=nnz)
     return _compact_kernel(q, aq, r, thresh, offsets, xs, alphas, half_norms,
                            nnz=nnz, tq=tq, bn=bn, interpret=not on_tpu())
+
+
+def snn_count_stacked(q, aq, r, thresh, xs, alphas, half_norms, *,
+                      tq: int = 128, bn: int = 512,
+                      use_pallas: bool | None = None):
+    """Stacked pass-1: per-(segment, query) counts (S, m) int32, one launch.
+
+    ``xs`` (S, n_pad, d), ``alphas``/``half_norms`` (S, n_pad) — a
+    `core.engine.SegmentPack`'s live slabs.
+    """
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if not use_pallas:
+        return _ref.snn_count_stacked_ref(q, aq, r, thresh, xs, alphas,
+                                          half_norms, n_seg=xs.shape[0])
+    return _count_stacked_kernel(q, aq, r, thresh, xs, alphas, half_norms,
+                                 tq=tq, bn=bn, interpret=not on_tpu())
+
+
+def snn_compact_stacked(q, aq, r, thresh, offsets, xs, alphas, half_norms, *,
+                        nnz: int, tq: int = 128, bn: int = 512,
+                        use_pallas: bool | None = None):
+    """Stacked pass-2 compaction, one launch over the whole segment stack.
+
+    Returns (idx (nnz,) int32 *pack-flat* positions ``s * n_pad + row``,
+    dhalf (nnz,) f32); -1 / +BIG in unwritten slots, one trailing trash slot
+    (same contract as `snn_compact`).
+    """
+    if use_pallas is None:
+        use_pallas = on_tpu()
+    if not use_pallas:
+        return _ref.snn_compact_stacked_ref(q, aq, r, thresh, offsets, xs,
+                                            alphas, half_norms,
+                                            n_seg=xs.shape[0], nnz=nnz)
+    return _compact_stacked_kernel(q, aq, r, thresh, offsets, xs, alphas,
+                                   half_norms, nnz=nnz, tq=tq, bn=bn,
+                                   interpret=not on_tpu())
 
 
 def embedding_bag(ids, table, *, mode: str = "sum", use_pallas: bool | None = None):

@@ -46,6 +46,82 @@ def snn_compact_ref(q, aq, r, thresh, offsets, xs, alphas, half_norms, *, nnz: i
     return (out_idx.at[trash].set(-1), out_dh.at[trash].set(BIG))
 
 
+# --------------------------------------------------------------------------- #
+# Stacked (SegmentPack) oracles                                                #
+# --------------------------------------------------------------------------- #
+@functools.partial(jax.jit, static_argnames=("n_seg",))
+def snn_count_stacked_ref(q, aq, r, thresh, xs, alphas, half_norms, *,
+                          n_seg: int):
+    """Oracle for kernels.snn_query.snn_count_stacked.
+
+    ``xs`` (S, n_pad, d) and friends are flattened into one (S*n_pad, d)
+    database so the whole pass is ONE matmul — per-column dot products are
+    bit-identical to the per-segment calls (each output element reduces the
+    same d-length vectors in the same order), which the packed-vs-looped
+    engine equivalence relies on.
+    """
+    dh = snn_filter_ref(q, aq, r, thresh, xs.reshape(-1, xs.shape[-1]),
+                        alphas.reshape(-1), half_norms.reshape(-1))
+    return stacked_counts_from_filter(dh, n_seg=n_seg)
+
+
+@functools.partial(jax.jit, static_argnames=("n_seg",))
+def stacked_counts_from_filter(dh, *, n_seg: int):
+    """(m, S*n_pad) masked filter -> per-(segment, query) counts (S, m)."""
+    m = dh.shape[0]
+    keep = (dh < BIG).reshape(m, n_seg, -1)
+    return jnp.sum(keep, axis=2).astype(jnp.int32).T
+
+
+@jax.jit
+def stacked_prefix(per):
+    """Device prefix sums for the packed engine.
+
+    ``per`` is (S, m) int32 per-(segment, query) counts.  Returns
+    (counts (m,), indptr (m+1,), offsets (S, m)) where ``offsets[s, k]`` is
+    the flat CSR slot of segment s's first survivor for query k — the global
+    row base plus the segment-axis *exclusive* prefix.
+    """
+    counts = jnp.sum(per, axis=0)
+    indptr = jnp.concatenate(
+        [jnp.zeros(1, counts.dtype), jnp.cumsum(counts)])
+    offsets = indptr[:-1][None, :] + (jnp.cumsum(per, axis=0) - per)
+    return counts, indptr, offsets
+
+
+@functools.partial(jax.jit, static_argnames=("n_seg", "nnz"))
+def snn_compact_stacked_from_filter(dh, offsets, *, n_seg: int, nnz: int):
+    """Pass-2 scatter from an already-evaluated stacked filter.
+
+    ``dh`` is the (m, S*n_pad) output of `snn_filter_ref` over the flattened
+    stack (computed ONCE and reused for both passes by the packed oracle
+    path); ``offsets`` is `stacked_prefix`'s (S, m).  Returns pack-flat
+    (idx, dhalf) with the same conventions as snn_compact_stacked.
+    """
+    m = dh.shape[0]
+    keep3 = (dh < BIG).reshape(m, n_seg, -1)
+    within = jnp.cumsum(keep3.astype(jnp.int32), axis=2) - 1
+    trash = nnz - 1
+    # (m, S, n_pad) raveled matches dh.ravel() element order
+    pos = jnp.where(keep3, offsets.T[:, :, None] + within, trash).ravel()
+    cols = jnp.broadcast_to(jnp.arange(dh.shape[1], dtype=jnp.int32),
+                            dh.shape).ravel()
+    out_idx = jnp.full((nnz,), -1, jnp.int32).at[pos].set(cols)
+    out_dh = jnp.full((nnz,), BIG, jnp.float32).at[pos].set(dh.ravel())
+    return (out_idx.at[trash].set(-1), out_dh.at[trash].set(BIG))
+
+
+@functools.partial(jax.jit, static_argnames=("n_seg", "nnz"))
+def snn_compact_stacked_ref(q, aq, r, thresh, offsets, xs, alphas, half_norms,
+                            *, n_seg: int, nnz: int):
+    """Oracle for kernels.snn_query.snn_compact_stacked (recomputes the
+    filter; the packed engine uses `snn_compact_stacked_from_filter` to
+    reuse pass 1's evaluation)."""
+    dh = snn_filter_ref(q, aq, r, thresh, xs.reshape(-1, xs.shape[-1]),
+                        alphas.reshape(-1), half_norms.reshape(-1))
+    return snn_compact_stacked_from_filter(dh, offsets, n_seg=n_seg, nnz=nnz)
+
+
 @jax.jit
 def embedding_bag_ref(ids, table):
     """Oracle for kernels.embedding_bag.embedding_bag."""

@@ -12,13 +12,17 @@ TPU adaptation of the paper's dynamic-window BLAS GEMV/GEMM:
 * surviving cells compute ``dhalf = half_norm - X_block @ q`` on the MXU and
   apply the half-norm radius test  ``dhalf <= (R^2 - q.q)/2``  (paper eq. (4)).
 
-Three entry kernels share the body:
+Five entry kernels share the body:
   * ``filter`` : emits masked halved sq. distances (m, n), +BIG where pruned;
   * ``count``  : emits per-query neighbor counts (m,), accumulated over blocks;
   * ``compact``: pass 2 of the two-pass CSR engine — re-runs the block-pruned
     filter and scatters surviving (sorted-row index, dhalf) pairs directly into
     flat CSR arrays at caller-provided per-query offsets.  No (m, n)
     intermediate is ever materialized.
+  * ``count_stacked`` / ``compact_stacked``: the same two passes over a whole
+    *stack* of segments at once (`core.engine.SegmentPack`) — the grid grows a
+    leading segment axis, so one launch covers every live segment of a
+    multi-segment index instead of one launch (plus host sync) per segment.
 
 Layout notes (TPU): 1-D per-row arrays (alpha, half-norm, per-query scalars)
 are carried as (1, n)/(1, m) so the last dim is the 128-lane axis; ``d`` is
@@ -44,18 +48,24 @@ def _window_hit(aq, r, a_lo, a_hi):
     return jnp.any((aq + r >= a_lo) & (aq - r <= a_hi))
 
 
-def _tile_body(q_ref, aq_ref, r_ref, th_ref, x_ref, al_ref, hn_ref):
-    """Shared compute for one (query tile, db block) cell -> (keep, dhalf)."""
+def _tile_body(q, aq, r, th, x, al, hn):
+    """Shared compute for one (query tile, db block) cell -> (keep, dhalf).
+
+    Takes plain arrays (not refs) so the looped 2-D kernels and the stacked
+    3-D kernels run the exact same instruction sequence on the same block
+    shapes — the pass-1/pass-2 and looped/stacked bit-identity both lean on
+    this body being the single compiled predicate pipeline.
+    """
     s = jax.lax.dot_general(
-        q_ref[...], x_ref[...],
+        q, x,
         dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
     )  # (tq, bn)
-    dhalf = hn_ref[...] - s  # (1, bn) broadcast over (tq, bn)
-    aq = aq_ref[0, :][:, None]          # (tq, 1)
-    r = r_ref[0, :][:, None]
-    inwin = jnp.abs(al_ref[...] - aq) <= r
-    keep = inwin & (dhalf <= th_ref[0, :][:, None])
+    dhalf = hn - s  # (1, bn) broadcast over (tq, bn)
+    aqc = aq[0, :][:, None]          # (tq, 1)
+    rc = r[0, :][:, None]
+    inwin = jnp.abs(al - aqc) <= rc
+    keep = inwin & (dhalf <= th[0, :][:, None])
     return keep, dhalf
 
 
@@ -66,7 +76,9 @@ def _filter_kernel(q_ref, aq_ref, r_ref, th_ref, x_ref, al_ref, hn_ref, out_ref)
 
     @pl.when(hit)
     def _():
-        keep, dhalf = _tile_body(q_ref, aq_ref, r_ref, th_ref, x_ref, al_ref, hn_ref)
+        keep, dhalf = _tile_body(q_ref[...], aq_ref[...], r_ref[...],
+                                 th_ref[...], x_ref[...], al_ref[...],
+                                 hn_ref[...])
         out_ref[...] = jnp.where(keep, dhalf, BIG)
 
     @pl.when(jnp.logical_not(hit))
@@ -87,7 +99,28 @@ def _count_kernel(q_ref, aq_ref, r_ref, th_ref, x_ref, al_ref, hn_ref, out_ref):
 
     @pl.when(hit)
     def _():
-        keep, _ = _tile_body(q_ref, aq_ref, r_ref, th_ref, x_ref, al_ref, hn_ref)
+        keep, _ = _tile_body(q_ref[...], aq_ref[...], r_ref[...], th_ref[...],
+                             x_ref[...], al_ref[...], hn_ref[...])
+        out_ref[...] += jnp.sum(keep.astype(jnp.int32), axis=1)[None, :]
+
+
+def _count_stacked_kernel(q_ref, aq_ref, r_ref, th_ref, x_ref, al_ref, hn_ref,
+                          out_ref):
+    """`_count_kernel` with a leading segment grid axis over stacked tensors."""
+    bi = pl.program_id(2)
+
+    @pl.when(bi == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a_lo = al_ref[0, 0]
+    a_hi = al_ref[0, al_ref.shape[1] - 1]
+    hit = _window_hit(aq_ref[0, :], r_ref[0, :], a_lo, a_hi)
+
+    @pl.when(hit)
+    def _():
+        keep, _ = _tile_body(q_ref[...], aq_ref[...], r_ref[...], th_ref[...],
+                             x_ref[0], al_ref[...], hn_ref[...])
         out_ref[...] += jnp.sum(keep.astype(jnp.int32), axis=1)[None, :]
 
 
@@ -182,7 +215,9 @@ def _compact_kernel(q_ref, aq_ref, r_ref, th_ref, off_ref,
 
     @pl.when(hit)
     def _():
-        keep, dhalf = _tile_body(q_ref, aq_ref, r_ref, th_ref, x_ref, al_ref, hn_ref)
+        keep, dhalf = _tile_body(q_ref[...], aq_ref[...], r_ref[...],
+                                 th_ref[...], x_ref[...], al_ref[...],
+                                 hn_ref[...])
         keep_i = keep.astype(jnp.int32)
         # Survivor j of query row k goes to offsets[k] + cursor[k] + (number of
         # survivors before j in this block) — ascending sorted order, so each
@@ -261,4 +296,150 @@ def snn_compact(q, aq, r, thresh, offsets, xs, alphas, half_norms, *,
         interpret=interpret,
     )(q, aq[None, :], r[None, :], thresh[None, :], offsets[None, :], xs,
       alphas[None, :], half_norms[None, :])
+    return out_idx[0], out_dh[0]
+
+
+# --------------------------------------------------------------------------- #
+# Stacked-grid variants (one launch over a whole SegmentPack)                  #
+# --------------------------------------------------------------------------- #
+def _stacked_grid_specs(n_seg, m, n, d, tq, bn):
+    grid = (n_seg, m // tq, n // bn)
+    in_specs = [
+        pl.BlockSpec((tq, d), lambda s, qi, bi: (qi, 0)),      # q
+        pl.BlockSpec((1, tq), lambda s, qi, bi: (0, qi)),      # aq
+        pl.BlockSpec((1, tq), lambda s, qi, bi: (0, qi)),      # r
+        pl.BlockSpec((1, tq), lambda s, qi, bi: (0, qi)),      # thresh
+        pl.BlockSpec((1, bn, d), lambda s, qi, bi: (s, bi, 0)),  # xs stack
+        pl.BlockSpec((1, bn), lambda s, qi, bi: (s, bi)),      # alpha stack
+        pl.BlockSpec((1, bn), lambda s, qi, bi: (s, bi)),      # half-norm stack
+    ]
+    return grid, in_specs
+
+
+@functools.partial(jax.jit, static_argnames=("tq", "bn", "interpret"))
+def snn_count_stacked(q, aq, r, thresh, xs, alphas, half_norms, *,
+                      tq: int = 128, bn: int = 512, interpret: bool = True):
+    """Per-(segment, query) survivor counts (S, m) int32 in ONE launch.
+
+    ``xs`` is a (S, n_pad, d) stack of padded segments (`core.engine.
+    SegmentPack`); ``alphas``/``half_norms`` are the matching (S, n_pad)
+    stacks.  Per-cell block pruning is unchanged — a segment whose alpha
+    range misses every query window in the tile skips its MXU work — so
+    stacking costs no extra predicate evaluations, only the per-launch
+    dispatch that the looped engine paid S times.
+    """
+    m, d = q.shape
+    n_seg, n, _ = xs.shape
+    grid, in_specs = _stacked_grid_specs(n_seg, m, n, d, tq, bn)
+    return pl.pallas_call(
+        _count_stacked_kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, tq), lambda s, qi, bi: (s, qi)),
+        out_shape=jax.ShapeDtypeStruct((n_seg, m), jnp.int32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL,
+                                 pltpu.ARBITRARY)),
+        interpret=interpret,
+    )(q, aq[None, :], r[None, :], thresh[None, :], xs, alphas, half_norms)
+
+
+def _compact_stacked_kernel(q_ref, aq_ref, r_ref, th_ref, off_ref,
+                            x_ref, al_ref, hn_ref, idx_ref, dh_ref,
+                            cursor_ref):
+    """`_compact_kernel` with a leading segment grid axis.
+
+    Emitted flat indices are *pack-flat*: segment s's local row j becomes
+    ``s * n_pad + j`` (callers map through the pack's padded id table).
+    Offsets are per (segment, query) — the global CSR base plus the
+    segment-axis exclusive prefix, both computed on device.
+    """
+    si = pl.program_id(0)
+    qi = pl.program_id(1)
+    bi = pl.program_id(2)
+    bn = x_ref.shape[1]
+    n_pad = pl.num_programs(2) * bn
+    trash = idx_ref.shape[1] - 1
+
+    @pl.when((si == 0) & (qi == 0) & (bi == 0))
+    def _():
+        idx_ref[...] = jnp.full_like(idx_ref, -1)
+        dh_ref[...] = jnp.full_like(dh_ref, BIG)
+
+    @pl.when(bi == 0)
+    def _():
+        cursor_ref[...] = jnp.zeros_like(cursor_ref)
+
+    a_lo = al_ref[0, 0]
+    a_hi = al_ref[0, al_ref.shape[1] - 1]
+    hit = _window_hit(aq_ref[0, :], r_ref[0, :], a_lo, a_hi)
+
+    @pl.when(hit)
+    def _():
+        keep, dhalf = _tile_body(q_ref[...], aq_ref[...], r_ref[...],
+                                 th_ref[...], x_ref[0], al_ref[...],
+                                 hn_ref[...])
+        keep_i = keep.astype(jnp.int32)
+        within = jnp.cumsum(keep_i, axis=1) - 1
+        base = off_ref[0, :] + cursor_ref[0, :]
+        col0 = si * n_pad + bi * bn
+
+        def row_body(k, _):
+            pos = jnp.where(keep[k], base[k] + within[k], trash)
+
+            def scatter_row(_):
+                def el_body(j, __):
+                    idx_ref[0, pl.ds(pos[j], 1)] = (col0 + j)[None].astype(jnp.int32)
+                    dh_ref[0, pl.ds(pos[j], 1)] = dhalf[k, j][None]
+                    return 0
+
+                return jax.lax.fori_loop(0, bn, el_body, 0)
+
+            return jax.lax.cond(jnp.sum(keep_i[k]) > 0, scatter_row,
+                                lambda _: 0, 0)
+
+        jax.lax.fori_loop(0, keep.shape[0], row_body, 0)
+        cursor_ref[...] += jnp.sum(keep_i, axis=1)[None, :]
+
+    @pl.when((si == pl.num_programs(0) - 1) & (qi == pl.num_programs(1) - 1)
+             & (bi == pl.num_programs(2) - 1))
+    def _():
+        idx_ref[0, pl.ds(trash, 1)] = jnp.full((1,), -1, jnp.int32)
+        dh_ref[0, pl.ds(trash, 1)] = jnp.full((1,), BIG, jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("nnz", "tq", "bn", "interpret"))
+def snn_compact_stacked(q, aq, r, thresh, offsets, xs, alphas, half_norms, *,
+                        nnz: int, tq: int = 128, bn: int = 512,
+                        interpret: bool = True):
+    """Pass-2 compaction over a (S, n_pad, d) segment stack in ONE launch.
+
+    ``offsets`` is (S, m): flat slot of segment s's first survivor for query
+    k (global CSR base + segment-axis exclusive prefix).  Returns flat
+    (idx (nnz,) int32 PACK-FLAT positions ``s * n_pad + local_row``,
+    dhalf (nnz,) f32); same trash-slot/-1 conventions as `snn_compact`.
+    All three grid dims are sequential: every cell scatters into the same
+    flat output block, with the VMEM cursor carrying each query's running
+    write position across a segment's db blocks.
+    """
+    m, d = q.shape
+    n_seg, n, _ = xs.shape
+    grid, in_specs = _stacked_grid_specs(n_seg, m, n, d, tq, bn)
+    in_specs = in_specs[:4] \
+        + [pl.BlockSpec((1, tq), lambda s, qi, bi: (s, qi))] + in_specs[4:]
+    out_idx, out_dh = pl.pallas_call(
+        _compact_stacked_kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[pl.BlockSpec((1, nnz), lambda s, qi, bi: (0, 0)),
+                   pl.BlockSpec((1, nnz), lambda s, qi, bi: (0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((1, nnz), jnp.int32),
+                   jax.ShapeDtypeStruct((1, nnz), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((1, tq), jnp.int32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=(pltpu.ARBITRARY, pltpu.ARBITRARY,
+                                 pltpu.ARBITRARY)),
+        interpret=interpret,
+    )(q, aq[None, :], r[None, :], thresh[None, :], offsets, xs,
+      alphas, half_norms)
     return out_idx[0], out_dh[0]

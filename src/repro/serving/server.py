@@ -73,6 +73,17 @@ class SNNServer:
         """All served points (original append order)."""
         return self.index.raw
 
+    @property
+    def generation(self) -> int:
+        """Index generation the cached execution plan is valid for.
+
+        Bumps on every append/merge/rebuild; the serving plan (the streaming
+        snapshot's `SegmentPack`) is invalidated or incrementally extended
+        at the same publish, so a response is always computed on a plan of
+        its own generation.
+        """
+        return self.index.generation
+
     # kept for callers that predate the streaming index
     _data = data
 
@@ -198,10 +209,20 @@ class SNNServer:
                 stale.set()
 
     def _respond_csr(self, index, batch, qs, sel, rad: float):
-        """Exact path: unified CSR engine, variable-length, never truncated."""
+        """Exact path: the cached execution plan, variable-length, untruncated.
+
+        With ``cfg.serve_packed`` (default) the query executes the streaming
+        snapshot's `SegmentPack` plan — built on the first request of an
+        index generation, reused by every request until an append/rebuild
+        publishes the next generation (appends extend the plan incrementally
+        instead of rebuilding it; see `core.streaming`).  The flat CSR
+        staging buffers are engine-level scratch reused across requests, so
+        steady-state serving allocates only the exact-size responses.
+        """
         csr = index.query_radius_csr(qs[sel], rad,
                                      query_tile=self.cfg.query_tile,
-                                     native=False)
+                                     native=False,
+                                     packed=self.cfg.serve_packed)
         now = time.monotonic()
         for j, bi in enumerate(sel):
             r = batch[bi]

@@ -14,6 +14,9 @@ from repro.core import (StreamingSNNIndex, build_index, build_neighbor_graph,
                         query_radius_csr, query_radius_fixed)
 from repro.core.dbscan import normalized_mutual_information as nmi
 
+# full-lane suite: excluded from the fail-fast CI smoke lane
+pytestmark = pytest.mark.slow
+
 
 # --------------------------------------------------------------------------- #
 # n = 0 (empty database)                                                       #

@@ -10,12 +10,16 @@ exactly.
 import types
 
 import numpy as np
+import pytest
 from _hyp_compat import given, settings, st
 
 from repro.core import (build_index, build_neighbor_graph,
                         build_neighbor_graph_sharded, min_label_components,
                         query_radius_csr)
 from repro.core.dbscan import dbscan, labels_from_graph, neighbor_graph
+
+# full-lane suite: excluded from the fail-fast CI smoke lane
+pytestmark = pytest.mark.slow
 
 
 def _assert_same_graph(got, want, check_dist=True):
