@@ -1,0 +1,170 @@
+"""Serving under mixed-radius traffic + exact kNN vs the kd-tree baseline.
+
+Two sections, both recorded into ``BENCH_serving.json``:
+
+* **serving** — steady-state throughput of the dispatcher body on batches
+  whose requests all carry DIFFERENT radii.  The fused path (one packed
+  engine execution per batch, per-request radii as the engine's per-query
+  vector) is measured against the retired per-radius-group loop (one engine
+  execution per distinct radius — reconstructed here as the baseline),
+  with `engine.DISPATCH_STATS` deltas recorded alongside wall time: the
+  launch count is the thing the refactor collapses from O(R) to O(1).
+* **knn** — `core.knn.query_knn` (seed + count-expand + one compact) vs
+  `baselines.KDTree.query_knn` (branch-and-bound on the median-split tree),
+  with an in-bench exactness cross-check — speed is never traded for
+  correctness.
+
+`run` executes both sections; `run_serving` / `run_knn` are the
+`benchmarks.run` suite entries and merge their cells into the shared JSON,
+so CI lanes can run either alone.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.configs.snn_default import SNNConfig
+from repro.core import KDTree, build_index, query_knn
+from repro.data.pipeline import make_uniform
+from repro.serving.server import Request, SNNServer
+
+from .common import dispatch_counts, row, timeit
+
+OUT_JSON = "BENCH_serving.json"
+
+
+# --------------------------------------------------------------------------- #
+# serving section                                                              #
+# --------------------------------------------------------------------------- #
+def _per_group_reference(index, qs, radii, query_tile):
+    """The retired serving loop: one fused engine call PER DISTINCT RADIUS."""
+    out = [None] * len(radii)
+    for rad in np.unique(radii):
+        sel = np.nonzero(radii == rad)[0]
+        csr = index.query_radius_csr(qs[sel], float(rad),
+                                     query_tile=query_tile, native=False)
+        for j, bi in enumerate(sel):
+            out[bi] = csr.row(j)
+    return out
+
+
+def _serving_cell(n: int, d: int, batch: int, record: list) -> dict:
+    data = make_uniform(n, d, seed=0)
+    rng = np.random.default_rng(1)
+    qs = rng.random((batch, d)).astype(np.float32)
+    radii = rng.uniform(0.3, 0.9, batch)  # every request a distinct radius
+    server = SNNServer(data, SNNConfig(serve_batch=batch))
+    server.index.plan()  # plans prebuilt: measure steady state, not warmup
+    reqs = [Request(query=qs[i], radius=float(radii[i]), id=i)
+            for i in range(batch)]
+    tag = f"n{n}/d{d}/B{batch}"
+
+    stats_fused, stats_group = {}, {}
+    with dispatch_counts(stats_fused):
+        server._run_batch(reqs)
+    t_fused = timeit(server._run_batch, reqs, repeat=3)
+    with dispatch_counts(stats_group):
+        _per_group_reference(server.index, qs, radii, server.cfg.query_tile)
+    t_group = timeit(_per_group_reference, server.index, qs, radii,
+                     server.cfg.query_tile, repeat=3)
+
+    # cross-check: the fused batch answers exactly like the per-group loop
+    want = _per_group_reference(server.index, qs, radii,
+                                server.cfg.query_tile)
+    for i in range(batch):
+        resp = server._results[i]
+        assert (resp.indices == want[i][0]).all(), i
+        assert (resp.sq_dists == want[i][1]).all(), i
+
+    record.append(row(f"serving/fused_batch/{tag}", t_fused,
+                      f"launches={stats_fused['kernel_launches']}"))
+    record.append(row(f"serving/per_group_batch/{tag}", t_group,
+                      f"launches={stats_group['kernel_launches']}"))
+    return {
+        "n": n, "d": d, "batch": batch, "distinct_radii": batch,
+        "qps": {"fused": batch / max(t_fused, 1e-12),
+                "per_group": batch / max(t_group, 1e-12)},
+        "dispatch": {"fused": stats_fused, "per_group": stats_group},
+        "qps_speedup": t_group / max(t_fused, 1e-12),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# knn section                                                                  #
+# --------------------------------------------------------------------------- #
+def _knn_cell(n: int, d: int, m: int, k: int, record: list) -> dict:
+    data = make_uniform(n, d, seed=2)
+    q = make_uniform(m, d, seed=3)
+    index = build_index(data)
+    tree = KDTree(data)
+    tag = f"n{n}/d{d}/m{m}/k{k}"
+
+    idx_s, dist_s = query_knn(index, q, k)  # warm (jit) before timing
+    t_snn = timeit(query_knn, index, q, k, repeat=3)
+    idx_t, dist_t = tree.query_knn(q, k)
+    t_tree = timeit(tree.query_knn, q, k, repeat=2)
+
+    assert (idx_s == idx_t).all(), "kNN mismatch vs kd-tree"
+    assert np.allclose(dist_s, dist_t, rtol=1e-6, atol=1e-6)
+
+    record.append(row(f"knn/snn/{tag}", t_snn / m, ""))
+    record.append(row(f"knn/kdtree/{tag}", t_tree / m, ""))
+    return {
+        "n": n, "d": d, "m": m, "k": k,
+        "us_per_query": {"snn": t_snn / m * 1e6, "kdtree": t_tree / m * 1e6},
+        "knn_speedup_vs_kdtree": t_tree / max(t_snn, 1e-12),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# harness plumbing                                                             #
+# --------------------------------------------------------------------------- #
+def _merge_payload(cells: list[dict], section: str, full: bool,
+                   out_json: str) -> None:
+    """Read-modify-write: each section owns its cells, the file is shared."""
+    import jax
+
+    payload = {"benchmark": "serving", "cells": []}
+    if os.path.exists(out_json):
+        try:
+            with open(out_json) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            pass
+    payload["backend"] = jax.default_backend()
+    payload["full"] = full
+    payload["cells"] = [c for c in payload.get("cells", [])
+                        if c.get("section") != section]
+    payload["cells"].extend(dict(c, section=section) for c in cells)
+    with open(out_json, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {os.path.abspath(out_json)}", flush=True)
+
+
+def run_serving(full: bool = False, out_json: str = OUT_JSON) -> list[str]:
+    rows: list[str] = []
+    grid = ([(20_000, 16, 64), (50_000, 16, 256)] if not full
+            else [(100_000, 16, 256), (250_000, 32, 512)])
+    cells = [_serving_cell(n, d, b, rows) for n, d, b in grid]
+    _merge_payload(cells, "serving", full, out_json)
+    return rows
+
+
+def run_knn(full: bool = False, out_json: str = OUT_JSON) -> list[str]:
+    rows: list[str] = []
+    grid = ([(20_000, 8, 256, 10), (50_000, 16, 256, 10)] if not full
+            else [(100_000, 16, 1024, 10), (1_000_000, 16, 1024, 100)])
+    cells = [_knn_cell(n, d, m, k, rows) for n, d, m, k in grid]
+    _merge_payload(cells, "knn", full, out_json)
+    return rows
+
+
+def run(full: bool = False, out_json: str = OUT_JSON) -> list[str]:
+    return run_serving(full, out_json) + run_knn(full, out_json)
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

@@ -11,6 +11,7 @@ from .snn import (  # noqa: F401
 )
 from .engine import (Segment, make_segment, segment_from_index,  # noqa: F401
                      segments_from_index)
+from .knn import query_knn  # noqa: F401
 from .graph import (build_neighbor_graph, build_neighbor_graph_sharded,  # noqa: F401
                     min_label_components)
 from .streaming import StreamingSNNIndex, merge_sorted_indexes  # noqa: F401

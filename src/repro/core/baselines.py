@@ -132,6 +132,51 @@ class KDTree:
         if abs(delta) <= r:
             self._query_one(far, q, r, hits)
 
+    def query_knn(self, q: np.ndarray, k: int, return_distance: bool = True):
+        """Exact k nearest neighbors: (indices (m,k), distances (m,k)).
+
+        Branch-and-bound over the same tree: descend the near child first,
+        visit the far child only while the plane distance can beat the
+        current k-th best.  Output contract matches `core.knn.query_knn`
+        (distances ascending, ties by id, -1/+inf past the database size;
+        native-metric distances, so inner products for mips).
+        """
+        tq = _metrics.transform_query(np.asarray(q), self.metric)
+        m, n = tq.shape[0], self.x.shape[0]
+        k = int(k)
+        out_i = np.full((m, k), -1, np.int64)
+        out_sq = np.full((m, k), np.inf, np.float64)
+        kk = min(k, n)
+        if kk:
+            for i in range(m):
+                best = [np.zeros(0, np.float64), np.zeros(0, np.int64)]
+                self._knn_one(0, tq[i].astype(np.float64), kk, best)
+                out_sq[i, :best[0].size] = best[0]
+                out_i[i, :best[1].size] = best[1]
+        if not return_distance:
+            return out_i
+        return out_i, _metrics.native_knn_distances(out_i, out_sq,
+                                                    self.metric, self.xi, tq)
+
+    def _knn_one(self, node: int, q: np.ndarray, kk: int, best: list) -> None:
+        if self._axis[node] < 0:  # leaf
+            seg = self.idx[self._lo[node]: self._hi[node]]
+            diff = self.x[seg].astype(np.float64) - q[None, :]
+            sq = np.einsum("nd,nd->n", diff, diff)
+            d = np.concatenate([best[0], sq])
+            ii = np.concatenate([best[1], seg])
+            keep = np.lexsort((ii, d))[:kk]  # ascending distance, ties by id
+            best[0], best[1] = d[keep], ii[keep]
+            return
+        axis, split = self._axis[node], self._split[node]
+        delta = q[axis] - split
+        near, far = (self._left[node], self._right[node]) if delta < 0 else \
+                    (self._right[node], self._left[node])
+        self._knn_one(near, q, kk, best)
+        bound = best[0][-1] if best[0].size == kk else np.inf
+        if delta * delta <= bound:
+            self._knn_one(far, q, kk, best)
+
 
 # --------------------------------------------------------------------------- #
 # Regular grid (GriSPy-style)                                                  #

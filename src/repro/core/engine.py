@@ -542,6 +542,48 @@ def pack_from_index(index, *, block: int = 512, epoch: int = 0) -> SegmentPack:
                              epoch=epoch)
 
 
+def _live_idx(pack: SegmentPack, aqp, rp, m: int,
+              first_seg: int = 0) -> np.ndarray:
+    """The shared packed-executor prologue: which segments are live?
+
+    `run_csr_packed` and `run_counts_packed` MUST agree on this decision
+    (and on the gathers below) — the kNN front-end validates radii against
+    standalone counts and relies on the final count→compact execution
+    seeing the identical predicate inputs.
+    """
+    aq64 = np.asarray(aqp, np.float64)[:m]
+    r64 = np.asarray(rp, np.float64)[:m]
+    mask = pack.live_mask(aq64, r64)
+    if first_seg:
+        mask[:first_seg] = False
+    return np.nonzero(mask)[0]
+
+
+def _gather_live_concat(pack: SegmentPack, live_idx: np.ndarray):
+    """(xs, alphas, half_norms, ids, sizes) of the live segments' rows from
+    the pack's ragged concat rep (zero-copy when every segment is live)."""
+    xs_c, al_c, hn_c, ids_c, starts_c = pack.concat()
+    if live_idx.size == pack.n_segments:
+        return xs_c, al_c, hn_c, ids_c, np.diff(starts_c)
+    # one device gather of the live segments' row ranges
+    sizes = np.diff(starts_c)[live_idx]
+    rows_sel = np.concatenate(
+        [np.arange(starts_c[k], starts_c[k + 1]) for k in live_idx])
+    sel = jnp.asarray(rows_sel)
+    return xs_c[sel], al_c[sel], hn_c[sel], ids_c[rows_sel], sizes
+
+
+def _gather_live_stacked(pack: SegmentPack, live_idx: np.ndarray):
+    """(xs, alphas, half_norms, ids) of the live slabs from the pack's
+    stacked rep (zero-copy when every segment is live)."""
+    xs, al, hn, ids = pack.stacked()
+    if live_idx.size < pack.n_segments:
+        sel = jnp.asarray(live_idx)
+        xs, al, hn = xs[sel], al[sel], hn[sel]
+        ids = ids[live_idx]
+    return xs, al, hn, ids
+
+
 def run_csr_packed(
     pack: SegmentPack,
     qp, aqp, rp, thp,
@@ -585,12 +627,7 @@ def run_csr_packed(
     """
     if use_pallas is None:
         use_pallas = _ops.on_tpu()
-    aq64 = np.asarray(aqp, np.float64)[:m]
-    r64 = np.asarray(rp, np.float64)[:m]
-    mask = pack.live_mask(aq64, r64)
-    if first_seg:
-        mask[:first_seg] = False
-    live_idx = np.nonzero(mask)[0]
+    live_idx = _live_idx(pack, aqp, rp, m, first_seg)
     indptr0 = np.zeros(m + 1, np.int64)
     if live_idx.size == 0:
         return (indptr0, np.zeros(m, np.int64), np.zeros(0, np.int64),
@@ -600,17 +637,7 @@ def run_csr_packed(
     if use_pallas:
         return _execute_stacked(pack, qp, aqp, rp, thp, m, live_idx,
                                 query_tile=query_tile)
-    xs_c, al_c, hn_c, ids_c, starts_c = pack.concat()
-    if L == pack.n_segments:
-        sizes = np.diff(starts_c)
-        ids = ids_c
-    else:  # one device gather of the live segments' row ranges
-        sizes = np.diff(starts_c)[live_idx]
-        rows_sel = np.concatenate(
-            [np.arange(starts_c[k], starts_c[k + 1]) for k in live_idx])
-        sel = jnp.asarray(rows_sel)
-        xs_c, al_c, hn_c = xs_c[sel], al_c[sel], hn_c[sel]
-        ids = ids_c[rows_sel]
+    xs_c, al_c, hn_c, ids, sizes = _gather_live_concat(pack, live_idx)
     n_live_rows = int(sizes.sum())
     if memory_budget_mb is not None \
             and qp.shape[0] * n_live_rows * 4 > memory_budget_mb * 2**20:
@@ -662,16 +689,66 @@ def run_csr_packed(
     return indptr, counts, flat_ids[:total].copy(), flat_dh[:total].copy()
 
 
+def run_counts_packed(
+    pack: SegmentPack,
+    qp, aqp, rp, thp,
+    m: int,
+    *,
+    query_tile: int = 128,
+    use_pallas: bool | None = None,
+    memory_budget_mb: float | None = None,
+) -> np.ndarray:
+    """Pass 1 ONLY: per-query survivor counts (m,) int64 over a plan.
+
+    The count phase of `run_csr_packed` as a standalone launch — what
+    iterative radius searches need (the kNN front-end's expansion loop only
+    learns whether each query's ball holds enough points, and defers the
+    compaction until every radius has converged).  Evaluates the identical
+    predicate pipeline as `run_csr_packed`'s pass 1 on the same inputs: a
+    per-query radius vector whose counts satisfy a caller here yields the
+    exact same counts inside the final count→compact execution.
+    """
+    if use_pallas is None:
+        use_pallas = _ops.on_tpu()
+    live_idx = _live_idx(pack, aqp, rp, m)
+    if live_idx.size == 0:
+        return np.zeros(m, np.int64)
+
+    if use_pallas:
+        xs, al, hn, _ = _gather_live_stacked(pack, live_idx)
+        DISPATCH_STATS.kernel_launches += 1
+        per = _ops.snn_count_stacked(qp, aqp, rp, thp, xs, al, hn,
+                                     tq=query_tile, bn=pack.block,
+                                     use_pallas=True)
+        DISPATCH_STATS.host_transfers += 1
+        return np.asarray(per).sum(axis=0)[:m].astype(np.int64)
+
+    xs_c, al_c, hn_c, _, sizes = _gather_live_concat(pack, live_idx)
+    n_live_rows = int(sizes.sum())
+    if memory_budget_mb is not None \
+            and qp.shape[0] * n_live_rows * 4 > memory_budget_mb * 2**20:
+        # per-segment loop bounds the transient dense filter to one segment
+        counts = np.zeros(m, np.int64)
+        for k in live_idx:
+            seg = pack.segments[k]
+            DISPATCH_STATS.kernel_launches += 1
+            DISPATCH_STATS.host_transfers += 1
+            counts += np.asarray(_ops.snn_count(
+                qp, aqp, rp, thp, seg.xs, seg.alphas, seg.half_norms,
+                tq=query_tile, bn=seg.block, use_pallas=False))[:m]
+        return counts
+    DISPATCH_STATS.kernel_launches += 1
+    DISPATCH_STATS.host_transfers += 1
+    dh = np.asarray(_ops.snn_filter(qp, aqp, rp, thp, xs_c, al_c, hn_c,
+                                    use_pallas=False))[:m]
+    return (dh < _ops.BIG).sum(axis=1).astype(np.int64)
+
+
 def _execute_stacked(pack: SegmentPack, qp, aqp, rp, thp, m: int,
                      live_idx: np.ndarray, *, query_tile: int):
     """The Pallas executor of `run_csr_packed`: stacked-grid kernels with
     on-device prefix sums (see `run_csr_packed` docstring)."""
-    xs, al, hn, ids = pack.stacked()
-    L = int(live_idx.size)
-    if L < pack.n_segments:  # one device gather of the live slabs
-        sel = jnp.asarray(live_idx)
-        xs, al, hn = xs[sel], al[sel], hn[sel]
-        ids = ids[live_idx]
+    xs, al, hn, ids = _gather_live_stacked(pack, live_idx)
 
     # ---- pass 1: ONE stacked count launch --------------------------------
     DISPATCH_STATS.kernel_launches += 1
@@ -719,8 +796,9 @@ def query_csr(
     """Full CSR query over ``segments``: predicates from ``index`` (the owner
     of mu/v1/metric/xi), then `run_csr`, then distance finalization.
 
-    This is the single entry every front-end (single-device, sharded,
-    streaming, serving) routes through.
+    ``radius`` is a scalar or a per-query (m,) vector in the native metric
+    (`snn.prepare_queries`).  This is the single entry every front-end
+    (single-device, sharded, streaming, serving) routes through.
     """
     from . import snn as _snn  # deferred: snn imports this module lazily too
 

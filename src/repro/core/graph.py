@@ -298,6 +298,9 @@ def build_neighbor_graph(
     Args:
       x: (n, d) points; the database and the query set.
       eps: radius in the native metric (inner-product threshold for mips).
+        A scalar, or — with ``symmetric=False`` — a per-point (n,) vector
+        (row i uses ``eps[i]``: the variable-density graph); everything
+        routes through the engine's per-query radius vector either way.
       index: prebuilt `SNNIndex` over exactly ``x`` (built here if None).
       symmetric: evaluate each cross-chunk pair once and mirror it (roughly
         halves predicate work; see module docstring for the boundary-tie
@@ -329,6 +332,17 @@ def build_neighbor_graph(
         # native mips distances (p.q) are symmetric and fine
         raise ValueError("symmetric=True cannot mirror non-native mips "
                          "distances; use native=True or symmetric=False")
+    eps = np.asarray(eps, np.float64) if np.ndim(eps) else eps
+    if np.ndim(eps):
+        if symmetric:
+            # a mirrored pair would be tested under two different radii;
+            # the once-evaluated cross-chunk predicate cannot honor both
+            raise ValueError("symmetric=True requires a uniform scalar eps; "
+                             "use symmetric=False for per-point eps")
+        if eps.shape != (n,):
+            raise ValueError(f"per-point eps must have shape ({n},); "
+                             f"got {eps.shape}")
+        eps = eps[index.order]  # align with the sorted query order
     if n == 0:
         return _snn.CSRNeighbors(
             np.zeros(1, np.int64), np.zeros(0, np.int64),
@@ -384,6 +398,12 @@ def build_neighbor_graph_sharded(
     if x.ndim != 2 or x.shape[0] != n:
         raise ValueError(f"x must be the index's (n, d) data; got shape "
                          f"{x.shape} for an index of n={n}")
+    if np.ndim(eps):
+        eps = np.asarray(eps, np.float64)
+        if eps.shape != (n,):
+            raise ValueError(f"per-point eps must have shape ({n},); "
+                             f"got {eps.shape}")
+        eps = eps[index.order]  # align with the sorted query order
     if n == 0:
         return _snn.CSRNeighbors(
             np.zeros(1, np.int64), np.zeros(0, np.int64),

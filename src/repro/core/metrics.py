@@ -76,25 +76,92 @@ def transform_query(q: np.ndarray, metric: str) -> np.ndarray:
     raise ValueError(f"unknown metric {metric!r}; valid: {VALID_METRICS}")
 
 
-def euclidean_radius(radius, q: np.ndarray, metric: str, xi: float = 0.0) -> np.ndarray:
-    """Per-query Euclidean radius equivalent to ``radius`` in ``metric``.
+def broadcast_radius(radius, m: int) -> np.ndarray:
+    """Canonicalize a radius argument to the per-query (m,) float64 vector.
 
-    For mips, ``radius`` is the inner-product threshold S (neighbors satisfy
-    ``p.q >= S``) and the result depends on ||q|| — hence per-query output.
+    The per-query vector is the canonical representation everywhere below
+    the public API surface; a scalar is the broadcasting convenience (every
+    query gets the same radius).  Anything else — a wrong-length vector, a
+    2-D array — is a shape bug at the call site and is rejected here, once,
+    instead of surfacing as a cryptic kernel-padding error.
+    """
+    r = np.asarray(radius, dtype=np.float64)
+    if r.ndim == 0:
+        return np.full((m,), float(r), dtype=np.float64)
+    if r.shape != (m,):
+        raise ValueError(f"radius must be a scalar or a per-query (m,) = "
+                         f"({m},) vector; got shape {r.shape}")
+    return r.copy()
+
+
+def euclidean_radius(radius, q: np.ndarray, metric: str, xi: float = 0.0) -> np.ndarray:
+    """Per-query Euclidean radii equivalent to ``radius`` in ``metric``.
+
+    ``radius`` is a scalar or a per-query (m,) vector in the native metric
+    (`broadcast_radius` is the one canonicalization point); the result is
+    always the per-query (m,) Euclidean vector the kernels consume.  For
+    mips, ``radius`` is the inner-product threshold S (neighbors satisfy
+    ``p.q >= S``) and the result additionally depends on ||q||.
     """
     q = _as2d(q)
-    m = q.shape[0]
+    r = broadcast_radius(radius, q.shape[0])
     if metric == "euclidean":
-        return np.full((m,), float(radius), dtype=np.float64)
+        return r
     if metric == "cosine":
         # cdist(u, v) <= radius  <=>  ||u-v||^2 <= 2*radius
-        return np.full((m,), np.sqrt(max(2.0 * float(radius), 0.0)), dtype=np.float64)
+        return np.sqrt(np.maximum(2.0 * r, 0.0))
     if metric == "angular":
-        return np.full((m,), np.sqrt(max(2.0 - 2.0 * np.cos(float(radius)), 0.0)), dtype=np.float64)
+        return np.sqrt(np.maximum(2.0 - 2.0 * np.cos(r), 0.0))
     if metric == "mips":
         qsq = np.einsum("ij,ij->i", q, q)
-        return np.sqrt(np.maximum(xi * xi + qsq - 2.0 * float(radius), 0.0))
+        return np.sqrt(np.maximum(xi * xi + qsq - 2.0 * r, 0.0))
     raise ValueError(f"unknown metric {metric!r}; valid: {VALID_METRICS}")
+
+
+def native_distance(sq_eucl: np.ndarray, metric: str, xi: float = 0.0,
+                    qsq_raw: np.ndarray | None = None) -> np.ndarray:
+    """Convert squared Euclidean distances (index space) to ``metric``.
+
+    The inverse of the `euclidean_radius` reduction, vectorized over a flat
+    array.  ``qsq_raw`` is the squared norm of each RAW (un-lifted) query,
+    aligned element-wise with ``sq_eucl`` — required for mips only, whose
+    lifted distance carries ||q||^2 (`lift_mips_data` docstring).
+    """
+    if metric == "euclidean":
+        return np.sqrt(sq_eucl)
+    if metric == "cosine":
+        return sq_eucl / 2.0
+    if metric == "angular":
+        return np.arccos(np.clip(1.0 - sq_eucl / 2.0, -1.0, 1.0))
+    if metric == "mips":
+        if qsq_raw is None:
+            raise ValueError("mips native distances need qsq_raw")
+        # ||p~-q~||^2 = xi^2 + ||q||^2 - 2 p.q  =>  p.q (larger = nearer)
+        return (xi * xi + qsq_raw - sq_eucl) / 2.0
+    raise ValueError(f"unknown metric {metric!r}; valid: {VALID_METRICS}")
+
+
+def native_knn_distances(idx: np.ndarray, sq: np.ndarray, metric: str,
+                         xi: float = 0.0,
+                         q_transformed: np.ndarray | None = None) -> np.ndarray:
+    """Finalize (m, K) kNN squared Euclidean distances to the native metric.
+
+    Shared by `core.knn.query_knn` and `baselines.KDTree.query_knn` so the
+    engine and its cross-check baseline cannot drift apart.  Slots with
+    ``idx < 0`` (a query asked for more neighbors than the database holds)
+    stay +inf.  ``q_transformed`` is the (m, d') TRANSFORMED query block —
+    required for mips, whose native value carries ‖q‖² (the lift's extra
+    coordinate is 0, so ‖q~‖² == ‖q‖²).
+    """
+    valid = idx >= 0
+    dist = np.full(idx.shape, np.inf, np.float64)
+    qsq_raw = None
+    if metric == "mips":
+        qt = _as2d(q_transformed)
+        qsq_raw = np.broadcast_to(
+            np.einsum("ij,ij->i", qt, qt)[:, None], valid.shape)[valid]
+    dist[valid] = native_distance(sq[valid], metric, xi, qsq_raw)
+    return dist
 
 
 def pairwise_sq_dists(x: np.ndarray, q: np.ndarray) -> np.ndarray:

@@ -153,6 +153,10 @@ def query_radius_csr_sharded(
 ) -> _snn.CSRNeighbors:
     """Exact variable-length CSR results with the database sharded over a mesh.
 
+    ``radius`` is a scalar or a per-query (m,) vector in the native metric —
+    identical contract to `snn.query_radius_csr` (the per-shard window prune
+    and both kernel passes are per-query throughout).
+
     Because the sort order is contiguous across shards, shard k's survivors of
     query i occupy the CSR slots starting at ``indptr[i] + sum(counts[:k, i])``
     — so pass 2 runs the compaction kernel once per shard with those offsets,

@@ -67,7 +67,12 @@ class SNNIndex:
         return self.xs.shape[1]
 
     def prepare_queries(self, q: np.ndarray, radius) -> tuple[np.ndarray, np.ndarray]:
-        """Transform+center queries; return (xq (m,d), per-query Euclidean radii)."""
+        """Transform+center queries; return (xq (m,d), per-query Euclidean radii).
+
+        ``radius`` is a scalar (broadcast) or a per-query (m,) vector in the
+        native metric — the canonical representation every query path below
+        this point works in is the per-query vector.
+        """
         tq = _metrics.transform_query(np.asarray(q), self.metric)
         r = _metrics.euclidean_radius(radius, tq, self.metric, self.xi)
         return (tq - self.mu[None, :]).astype(self.xs.dtype), r.astype(np.float64)
@@ -180,7 +185,9 @@ def query_radius_batch(
 
     Queries are sorted by their alpha score and processed in groups; each group
     computes one GEMM over the union of its members' windows.  Returns a list of
-    per-query results in the original query order.
+    per-query results in the original query order.  ``radius`` is a scalar or a
+    per-query (m,) vector in the native metric — the pruning predicate is
+    per-query, so nothing here ever assumes a shared radius.
     """
     xq, r = index.prepare_queries(q, radius)
     m = xq.shape[0]
@@ -247,7 +254,8 @@ def query_radius_fixed(index: SNNIndex, q: np.ndarray, radius, max_neighbors: in
 
     K = max_neighbors; results are the K nearest within the radius (exact as long
     as the true neighbor count <= K; the count output lets callers detect
-    truncation).  This is the API the serving layer and TPU path use.
+    truncation).  ``radius`` is a scalar or per-query (m,) vector in the native
+    metric.  This is the API the serving fallback and TPU top-K path use.
     """
     from ..kernels import ops as _ops
 
@@ -335,18 +343,12 @@ def prepare_query_predicates(index: SNNIndex, q: np.ndarray, radius):
 def _native_distance_csr(index: SNNIndex, sq_eucl: np.ndarray, xq: np.ndarray,
                          counts: np.ndarray) -> np.ndarray:
     """Vectorized `_native_distance` over a flat CSR distance array."""
-    if index.metric == "euclidean":
-        return np.sqrt(sq_eucl)
-    if index.metric == "cosine":
-        return sq_eucl / 2.0
-    if index.metric == "angular":
-        return np.arccos(np.clip(1.0 - sq_eucl / 2.0, -1.0, 1.0))
+    qsq_raw = None
     if index.metric == "mips":
-        # ||p~-q~||^2 = xi^2 + ||q~||^2 - 2 p.q  (index space is centered; undo)
+        # index space is centered (and lifted); undo to recover ||q||^2
         qraw = xq + index.mu[None, :]
-        qraw_sq = np.einsum("ij,ij->i", qraw, qraw)
-        return (index.xi**2 + np.repeat(qraw_sq, counts) - sq_eucl) / 2.0
-    raise AssertionError(index.metric)
+        qsq_raw = np.repeat(np.einsum("ij,ij->i", qraw, qraw), counts)
+    return _metrics.native_distance(sq_eucl, index.metric, index.xi, qsq_raw)
 
 
 def query_radius_csr(
@@ -361,6 +363,13 @@ def query_radius_csr(
     packed: bool = True,
 ) -> CSRNeighbors:
     """Exact device radius query with CSR output (two passes, no (m, n) array).
+
+    ``radius`` is a scalar or a per-query (m,) vector in the native metric:
+    the per-query vector is the engine's canonical representation (the paper's
+    window ``[alpha_q - r_q, alpha_q + r_q]`` never required a shared radius),
+    and a scalar is just the broadcast convenience.  Mixed-radius batches cost
+    exactly one engine dispatch, same as uniform ones — the contract the fused
+    serving path and the kNN front-end (`core.knn`) are built on.
 
     A single-segment front-end over `core.engine`: pass 1 produces per-query
     neighbor counts, the prefix sums turn them into CSR row offsets, and pass

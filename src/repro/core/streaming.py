@@ -323,7 +323,10 @@ class StreamingSNNIndex:
                          packed: bool = True) -> _snn.CSRNeighbors:
         """Exact CSR results over base + deltas via the unified engine.
 
-        Row contents are segment-major (base first, then deltas in append
+        ``radius`` is a scalar or a per-query (m,) vector in the native
+        metric (`snn.query_radius_csr` contract — mixed-radius batches cost
+        one dispatch).  Row contents are segment-major (base first, then
+        deltas in append
         order), ascending in sorted position within each segment.
         ``packed=True`` (default) executes the snapshot's cached
         `SegmentPack` plan — one stacked launch per pass over base + all
@@ -337,6 +340,23 @@ class StreamingSNNIndex:
         return _engine.query_csr(parts[0], segs, q, radius, return_distance,
                                  query_tile=query_tile, use_pallas=use_pallas,
                                  native=native)
+
+    def query_knn(self, q: np.ndarray, k, return_distance: bool = True, *,
+                  native: bool = True, query_tile: int = 128,
+                  use_pallas: bool | None = None,
+                  memory_budget_mb: float | None = None):
+        """Exact k nearest neighbors over base + deltas (`core.knn`).
+
+        Runs the per-query radius-expansion search against this snapshot's
+        cached `SegmentPack` plan — the same plan the radius path executes —
+        so kNN serving shares the index generation's device-resident state.
+        ``k`` is a scalar or per-query (m,) vector.
+        """
+        from . import knn as _knn
+
+        return _knn.query_knn(self, q, k, return_distance, native=native,
+                              query_tile=query_tile, use_pallas=use_pallas,
+                              memory_budget_mb=memory_budget_mb)
 
     def query_radius_batch(self, q: np.ndarray, radius,
                            return_distance: bool = True,

@@ -36,7 +36,13 @@ def pad_database(xs, alphas, half_norms, bn: int = 512, lane: int = 128):
 
 
 def pad_queries(q, aq, r, thresh, tq: int = 128, lane: int = 128):
-    """Pad queries to tq multiple; padding queries get r=-BIG (match nothing)."""
+    """Pad queries to tq multiple; padding queries get r=-BIG (match nothing).
+
+    ``r``/``thresh`` are per-query (m,) vectors — the kernels' canonical
+    radius representation (scalar broadcasting happens upstream, in
+    `core.metrics`); padding rows extend them with the match-nothing
+    sentinel, so mixed-radius batches need no grouping anywhere downstream.
+    """
     q, aq, r, thresh = map(np.asarray, (q, aq, r, thresh))
     m, d = q.shape
     mpad = (-m) % tq if m else tq

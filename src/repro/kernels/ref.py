@@ -1,4 +1,9 @@
-"""Pure-jnp oracles for every Pallas kernel (the correctness references)."""
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Like the kernels, every oracle takes the per-query radius/threshold vectors
+``r``/``thresh`` (one value per query row) — there is no scalar-radius form
+anywhere at this layer.
+"""
 from __future__ import annotations
 
 import functools

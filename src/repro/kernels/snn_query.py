@@ -10,7 +10,14 @@ TPU adaptation of the paper's dynamic-window BLAS GEMV/GEMM:
 * pruned cells skip the MXU matmul entirely (``pl.when``) — this is the
   sorting-based exclusion criterion executed at tile granularity;
 * surviving cells compute ``dhalf = half_norm - X_block @ q`` on the MXU and
-  apply the half-norm radius test  ``dhalf <= (R^2 - q.q)/2``  (paper eq. (4)).
+  apply the half-norm radius test  ``dhalf <= (r_q^2 - q.q)/2``  (paper eq. (4)).
+
+The radius is PER QUERY throughout: every kernel takes an ``r`` tile of one
+radius per query row (and the matching per-query ``thresh``), never a shared
+scalar — the window test ``|alpha - alpha_q| <= r_q`` and the half-norm test
+are both row-local, so a mixed-radius tile costs exactly what a uniform one
+does.  Callers broadcasting one radius do so at the query-prep layer
+(`core.metrics.broadcast_radius`), not here.
 
 Five entry kernels share the body:
   * ``filter`` : emits masked halved sq. distances (m, n), +BIG where pruned;

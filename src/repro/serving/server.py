@@ -1,20 +1,33 @@
-"""Batched radius-query serving (the paper's online/streaming setting, §1.4).
+"""Batched neighbor-search serving (the paper's online/streaming setting, §1.4).
 
 A `SNNServer` owns a `StreamingSNNIndex` and executes requests through the
 unified two-pass CSR engine (`core.engine`) by default: every response is the
 full, untruncated neighbor set, whatever its length.  Setting
 ``cfg.serve_exact = False`` restores the legacy fixed-shape top-K path
-(bounded response size, ``truncated`` flag when counts exceed K).  Requests
-are dynamically batched: the dispatcher collects up to ``serve_batch``
-requests or waits at most ``serve_timeout_ms``, runs one fused query per
-radius group, and scatters the per-request results, signalling each
-requester's `threading.Event`.
+(bounded response size, ``truncated`` flag when counts exceed K).
+
+Two request types share the dispatcher:
+
+* **snn-radius** (``Request(query, radius)``) — the fixed-radius search;
+* **snn-knn** (``Request(query, k=...)``) — exact k nearest neighbors via
+  the per-query radius-expansion front-end (`core.knn`).
+
+Requests are dynamically batched: the dispatcher collects up to
+``serve_batch`` requests or waits at most ``serve_timeout_ms``, then fuses
+EVERY pending request of a type into one engine execution — the per-request
+radii (or k's) are scattered into the fused query block as the engine's
+per-query vectors, and the CSR rows are scattered back per request.  A
+batch of B requests with R distinct radii costs O(1) engine dispatches, not
+O(R): the per-radius-group loop this module used to run is gone, because
+the engine's radius contract is per-query now.
 
 Online updates go through `append`: new points become a sorted LSM delta
 segment on the index's frozen mu/v1 (O(b log b) for a b-point batch — no
 power iteration, no full re-sort, no serving gap) and queries remain exact
 across base + deltas; compactions and the rare full re-index are handled by
 the streaming index's size-ratio triggers (see `core.streaming`).
+`rebuild(new_points)` additionally FORCES a full re-index (fresh mu/v1/xi)
+after absorbing the points.
 """
 from __future__ import annotations
 
@@ -32,12 +45,24 @@ from ..core.streaming import StreamingSNNIndex
 
 @dataclasses.dataclass
 class Request:
+    """One serving request: radius search (``radius``) or kNN (``k``).
+
+    Exactly one of ``radius`` / ``k`` must be set; ``k`` makes it an
+    snn-knn request whose response holds the k nearest neighbors (ascending
+    distance) instead of an eps-ball.
+    """
+
     query: np.ndarray
-    radius: float
+    radius: float | None = None
     id: int = 0
+    k: int | None = None
     # stamped by submit(); a default keeps requests that reach the dispatcher
     # by other routes (tests, replays) from crashing mid-batch
     _t0: float = dataclasses.field(default=0.0, repr=False, compare=False)
+
+    @property
+    def kind(self) -> str:
+        return "snn-knn" if self.k is not None else "snn-radius"
 
 
 @dataclasses.dataclass
@@ -102,12 +127,31 @@ class SNNServer:
         """Stream new points in: an O(b log b) delta append, no serving gap."""
         self.index.append(new_points)
 
-    def rebuild(self, new_points: np.ndarray):
-        """Legacy name: appends now route through the streaming index."""
-        self.append(new_points)
+    def rebuild(self, new_points: np.ndarray | None = None):
+        """Absorb ``new_points`` (if any) and FORCE a full re-index.
+
+        Unlike `append` — which only creates an LSM delta and lets the
+        streaming index's size-ratio triggers decide — this always runs the
+        real rebuild path (fresh mu/v1/xi over everything served so far) and
+        publishes a new index `generation`, invalidating the cached
+        execution plan.  The rebuild happens outside the snapshot lock, so
+        queries keep answering on the previous generation until the publish.
+        """
+        if new_points is not None and np.asarray(new_points).size:
+            before = self.index._n_at_build
+            self.index.append(new_points)
+            if self.index._n_at_build != before:
+                # the append itself tripped a full re-index (rebuild_ratio
+                # growth or a mips-lift overflow) — everything below would
+                # repeat the identical build over the same points
+                return
+        self.index.rebuild()
 
     # ------------------------------------------------------------- client
     def submit(self, req: Request):
+        if (req.radius is None) == (req.k is None):
+            raise ValueError("a Request needs exactly one of radius= "
+                             "(snn-radius) or k= (snn-knn)")
         req._t0 = time.monotonic()
         with self._lock:
             self._events.setdefault(req.id, threading.Event())
@@ -156,24 +200,31 @@ class SNNServer:
     def _run_batch(self, batch: list[Request]):
         index = self.index
         qs = np.stack([r.query for r in batch])
-        # group identical radii into one fused call
-        radii = np.asarray([r.radius for r in batch])
-        for rad in np.unique(radii):
-            sel = np.nonzero(radii == rad)[0]
+        knn_sel = np.asarray([i for i, r in enumerate(batch)
+                              if r.kind == "snn-knn"], np.int64)
+        rad_sel = np.asarray([i for i, r in enumerate(batch)
+                              if r.kind == "snn-radius"], np.int64)
+        if rad_sel.size:
             try:
                 if self.cfg.serve_exact:
                     try:
-                        self._respond_csr(index, batch, qs, sel, float(rad))
-                        continue
+                        self._respond_radius(index, batch, qs, rad_sel)
                     except Exception:
                         # The exact path's flat output is data-dependent (a
-                        # pathologically dense group can exceed the compact
+                        # pathologically dense batch can exceed the compact
                         # kernel's VMEM ceiling); degrade to the K-bounded
-                        # fixed path for this group.
+                        # fixed path — per-query radii there too.
                         traceback.print_exc()
-                self._respond_fixed(index, batch, qs, sel, float(rad))
+                        self._respond_fixed(index, batch, qs, rad_sel)
+                else:
+                    self._respond_fixed(index, batch, qs, rad_sel)
             except Exception:
-                # this group's requests will time out; keep serving the rest
+                # these requests will time out; keep serving the rest
+                traceback.print_exc()
+        if knn_sel.size:
+            try:
+                self._respond_knn(index, batch, qs, knn_sel)
+            except Exception:
                 traceback.print_exc()
 
     def _store(self, resp: Response):
@@ -208,10 +259,14 @@ class SNNServer:
                 del self._events[rid]
                 stale.set()
 
-    def _respond_csr(self, index, batch, qs, sel, rad: float):
-        """Exact path: the cached execution plan, variable-length, untruncated.
+    def _respond_radius(self, index, batch, qs, sel):
+        """Exact path: ONE fused dispatch for the whole batch, mixed radii.
 
-        With ``cfg.serve_packed`` (default) the query executes the streaming
+        Each request's radius lands in the fused query block as one entry of
+        the engine's per-query radius vector — heterogeneous radii cost the
+        same single packed execution a uniform batch does, and each response
+        is bit-identical to querying its request alone.  With
+        ``cfg.serve_packed`` (default) the execution runs the streaming
         snapshot's `SegmentPack` plan — built on the first request of an
         index generation, reused by every request until an append/rebuild
         publishes the next generation (appends extend the plan incrementally
@@ -219,7 +274,8 @@ class SNNServer:
         staging buffers are engine-level scratch reused across requests, so
         steady-state serving allocates only the exact-size responses.
         """
-        csr = index.query_radius_csr(qs[sel], rad,
+        radii = np.asarray([batch[bi].radius for bi in sel], np.float64)
+        csr = index.query_radius_csr(qs[sel], radii,
                                      query_tile=self.cfg.query_tile,
                                      native=False,
                                      packed=self.cfg.serve_packed)
@@ -227,21 +283,48 @@ class SNNServer:
         for j, bi in enumerate(sel):
             r = batch[bi]
             idx, sq = csr.row(j)
-            # copy: row() returns views into the group-wide flat arrays, and a
-            # Response parked in _results must not pin the whole group
+            # copy: row() returns views into the batch-wide flat arrays, and a
+            # Response parked in _results must not pin the whole batch
             self._store(Response(
                 id=r.id, indices=np.array(idx), sq_dists=np.array(sq),
                 truncated=False,
                 latency_ms=(now - r._t0) * 1e3 if r._t0 else 0.0))
 
-    def _respond_fixed(self, index, batch, qs, sel, rad: float):
-        """Legacy fixed-shape path: K-bounded responses with a truncated flag."""
+    def _respond_fixed(self, index, batch, qs, sel):
+        """Legacy fixed-shape path: K-bounded responses with a truncated flag.
+
+        Fused exactly like the exact path — the per-query radius vector
+        flows through `query_radius_fixed` unchanged.
+        """
+        radii = np.asarray([batch[bi].radius for bi in sel], np.float64)
         idx, sq, valid, counts = index.query_radius_fixed(
-            qs[sel], rad, self.cfg.max_neighbors)
+            qs[sel], radii, self.cfg.max_neighbors)
         now = time.monotonic()
         for j, bi in enumerate(sel):
             r = batch[bi]
             self._store(Response(
                 id=r.id, indices=idx[j][valid[j]], sq_dists=sq[j][valid[j]],
                 truncated=bool(counts[j] > self.cfg.max_neighbors),
+                latency_ms=(now - r._t0) * 1e3 if r._t0 else 0.0))
+
+    def _respond_knn(self, index, batch, qs, sel):
+        """snn-knn: one fused per-query-k search (`core.knn`) for the batch.
+
+        Mixed k's fuse the same way mixed radii do — the expansion loop's
+        radius vector is per query, so one engine execution serves them all.
+        Responses carry squared Euclidean index-space distances ascending
+        (the radius paths' ``sq_dists`` convention), trimmed to each
+        request's k.
+        """
+        ks = np.asarray([batch[bi].k for bi in sel], np.int64)
+        idx, sq = index.query_knn(qs[sel], ks, native=False,
+                                  query_tile=self.cfg.query_tile)
+        now = time.monotonic()
+        for j, bi in enumerate(sel):
+            r = batch[bi]
+            found = idx[j, :ks[j]] >= 0
+            self._store(Response(
+                id=r.id, indices=idx[j, :ks[j]][found],
+                sq_dists=sq[j, :ks[j]][found],
+                truncated=False,
                 latency_ms=(now - r._t0) * 1e3 if r._t0 else 0.0))

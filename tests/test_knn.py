@@ -1,0 +1,175 @@
+"""Exact kNN front-end (`core.knn`): sklearn parity, per-query k, edges.
+
+The acceptance bar: `query_knn` must match sklearn's `KDTree.query` EXACTLY
+on indices (and to float tolerance on distances) across all four metrics —
+sklearn only speaks Euclidean, so the non-Euclidean checks run sklearn over
+the same transformed space the index uses (`metrics.transform_data`), where
+kNN is equivalent by monotonicity.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (KDTree, StreamingSNNIndex, build_index, metrics,
+                        query_knn, query_radius_batch)
+
+try:
+    from sklearn import neighbors as sk_neighbors
+except ImportError:  # minimal CI env: the float64 brute reference below
+    sk_neighbors = None
+
+
+def _sklearn_knn(x, q, k, metric):
+    """Reference kNN in the transformed space: sklearn's KDTree when
+    available, else an exhaustive float64 search (equally exact, fully
+    independent of every code path under test)."""
+    xt, _ = metrics.transform_data(x, metric)
+    qt = metrics.transform_query(q, metric)
+    if sk_neighbors is not None:
+        tree = sk_neighbors.KDTree(np.asarray(xt, np.float64))
+        dist, idx = tree.query(np.asarray(qt, np.float64), k=k)
+        return dist, idx
+    diff = np.asarray(qt, np.float64)[:, None, :] \
+        - np.asarray(xt, np.float64)[None, :, :]
+    sq = np.einsum("mnd,mnd->mn", diff, diff)
+    idx = np.argsort(sq, axis=1, kind="stable")[:, :k]
+    return np.sqrt(np.take_along_axis(sq, idx, axis=1)), idx
+
+
+@pytest.mark.parametrize("metric", ["euclidean", "cosine", "angular", "mips"])
+def test_query_knn_matches_sklearn_exactly(metric):
+    rng = np.random.default_rng(3)
+    x = rng.random((2000, 10)).astype(np.float32) + 0.1
+    q = rng.random((64, 10)).astype(np.float32) + 0.1
+    k = 9
+    index = build_index(x, metric=metric)
+    idx, dist = query_knn(index, q, k)
+    skd, ski = _sklearn_knn(x, q, k, metric)
+    np.testing.assert_array_equal(idx, ski)
+    if metric == "euclidean":
+        np.testing.assert_allclose(dist, skd, rtol=1e-6, atol=1e-6)
+    else:
+        # native distances: recompute from the transformed-space sq distances
+        qsq_raw = None
+        if metric == "mips":
+            qt = metrics.transform_query(q, metric)
+            qsq_raw = np.broadcast_to(
+                np.einsum("ij,ij->i", qt, qt)[:, None], skd.shape)
+        want = metrics.native_distance(skd * skd, metric, index.xi, qsq_raw)
+        np.testing.assert_allclose(dist, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,d,k", [(100, 2, 50), (3000, 24, 1), (700, 6, 16)])
+def test_query_knn_shapes_and_order(n, d, k):
+    rng = np.random.default_rng(n)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    q = rng.normal(size=(33, d)).astype(np.float32)
+    idx, dist = query_knn(build_index(x), q, k)
+    skd, ski = _sklearn_knn(x, q, k, "euclidean")
+    np.testing.assert_array_equal(idx, ski)
+    np.testing.assert_allclose(dist, skd, rtol=1e-6, atol=1e-6)
+    assert (np.diff(dist, axis=1) >= 0).all()  # columns ascend
+
+
+def test_query_knn_per_query_k_vector():
+    rng = np.random.default_rng(7)
+    x = rng.random((1500, 8)).astype(np.float32)
+    q = rng.random((40, 8)).astype(np.float32)
+    ks = rng.integers(1, 12, size=40)
+    idx, dist = query_knn(build_index(x), q, ks)
+    assert idx.shape == (40, int(ks.max()))
+    skd, ski = _sklearn_knn(x, q, int(ks.max()), "euclidean")
+    for i in range(40):
+        np.testing.assert_array_equal(idx[i, :ks[i]], ski[i, :ks[i]])
+        assert (idx[i, ks[i]:] == -1).all()
+        assert np.isinf(dist[i, ks[i]:]).all()
+
+
+def test_query_knn_matches_own_kdtree_baseline():
+    """No-sklearn cross-check: `baselines.KDTree.query_knn` shares the
+    output contract (ascending distance, ties by id)."""
+    rng = np.random.default_rng(11)
+    x = rng.random((800, 5)).astype(np.float32)
+    q = rng.random((25, 5)).astype(np.float32)
+    for metric in ("euclidean", "mips"):
+        index = build_index(x, metric=metric)
+        idx, dist = query_knn(index, q, 6)
+        bi, bd = KDTree(x, metric=metric).query_knn(q, 6)
+        np.testing.assert_array_equal(idx, bi)
+        np.testing.assert_allclose(dist, bd, rtol=1e-5, atol=1e-5)
+
+
+def test_query_knn_duplicates_and_self():
+    """Duplicated database points: distances 0 first, then the rest."""
+    rng = np.random.default_rng(5)
+    base = rng.random((50, 4)).astype(np.float32)
+    x = np.concatenate([base, base, base])  # every point triplicated
+    q = base[:8]
+    idx, dist = query_knn(build_index(x), q, 3)
+    np.testing.assert_allclose(dist, 0.0, atol=1e-6)
+    for i in range(8):
+        assert sorted(idx[i].tolist()) == [i, i + 50, i + 100]
+
+
+def test_query_knn_k_exceeds_n_pads():
+    rng = np.random.default_rng(2)
+    x = rng.random((12, 3)).astype(np.float32)
+    q = rng.random((4, 3)).astype(np.float32)
+    idx, dist = query_knn(build_index(x), q, 20)
+    assert idx.shape == (4, 20)
+    assert (idx[:, :12] >= 0).all()
+    assert (idx[:, 12:] == -1).all()
+    assert np.isinf(dist[:, 12:]).all()
+    # the first 12 columns are ALL points, distance-sorted
+    skd, ski = _sklearn_knn(x, q, 12, "euclidean")
+    np.testing.assert_array_equal(idx[:, :12], ski)
+
+
+def test_query_knn_k_zero_and_empty():
+    rng = np.random.default_rng(1)
+    x = rng.random((30, 3)).astype(np.float32)
+    q = rng.random((3, 3)).astype(np.float32)
+    idx = query_knn(build_index(x), q, 0, return_distance=False)
+    assert idx.shape == (3, 0)
+    empty = build_index(np.zeros((0, 3), np.float32))
+    idx, dist = query_knn(empty, q, 5)
+    assert idx.shape == (3, 5) and (idx == -1).all() and np.isinf(dist).all()
+
+
+def test_query_knn_streaming_matches_fresh():
+    """kNN over base + LSM deltas == kNN over a fresh index (same ids)."""
+    rng = np.random.default_rng(13)
+    x = rng.random((900, 7)).astype(np.float32)
+    q = rng.random((20, 7)).astype(np.float32)
+    stream = StreamingSNNIndex(x[:500], block=128, delta_ratio=1.0,
+                               max_deltas=8)
+    stream.append(x[500:700])
+    stream.append(x[700:])
+    assert len(stream.parts) > 1  # the deltas really are live segments
+    idx, dist = stream.query_knn(q, 8)
+    skd, ski = _sklearn_knn(x, q, 8, "euclidean")
+    np.testing.assert_array_equal(idx, ski)
+    np.testing.assert_allclose(dist, skd, rtol=1e-6, atol=1e-6)
+
+
+def test_query_knn_consistent_with_radius_query():
+    """The k-th distance defines a ball whose members are the kNN set."""
+    rng = np.random.default_rng(17)
+    x = rng.random((600, 6)).astype(np.float32)
+    q = rng.random((10, 6)).astype(np.float32)
+    index = build_index(x)
+    idx, dist = query_knn(index, q, 5)
+    # margin: the host path's float32 half-norm distances sit ~1e-7 relative
+    # from the refined float64 ones, so an exact-k radius needs slack
+    res = query_radius_batch(index, q, dist[:, -1] * (1 + 1e-4))
+    for i in range(10):
+        assert set(idx[i].tolist()) <= set(res[i][0].tolist())
+
+
+def test_query_knn_rejects_bad_k():
+    x = np.zeros((5, 2), np.float32)
+    q = np.zeros((3, 2), np.float32)
+    index = build_index(x)
+    with pytest.raises(ValueError):
+        query_knn(index, q, np.array([1, 2]))  # wrong-length vector
+    with pytest.raises(ValueError):
+        query_knn(index, q, -1)

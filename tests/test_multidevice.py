@@ -92,6 +92,36 @@ def test_sharded_csr_matches_host_exact():
     assert res["nnz"] > 0
 
 
+def test_sharded_csr_vector_radius_matches_scalar_calls():
+    """Per-query radius vector over 8 shards: bit-identical per row to the
+    scalar single-query sharded call (the public contract promoted by the
+    per-query radius refactor)."""
+    res = run_sub("""
+    from repro.core import snn, sharded
+    rng = np.random.default_rng(2)
+    x = rng.normal(size=(2048, 8)).astype(np.float32)
+    q = rng.normal(size=(11, 8)).astype(np.float32)
+    radii = rng.uniform(0.5, 3.0, 11)
+    radii[0] = 0.0
+    radii[1] = 50.0   # huge-radius outlier: every shard live for the batch
+    index = snn.build_index(x)
+    mesh = jax.make_mesh((8,), ("data",))
+    pack = sharded.mesh_pack(index, mesh, block=64)
+    csr = sharded.query_radius_csr_sharded(index, mesh, q, radii, block=64,
+                                           query_tile=64, pack=pack)
+    ok = bool(csr.m == 11)
+    for i in range(11):
+        single = sharded.query_radius_csr_sharded(
+            index, mesh, q[i:i + 1], float(radii[i]), block=64,
+            query_tile=64, pack=pack)
+        wi, wd = single.row(0)
+        gi, gd = csr.row(i)
+        ok = ok and gi.tolist() == wi.tolist() and gd.tolist() == wd.tolist()
+    print(json.dumps({"ok": ok, "nnz": int(csr.nnz)}))
+    """)
+    assert res["ok"]
+
+
 def test_dp_training_matches_single_device():
     """Data-parallel sharded train step == single-device step (same math)."""
     res = run_sub("""

@@ -1,0 +1,198 @@
+"""Fused mixed-radius serving + the snn-knn request type + rebuild().
+
+The contract under test (the per-query radius refactor's serving payoff):
+a batch of B requests with R distinct radii executes in O(1) engine
+dispatches — not O(R) — and every response is bit-identical to querying
+that request alone through `query_radius_csr` on the same index.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.snn_default import SNNConfig
+from repro.core import BruteForce2
+from repro.core import engine as _engine
+from repro.serving.server import Request, SNNServer
+
+
+def _mk_server(n=3000, d=8, seed=0, **cfg):
+    rng = np.random.default_rng(seed)
+    data = rng.random((n, d)).astype(np.float32)
+    return SNNServer(data, SNNConfig(**cfg)), data, rng
+
+
+def test_mixed_radius_batch_is_one_dispatch_and_bit_identical():
+    server, data, rng = _mk_server()
+    m = 24
+    qs = rng.random((m, 8)).astype(np.float32)
+    radii = rng.uniform(0.1, 0.8, m)
+    radii[0] = 0.0                      # matches at most exact duplicates
+    radii[1] = 10.0                     # one huge-radius outlier request
+    batch = [Request(query=qs[i], radius=float(radii[i]), id=i)
+             for i in range(m)]
+    assert len(np.unique(radii)) == m   # every radius distinct
+    server.index.plan()                 # prebuild so stats see queries only
+    _engine.DISPATCH_STATS.reset()
+    server._run_batch(batch)            # dispatcher body, synchronous
+    stats = _engine.DISPATCH_STATS.snapshot()
+    # O(1) in the number of distinct radii: one filter evaluation feeds both
+    # passes on the oracle path (the old per-radius-group loop paid >= m)
+    assert stats["kernel_launches"] <= 2, stats
+    for i in range(m):
+        resp = server._results[i]
+        want = server.index.query_radius_csr(
+            qs[i:i + 1], float(radii[i]), native=False)
+        wi, wd = want.row(0)
+        np.testing.assert_array_equal(resp.indices, wi)
+        np.testing.assert_array_equal(resp.sq_dists, wd)
+        assert not resp.truncated
+
+
+def test_mixed_radius_fixed_path_fuses_too():
+    server, data, rng = _mk_server(serve_exact=False, max_neighbors=64)
+    qs = rng.random((10, 8)).astype(np.float32)
+    radii = rng.uniform(0.1, 0.5, 10)
+    batch = [Request(query=qs[i], radius=float(radii[i]), id=i)
+             for i in range(10)]
+    server._run_batch(batch)
+    bf = BruteForce2(data)
+    want = bf.query_radius(qs, radii)   # per-query radius vector baseline
+    for i in range(10):
+        resp = server._results[i]
+        if not resp.truncated:
+            assert set(resp.indices.tolist()) == set(want[i].tolist()), i
+
+
+def test_mixed_radius_live_with_concurrent_appends():
+    """Heterogeneous radii under the real dispatcher while points stream in.
+
+    Appends publish atomic snapshots, so every response must equal the
+    brute-force answer over SOME prefix of the appended stream."""
+    server, data, rng = _mk_server(n=1200, d=6, serve_batch=8,
+                                   serve_timeout_ms=2.0)
+    n_req, n_app = 60, 5
+    qs = rng.random((n_req, 6)).astype(np.float32)
+    radii = rng.uniform(0.1, 0.7, n_req)
+    appends = [rng.random((100, 6)).astype(np.float32) for _ in range(n_app)]
+    prefixes = [data]
+    for a in appends:
+        prefixes.append(np.concatenate([prefixes[-1], a]))
+    server.start()
+    try:
+        stop = threading.Event()
+
+        def appender():
+            for a in appends:
+                server.append(a)
+                time.sleep(0.002)
+            stop.set()
+
+        t = threading.Thread(target=appender)
+        t.start()
+        for i in range(n_req):
+            server.submit(Request(query=qs[i], radius=float(radii[i]), id=i))
+        responses = [server.result(i) for i in range(n_req)]
+        t.join()
+    finally:
+        server.stop()
+    wants = [
+        [set(ids.tolist())
+         for ids in BruteForce2(p).query_radius(qs, radii)]
+        for p in prefixes
+    ]
+    for i, resp in enumerate(responses):
+        got = set(resp.indices.tolist())
+        assert any(got == w[i] for w in wants), i
+
+
+def test_knn_requests_fuse_and_match_exact():
+    server, data, rng = _mk_server()
+    qs = rng.random((12, 8)).astype(np.float32)
+    ks = rng.integers(1, 9, size=12)
+    batch = [Request(query=qs[i], k=int(ks[i]), id=i) for i in range(12)]
+    server.index.plan()
+    _engine.DISPATCH_STATS.reset()
+    server._run_batch(batch)
+    stats = _engine.DISPATCH_STATS.snapshot()
+    # seed + a few expansion rounds + final pass — but NOT per request
+    assert stats["kernel_launches"] <= 6, stats
+    from repro.core import query_knn
+    idx, sq = query_knn(server.index.base, qs, int(ks.max()), native=False)
+    for i in range(12):
+        resp = server._results[i]
+        np.testing.assert_array_equal(resp.indices, idx[i, :ks[i]])
+        np.testing.assert_allclose(resp.sq_dists, sq[i, :ks[i]],
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_knn_request_type_end_to_end():
+    server, data, rng = _mk_server(n=800, d=5, serve_batch=16)
+    qs = rng.random((20, 5)).astype(np.float32)
+    server.start()
+    try:
+        for i in range(20):
+            server.submit(Request(query=qs[i], k=4, id=i))
+        # brute-force kNN reference
+        diffs = data[None, :, :] - qs[:, None, :]
+        sq = np.einsum("mnd,mnd->mn", diffs.astype(np.float64), diffs)
+        want = np.argsort(sq, axis=1, kind="stable")[:, :4]
+        for i in range(20):
+            resp = server.result(i)
+            np.testing.assert_array_equal(resp.indices, want[i])
+            assert not resp.truncated
+    finally:
+        server.stop()
+
+
+def test_submit_rejects_ambiguous_requests():
+    server, _, _ = _mk_server(n=50, d=3)
+    with pytest.raises(ValueError):
+        server.submit(Request(query=np.zeros(3, np.float32), id=0))
+    with pytest.raises(ValueError):
+        server.submit(Request(query=np.zeros(3, np.float32), radius=0.5,
+                              k=3, id=1))
+
+
+def test_rebuild_forces_full_reindex_and_bumps_generation():
+    """Regression: `rebuild` used to alias `append` and never re-index."""
+    server, data, rng = _mk_server(n=400, d=4)
+    # a plain append leaves the delta as its own segment (no re-index)
+    server.append(rng.random((20, 4)).astype(np.float32))
+    assert len(server.index.parts) == 2
+    g0 = server.generation
+    mu0 = server.index.base.mu.copy()
+    new = rng.random((30, 4)).astype(np.float32) + 0.5  # shifts the mean
+    server.rebuild(new)
+    assert server.generation > g0
+    assert len(server.index.parts) == 1          # deltas folded into a base
+    assert server.index._n_at_build == 450       # built over EVERYTHING
+    assert not np.array_equal(server.index.base.mu, mu0)  # fresh mu/v1
+    # results include the new points
+    q = new[0]
+    ids, _ = server.query_batch(q[None], 1e-5)[0]
+    assert 420 in ids.tolist()
+    # rebuild with no points still forces a fresh build
+    g1 = server.generation
+    server.rebuild()
+    assert server.generation > g1
+    assert len(server.index.parts) == 1
+
+
+def test_rebuild_does_not_build_twice_when_append_triggers_it(monkeypatch):
+    """A batch big enough to trip rebuild_ratio re-indexes ONCE, not twice."""
+    from repro.core import snn as _snn
+
+    rng = np.random.default_rng(3)
+    data = rng.random((100, 4)).astype(np.float32)
+    server = SNNServer(data, SNNConfig(rebuild_ratio=2.0))
+    calls = {"build": 0}
+    real_build = _snn.build_index
+    monkeypatch.setattr(_snn, "build_index", lambda *a, **kw: (
+        calls.__setitem__("build", calls["build"] + 1) or real_build(*a, **kw)))
+    # 400 appended points >= rebuild_ratio * 100: append itself re-indexes
+    server.rebuild(rng.random((400, 4)).astype(np.float32))
+    assert calls["build"] == 1
+    assert server.index._n_at_build == 500
+    assert len(server.index.parts) == 1

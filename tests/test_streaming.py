@@ -317,8 +317,13 @@ def test_server_append_streams_new_points_without_reindex(monkeypatch):
     assert calls["build"] == 0             # delta append, no re-index
     after, _ = server.query_batch(q[None], 1e-3)[0]
     assert 800 in after.tolist()
-    # legacy name still routes through the streaming path
+    # rebuild is the explicit full re-index: absorbs the points AND builds
+    # (it used to alias append and never re-index — the regression this
+    # guards, with the generation checks in tests/test_serving_fused.py)
+    gen = server.generation
     server.rebuild(q[None] + 2e-4)
-    assert calls["build"] == 0
+    assert calls["build"] == 1
+    assert server.generation > gen
+    assert len(server.index.parts) == 1    # the delta was folded in
     again, _ = server.query_batch(q[None], 1e-3)[0]
     assert 801 in again.tolist()
