@@ -28,9 +28,128 @@ from repro.core import (build_index, query_radius_batch, query_radius_csr,
                         query_radius_fixed)
 from repro.data.pipeline import make_uniform
 
-from .common import row, subsample_queries, timeit
+from .common import peak_gemm_gflops, row, subsample_queries, timeit
 
 OUT_JSON = "BENCH_csr_engine.json"
+
+
+def make_clustered(n: int, d: int = 16, d_intrinsic: int = 3,
+                   n_centers: int = 1024, std: float = 0.02,
+                   seed: int = 0) -> np.ndarray:
+    """Clustered data of low intrinsic dimension embedded in d dims.
+
+    Gaussian blobs living on a random ``d_intrinsic``-dim subspace, plus tiny
+    full-dimensional jitter — the regime the multi-component box prune is
+    built for (the top principal directions capture almost all variance, so
+    per-component projection intervals are tight).
+    """
+    rng = np.random.default_rng(seed)
+    basis, _ = np.linalg.qr(rng.normal(size=(d, d_intrinsic)))
+    centers = rng.normal(size=(n_centers, d_intrinsic))
+    which = rng.integers(0, n_centers, n)
+    lowd = centers[which] + std * rng.normal(size=(n, d_intrinsic))
+    x = lowd @ basis.T + 1e-3 * rng.normal(size=(n, d))
+    return x.astype(np.float32)
+
+
+def count_pass_cell(n: int, record: list, *, d: int = 16, m: int = 256,
+                    query_tile: int = 128, peak_gflops: float | None = None):
+    """Count-pass timing/survivor accounting: dense vs box-pruned vs bf16.
+
+    One cell of the PR-6 headline claim — on clustered low-intrinsic-dim
+    data the k-dim box bound culls most of the comp-0 window before any
+    distance work, so pass 1 (`engine.run_counts_packed`) gets faster while
+    staying bit-identical.  Queries are alpha-sorted first so each query
+    tile's candidate union stays compact (the pruned executor works per
+    tile).  Also reports survivors under the old (window-only) and new
+    (window + box) bounds, and the achieved fraction of the calibrated GEMM
+    roofline for each variant.
+    """
+    import jax.numpy as jnp
+
+    from repro.core import engine as _engine
+    from repro.core import snn as _snn
+    from repro.kernels import ops as _ops
+    from repro.kernels import ref as _ref
+
+    x = make_clustered(n, d=d)
+    q = subsample_queries(x, m, seed=2) + np.float32(1e-3)
+    index = build_index(x)
+    pack = _engine.pack_from_index(index)
+    # radius sized to the cluster scale: a few dozen true neighbors/query
+    radius = 0.10
+    xq, aq, r32, th32, _ = _snn.prepare_query_predicates(index, q, radius)
+    qord = np.argsort(aq, kind="stable")  # alpha-sorted query tiles
+    xq, aq, r32, th32 = xq[qord], aq[qord], r32[qord], th32[qord]
+    qp, aqp, rp, thp, m_ = _ops.pad_queries(xq, aq, r32, th32, tq=query_tile)
+    pq = _snn.query_extra_projections(index, xq)
+    pqp = _ops.pad_components(pq, qp.shape[0])
+
+    kw = dict(query_tile=query_tile, use_pallas=None)
+    variants = {
+        "dense": dict(),
+        "pruned": dict(pq=pqp),
+        "pruned_mixed": dict(pq=pqp, mixed=True),
+    }
+    counts0 = None
+    times_us, fractions = {}, {}
+    peak = peak_gemm_gflops() if peak_gflops is None else peak_gflops
+    for name, extra in variants.items():
+        c = np.asarray(_engine.run_counts_packed(pack, qp, aqp, rp, thp, m_,
+                                                 **kw, **extra))
+        if counts0 is None:
+            counts0 = c
+        else:
+            assert np.array_equal(c, counts0), f"{name} counts diverged"
+        t = timeit(_engine.run_counts_packed, pack, qp, aqp, rp, thp, m_,
+                   repeat=3, **kw, **extra)
+        times_us[name] = t * 1e6
+        # useful flops: the half-norm filter is one (m, n) @ (n, d) GEMM
+        fractions[name] = 2.0 * m_ * n * d / t / 1e9 / peak
+
+    # survivor accounting under the old and new bounds (float64 host replay
+    # of the device expressions; `ref.norm_scales` is the device slack)
+    al64 = np.asarray(index.alphas, np.float64)
+    aq64, r64 = aq.astype(np.float64), r32.astype(np.float64)
+    window = np.abs(al64[None, :] - aq64[:, None]) <= r64[:, None]
+    box = window.copy()
+    xn, qn = _ref.norm_scales(
+        jnp.asarray(r32), jnp.asarray(th32),
+        jnp.asarray(index.half_norms.astype(np.float32)))
+    xn64, qn64 = np.asarray(xn, np.float64), np.asarray(qn, np.float64)
+    lim = (r64[:, None] + _ref.BOX_EPS
+           * (xn64[None, :] + qn64[:, None] + np.abs(r64)[:, None]))
+    pj64 = np.asarray(index.projs, np.float64)[1:]
+    pq64 = pq.astype(np.float64)
+    for c in range(pq64.shape[0]):
+        box &= np.abs(pj64[c][None, :] - pq64[c][:, None]) <= lim
+    surv_window, surv_box = int(window.sum()), int(box.sum())
+
+    cell = {
+        "n": n, "d": d, "m": int(m_), "radius": radius,
+        "data": "clustered-low-intrinsic-dim",
+        "total_neighbors": int(counts0.sum()),
+        "count_pass_us": times_us,
+        "count_speedup": times_us["dense"] / times_us["pruned"],
+        "count_speedup_mixed": times_us["dense"] / times_us["pruned_mixed"],
+        "survivors_window": surv_window,
+        "survivors_box": surv_box,
+        "survivor_reduction": surv_window / max(surv_box, 1),
+        "roofline": {"peak_gemm_gflops": peak,
+                     "fraction_of_roofline": fractions},
+    }
+    tag = f"n{n}/d{d}/m{m_}"
+    for name in variants:
+        record.append(row(
+            f"csr_engine/count_{name}/{tag}", times_us[name] / 1e6,
+            f"survivors={surv_box if name != 'dense' else surv_window}"
+            f"|roofline_frac={fractions[name]:.4f}"))
+    record.append(row(
+        f"csr_engine/count_speedup/{tag}", times_us["pruned"] / 1e6,
+        f"speedup={cell['count_speedup']:.2f}x"
+        f"|mixed={cell['count_speedup_mixed']:.2f}x"
+        f"|survivor_reduction={cell['survivor_reduction']:.1f}x"))
+    return cell
 
 
 def _one_cell(x, m, radius, record):
@@ -76,14 +195,24 @@ def run(full: bool = False, out_json: str = OUT_JSON):
         for m in ms:
             for radius in radii:
                 cells.append(_one_cell(x, m, radius, rows))
+    # PR-6 count-pass study: box prune + bf16 margin filter on clustered
+    # low-intrinsic-dim data, n through the >= 100k regime even in the
+    # scaled suite (the prune's payoff grows with n; the cell is cheap
+    # because pruning is the point)
+    peak = peak_gemm_gflops()
+    count_ns = [32768, 131072] if not full else [32768, 131072, 524288]
+    count_cells = [count_pass_cell(n, rows, peak_gflops=peak)
+                   for n in count_ns]
     import jax
 
     payload = {
         "benchmark": "csr_engine",
         "backend": jax.default_backend(),
         "full": full,
-        "grid": {"d": d, "ns": ns, "ms": ms, "radii": radii},
+        "grid": {"d": d, "ns": ns, "ms": ms, "radii": radii,
+                 "count_ns": count_ns},
         "cells": cells,
+        "count_pass_cells": count_cells,
     }
     with open(out_json, "w") as f:
         json.dump(payload, f, indent=2)

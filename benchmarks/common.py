@@ -61,3 +61,22 @@ def subsample_queries(x: np.ndarray, m: int, seed: int = 0) -> np.ndarray:
         return x
     idx = np.random.default_rng(seed).choice(x.shape[0], m, replace=False)
     return x[idx]
+
+
+def peak_gemm_gflops(size: int = 1024, repeat: int = 3) -> float:
+    """Calibrated float32 GEMM peak (GFLOP/s) on this machine's backend.
+
+    A dense (size x size) @ (size x size) matmul through the same jax
+    backend the engine dispatches to — the roofline every count-pass
+    fraction in the trajectory is measured against.  A measured peak (not a
+    spec-sheet number) keeps the fractions comparable across the CPU CI
+    runners and real accelerators.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    a = jnp.asarray(np.random.default_rng(0).random((size, size), np.float32))
+    f = jax.jit(lambda u, v: u @ v)
+    f(a, a).block_until_ready()  # compile + warm
+    t = timeit(lambda: f(a, a).block_until_ready(), repeat=repeat)
+    return 2.0 * size ** 3 / t / 1e9

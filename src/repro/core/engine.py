@@ -153,6 +153,15 @@ class Segment:
       alpha_lo/alpha_hi: range of the *real* alphas — the segment-level
         window prune (lo > hi for an all-sentinel segment: always skipped).
       block:    row-block size the arrays were padded to (the kernel ``bn``).
+      projs:    optional (ke, n_pad) EXTRA projection components (+BIG in
+        padding/sentinel columns) for the k-dim box prune; None keeps every
+        path bit-identical to the pre-multi-component engine.
+      proj_lo/proj_hi: (ke,) float64 real ranges per component — the
+        segment-level box prune.
+      proj_sorted/proj_rank: (ke, n_pad) host-side per-component sorted
+        values (float64) and the matching local positions — the packed
+        oracle's interval-to-columns gather.
+      xnorm_max: max real row norm (float64) — sizes the host-side box slack.
     """
 
     xs: jnp.ndarray
@@ -162,26 +171,76 @@ class Segment:
     alpha_lo: float
     alpha_hi: float
     block: int
+    projs: jnp.ndarray | None = None
+    proj_lo: np.ndarray | None = None
+    proj_hi: np.ndarray | None = None
+    proj_sorted: np.ndarray | None = None
+    proj_rank: np.ndarray | None = None
+    xnorm_max: float = 0.0
 
     @property
     def n(self) -> int:
         return self.ids.shape[0]
 
+    @property
+    def ke(self) -> int:
+        """Number of extra projection components carried (0 = none)."""
+        return 0 if self.projs is None else int(self.projs.shape[0])
 
-def make_segment(xs, alphas, half_norms, ids, *, block: int = 512) -> Segment:
-    """Pad one sorted run for the kernels and record its real alpha range."""
+
+def make_segment(xs, alphas, half_norms, ids, *, block: int = 512,
+                 projs=None) -> Segment:
+    """Pad one sorted run for the kernels and record its real alpha range.
+
+    ``projs`` is the optional (ke, n) block of EXTRA projection components
+    (`SNNIndex.projs[1:]` — component 0 is the alpha window itself).  Columns
+    are padded with +BIG so no finite box interval can ever select a padding
+    or sentinel row.
+    """
     alphas = np.asarray(alphas)
     xs_p, al_p, hn_p, _, _ = _ops.pad_database(xs, alphas, half_norms, bn=block)
-    real = alphas[alphas < _REAL]
+    realm = alphas < _REAL
+    real = alphas[realm]
     lo = float(real[0]) if real.size else float("inf")
     hi = float(real[-1]) if real.size else float("-inf")
-    return Segment(xs_p, al_p, hn_p, np.asarray(ids, np.int64), lo, hi, block)
+    pj = plo = phi = ps = pr = None
+    xnorm_max = 0.0
+    if projs is not None:
+        big = np.float32(_ops.BIG)
+        pj_np = np.asarray(projs, np.float32)
+        # sentinel rows inside n (pre-padded shard slices) get +BIG as well
+        pj_np = np.where(realm[None, :], pj_np, big)
+        n_pad = int(al_p.shape[0])
+        pj_full = np.concatenate(
+            [pj_np, np.full((pj_np.shape[0], n_pad - pj_np.shape[1]), big,
+                            np.float32)], axis=1)
+        pj = jnp.asarray(pj_full)
+        if realm.any():
+            p64 = pj_np[:, realm].astype(np.float64)
+            plo, phi = p64.min(axis=1), p64.max(axis=1)
+            hn_real = np.asarray(half_norms, np.float64)[realm]
+            xnorm_max = float(np.sqrt(max(2.0 * float(hn_real.max()), 0.0)))
+        else:
+            plo = np.full(pj_np.shape[0], np.inf)
+            phi = np.full(pj_np.shape[0], -np.inf)
+        ps = np.sort(pj_full.astype(np.float64), axis=1)
+        pr = np.argsort(pj_full, axis=1, kind="stable").astype(np.int64)
+    return Segment(xs_p, al_p, hn_p, np.asarray(ids, np.int64), lo, hi, block,
+                   pj, plo, phi, ps, pr, xnorm_max)
+
+
+def _index_extra_projs(index) -> np.ndarray | None:
+    """The (ke, n) EXTRA projection rows of an index, or None (single-PC)."""
+    pj = getattr(index, "projs", None)
+    if pj is None or pj.shape[0] <= 1:
+        return None
+    return np.asarray(pj)[1:]
 
 
 def segment_from_index(index, *, block: int = 512) -> Segment:
     """The whole of one `SNNIndex` (or index-shaped object) as a segment."""
     return make_segment(index.xs, index.alphas, index.half_norms, index.order,
-                        block=block)
+                        block=block, projs=_index_extra_projs(index))
 
 
 def segments_from_index(
@@ -209,25 +268,69 @@ def segments_from_index(
     n = index.n
     ids = index.order if ids is None else np.asarray(ids, np.int64)
     rs = max(int(rows_per_segment), 1)
+    ep = _index_extra_projs(index)
     return [make_segment(index.xs[s:s + rs], index.alphas[s:s + rs],
                          index.half_norms[s:s + rs], ids[s:s + rs],
-                         block=block)
+                         block=block,
+                         projs=None if ep is None else ep[:, s:s + rs])
             for s in range(0, n, rs)]
 
 
-def _window_may_hit(seg: Segment, aq: np.ndarray, r: np.ndarray) -> bool:
+def _qnorm64(rp, thp, m: int) -> np.ndarray:
+    """(m,) float64 centered query norms recovered from the predicate pair.
+
+    The kernels derive ``qn = sqrt(max(r^2 - 2*thresh, 0))`` in float32 for
+    the box slack (`kernels.ref.norm_scales`); the host prune needs the same
+    quantity.  Computed through the identical float32 expression first so the
+    float64 value can only be >= what any float32 evaluation rounds to (after
+    the 1e-6 relative inflation in `_box_interval_radius`).
+    """
+    r32 = np.asarray(rp, np.float32)[:m]
+    t32 = np.asarray(thp, np.float32)[:m]
+    with np.errstate(over="ignore", invalid="ignore"):
+        qn = np.sqrt(np.maximum(r32 * r32 - np.float32(2.0) * t32,
+                                np.float32(0.0)))
+    return qn.astype(np.float64)
+
+
+def _box_interval_radius(r64, qn64, xnorm_max) -> np.ndarray:
+    """Float64 SUPERSET of the kernels' per-candidate box slack.
+
+    The device test keeps ``|p_c - pq_c| <= r + BOX_EPS*(xn + qn + |r|)``
+    with per-COLUMN ``xn``; substituting the segment-wide ``xnorm_max >= xn``
+    and inflating by 1e-6 relative (+1e-30 absolute, so r=0 still gets slack)
+    dominates every float32 rounding of the device expression.  Broadcasts
+    over whatever shapes ``r64``/``qn64``/``xnorm_max`` arrive in.
+    """
+    return (r64 + _ref.BOX_EPS * (xnorm_max + qn64 + np.abs(r64))) \
+        * (1.0 + 1e-6) + 1e-30
+
+
+def _window_may_hit(seg: Segment, aq: np.ndarray, r: np.ndarray,
+                    pq: np.ndarray | None = None,
+                    qn: np.ndarray | None = None) -> bool:
     """Conservative host-side test: can ANY query window touch this segment?
 
     The kernels evaluate ``|alpha - aq| <= r`` in float32; a few-ULP slack on
     the float64 host comparison guarantees skipping never drops a pair the
-    kernel would keep.
+    kernel would keep.  With ``pq`` ((kq, m) float64 extra query projections)
+    and ``qn`` (`_qnorm64`), the test tightens to the k-dim box: a segment
+    survives only if some query's box interval overlaps the segment's real
+    range on EVERY component.
     """
     if seg.alpha_lo > seg.alpha_hi or aq.size == 0:
         return False
     slack = 1e-6 * (np.abs(aq) + np.abs(r)
                     + max(abs(seg.alpha_lo), abs(seg.alpha_hi)) + 1.0)
-    return bool(np.any((aq + r + slack >= seg.alpha_lo)
-                       & (aq - r - slack <= seg.alpha_hi)))
+    hit = ((aq + r + slack >= seg.alpha_lo)
+           & (aq - r - slack <= seg.alpha_hi))
+    if pq is not None and seg.ke:
+        kq = min(pq.shape[0], seg.ke)
+        R = _box_interval_radius(r, qn, seg.xnorm_max)
+        for c in range(kq):
+            hit &= ((pq[c] + R >= seg.proj_lo[c])
+                    & (pq[c] - R <= seg.proj_hi[c]))
+    return bool(np.any(hit))
 
 
 def run_csr(
@@ -238,6 +341,8 @@ def run_csr(
     query_tile: int = 128,
     use_pallas: bool | None = None,
     memory_budget_mb: float | None = None,
+    pq=None,
+    mixed: bool = False,
 ):
     """The two-pass LOOPED orchestration over padded queries and segments.
 
@@ -255,6 +360,17 @@ def run_csr(
         pass 2 (bit-identical by construction — same compiled function on
         the same inputs), trading one extra evaluation for bounded peak
         memory.  Each cached filter is released right after its scatter.
+      pq: optional (kq, m_pad) padded extra query projections
+        (`kernels.ops.pad_components`).  Effective components are
+        ``min(kq, min segment ke)``; 0 reproduces the pre-box engine
+        bit-for-bit.  The box only removes pairs the distance predicate
+        would reject anyway, so results are unchanged — only cheaper.
+      mixed: run pass-1 counts through the certified bf16 margin filter on
+        the Pallas path.  The certificate makes mixed counts EQUAL to the
+        f32 counts, so pass 2 (always f32) still fills every slot — the
+        ``>= 0`` check at the end enforces the certificate at runtime.  The
+        oracle path reuses one f32 filter for both passes regardless (its
+        counts are the same numbers by the same certificate).
 
     Returns ``(indptr (m+1,) int64, counts (m,) int64, flat_ids (nnz,) int64,
     flat_dh (nnz,) float32)`` where ``flat_ids`` are original row ids in
@@ -266,6 +382,20 @@ def run_csr(
     r64 = np.asarray(rp, np.float64)[:m]
     budget = (float("inf") if memory_budget_mb is None
               else memory_budget_mb * 2**20)
+    kq = 0
+    if pq is not None and segments:
+        kq = min([s.ke for s in segments] + [int(np.asarray(pq).shape[0])])
+    pq_j = pq64 = qn64 = None
+    if kq:
+        pq_np = np.asarray(pq, np.float32)[:kq]
+        pq_j = jnp.asarray(pq_np)
+        pq64 = pq_np[:, :m].astype(np.float64)
+        qn64 = _qnorm64(rp, thp, m)
+
+    def _px(seg):
+        if not kq:
+            return None
+        return seg.projs if seg.ke == kq else seg.projs[:kq]
 
     # ---- pass 1: per-segment counts --------------------------------------
     per = np.zeros((len(segments), m), np.int64)
@@ -273,7 +403,7 @@ def run_csr(
     cached_bytes = 0
     live: list[int] = []
     for k, seg in enumerate(segments):
-        if not _window_may_hit(seg, aq64, r64):
+        if not _window_may_hit(seg, aq64, r64, pq64, qn64):
             continue
         live.append(k)
         if use_pallas:
@@ -281,7 +411,8 @@ def run_csr(
             DISPATCH_STATS.host_transfers += 1
             per[k] = np.asarray(_ops.snn_count(
                 qp, aqp, rp, thp, seg.xs, seg.alphas, seg.half_norms,
-                tq=query_tile, bn=seg.block, use_pallas=True))[:m]
+                pq_j, _px(seg), tq=query_tile, bn=seg.block,
+                use_pallas=True, mixed=mixed))[:m]
         else:
             # Oracle fast path: one dense filter feeds BOTH passes (counts
             # and scatter); np.nonzero's row-major order IS the CSR order.
@@ -289,7 +420,7 @@ def run_csr(
             DISPATCH_STATS.host_transfers += 1
             dh = np.asarray(_ops.snn_filter(
                 qp, aqp, rp, thp, seg.xs, seg.alphas, seg.half_norms,
-                use_pallas=False))[:m]
+                pq_j, _px(seg), use_pallas=False))[:m]
             if cached_bytes + dh.nbytes <= budget:
                 cached[k] = dh
                 cached_bytes += dh.nbytes
@@ -320,7 +451,8 @@ def run_csr(
             DISPATCH_STATS.host_transfers += 2
             fi, fd = _ops.snn_compact(
                 qp, aqp, rp, thp, off_k, seg.xs, seg.alphas, seg.half_norms,
-                nnz=cap, tq=query_tile, bn=seg.block, use_pallas=True)
+                pq_j, _px(seg), nnz=cap, tq=query_tile, bn=seg.block,
+                use_pallas=True)
             fi = np.asarray(fi)
             written = fi >= 0
             flat_ids[written] = seg.ids[fi[written]]
@@ -332,7 +464,7 @@ def run_csr(
                 DISPATCH_STATS.host_transfers += 1
                 dh = np.asarray(_ops.snn_filter(
                     qp, aqp, rp, thp, seg.xs, seg.alphas, seg.half_norms,
-                    use_pallas=False))[:m]
+                    pq_j, _px(seg), use_pallas=False))[:m]
             keep = dh < _ops.BIG
             rows, cols = np.nonzero(keep)
             within = (np.cumsum(keep, axis=1) - 1)[rows, cols]
@@ -381,6 +513,12 @@ class SegmentPack:
       block: the kernel row-block size every segment was padded to.
       epoch: build generation — owners bump it when the plan is rebuilt or
         extended so caches (serving, graph chunks) can validate reuse.
+      ke: extra projection components shared by EVERY segment (the min over
+        segments; 0 when any segment lacks them — the box prune only runs
+        on components all segments can answer for).
+      proj_lo / proj_hi: (S, ke) float64 per-segment real component ranges;
+        xnorm_max: (S,) float64 per-segment max row norms — the vectorized
+        box prune's inputs (None when ``ke == 0``).
     """
 
     segments: list[Segment]
@@ -388,10 +526,20 @@ class SegmentPack:
     alpha_hi: np.ndarray
     block: int
     epoch: int = 0
+    ke: int = 0
+    proj_lo: np.ndarray | None = None
+    proj_hi: np.ndarray | None = None
+    xnorm_max: np.ndarray | None = None
     _stacked: tuple | None = dataclasses.field(
         default=None, repr=False, compare=False)
     _concat: tuple | None = dataclasses.field(
         default=None, repr=False, compare=False)
+    _stacked_px: jnp.ndarray | None = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _concat_px: jnp.ndarray | None = dataclasses.field(
+        default=None, repr=False, compare=False)
+    _pruned: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     @property
     def n_segments(self) -> int:
@@ -417,7 +565,15 @@ class SegmentPack:
             block = 0
         lo = np.asarray([s.alpha_lo for s in segments], np.float64)
         hi = np.asarray([s.alpha_hi for s in segments], np.float64)
-        return cls(segments, lo, hi, block, epoch)
+        ke = min((s.ke for s in segments), default=0)
+        plo = phi = xnm = None
+        if ke:
+            plo = np.stack([np.asarray(s.proj_lo[:ke], np.float64)
+                            for s in segments])
+            phi = np.stack([np.asarray(s.proj_hi[:ke], np.float64)
+                            for s in segments])
+            xnm = np.asarray([s.xnorm_max for s in segments], np.float64)
+        return cls(segments, lo, hi, block, epoch, ke, plo, phi, xnm)
 
     def stacked(self):
         """(xs (S, n_pad, d), alphas (S, n_pad), half_norms (S, n_pad),
@@ -475,6 +631,38 @@ class SegmentPack:
             self._concat = (xs, al, hn, ids, starts)
         return self._concat
 
+    def stacked_projs(self) -> jnp.ndarray | None:
+        """(S, ke, n_pad) extra projections stacked to match `stacked()`
+        (+BIG in the uniform padding), or None when ``ke == 0``."""
+        if not self.ke:
+            return None
+        if self._stacked_px is None:
+            n_pad = self.n_pad
+            big = np.float32(_ops.BIG)
+            if len(self.segments) == 1:
+                self._stacked_px = self.segments[0].projs[:self.ke][None]
+            else:
+                self._stacked_px = jnp.stack(
+                    [jnp.pad(s.projs[:self.ke],
+                             ((0, 0), (0, n_pad - s.projs.shape[1])),
+                             constant_values=big)
+                     for s in self.segments])
+        return self._stacked_px
+
+    def concat_projs(self) -> jnp.ndarray | None:
+        """(ke, sum n_pad_k) extra projections concatenated to match
+        `concat()`'s row order, or None when ``ke == 0``."""
+        if not self.ke:
+            return None
+        if self._concat_px is None:
+            segs = self.segments
+            if len(segs) == 1:
+                self._concat_px = segs[0].projs[:self.ke]
+            else:
+                self._concat_px = jnp.concatenate(
+                    [s.projs[:self.ke] for s in segs], axis=1)
+        return self._concat_px
+
     def extend(self, new_segments: list[Segment]) -> "SegmentPack":
         """A NEW plan with ``new_segments`` appended (incremental epoch).
 
@@ -516,12 +704,16 @@ class SegmentPack:
                                             constant_values=-1)]))
         return out
 
-    def live_mask(self, aq: np.ndarray, r: np.ndarray) -> np.ndarray:
+    def live_mask(self, aq: np.ndarray, r: np.ndarray,
+                  pq: np.ndarray | None = None,
+                  qn: np.ndarray | None = None) -> np.ndarray:
         """Vectorized `_window_may_hit` over every segment at once.
 
         One (S, m) float64 broadcast replaces the per-segment Python loop;
         decision-identical to the scalar test (same formula, same float64
         arithmetic), so packed and looped engines prune the same segments.
+        ``pq``/``qn`` (see `_window_may_hit`) tighten the test to the k-dim
+        box when the pack carries extra components.
         """
         S = self.n_segments
         if S == 0 or aq.size == 0:
@@ -533,6 +725,13 @@ class SegmentPack:
                         + amax[:, None] + 1.0)
         hit = ((aq[None, :] + r[None, :] + slack >= self.alpha_lo[:, None])
                & (aq[None, :] - r[None, :] - slack <= self.alpha_hi[:, None]))
+        if pq is not None and self.ke:
+            kq = min(int(pq.shape[0]), self.ke)
+            R = _box_interval_radius(r[None, :], qn[None, :],
+                                     self.xnorm_max[:, None])  # (S, m)
+            for c in range(kq):
+                hit &= ((pq[c][None, :] + R >= self.proj_lo[:, c:c + 1])
+                        & (pq[c][None, :] - R <= self.proj_hi[:, c:c + 1]))
         return hit.any(axis=1) & nonempty
 
 
@@ -542,8 +741,9 @@ def pack_from_index(index, *, block: int = 512, epoch: int = 0) -> SegmentPack:
                              epoch=epoch)
 
 
-def _live_idx(pack: SegmentPack, aqp, rp, m: int,
-              first_seg: int = 0) -> np.ndarray:
+def _live_idx(pack: SegmentPack, aqp, rp, m: int, first_seg: int = 0,
+              pq64: np.ndarray | None = None,
+              qn64: np.ndarray | None = None) -> np.ndarray:
     """The shared packed-executor prologue: which segments are live?
 
     `run_csr_packed` and `run_counts_packed` MUST agree on this decision
@@ -553,35 +753,276 @@ def _live_idx(pack: SegmentPack, aqp, rp, m: int,
     """
     aq64 = np.asarray(aqp, np.float64)[:m]
     r64 = np.asarray(rp, np.float64)[:m]
-    mask = pack.live_mask(aq64, r64)
+    mask = pack.live_mask(aq64, r64, pq64, qn64)
     if first_seg:
         mask[:first_seg] = False
     return np.nonzero(mask)[0]
 
 
-def _gather_live_concat(pack: SegmentPack, live_idx: np.ndarray):
-    """(xs, alphas, half_norms, ids, sizes) of the live segments' rows from
-    the pack's ragged concat rep (zero-copy when every segment is live)."""
+def _gather_live_concat(pack: SegmentPack, live_idx: np.ndarray,
+                        with_px: bool = False):
+    """(xs, alphas, half_norms, ids, sizes[, projs]) of the live segments'
+    rows from the pack's ragged concat rep (zero-copy when every segment is
+    live).  ``with_px`` appends the matching (ke, rows) projection slice
+    (None when the pack has no extra components)."""
     xs_c, al_c, hn_c, ids_c, starts_c = pack.concat()
+    px_c = pack.concat_projs() if with_px else None
     if live_idx.size == pack.n_segments:
-        return xs_c, al_c, hn_c, ids_c, np.diff(starts_c)
+        out = (xs_c, al_c, hn_c, ids_c, np.diff(starts_c))
+        return out + (px_c,) if with_px else out
     # one device gather of the live segments' row ranges
     sizes = np.diff(starts_c)[live_idx]
     rows_sel = np.concatenate(
         [np.arange(starts_c[k], starts_c[k + 1]) for k in live_idx])
     sel = jnp.asarray(rows_sel)
-    return xs_c[sel], al_c[sel], hn_c[sel], ids_c[rows_sel], sizes
+    out = (xs_c[sel], al_c[sel], hn_c[sel], ids_c[rows_sel], sizes)
+    if with_px:
+        return out + (None if px_c is None else px_c[:, sel],)
+    return out
 
 
-def _gather_live_stacked(pack: SegmentPack, live_idx: np.ndarray):
-    """(xs, alphas, half_norms, ids) of the live slabs from the pack's
-    stacked rep (zero-copy when every segment is live)."""
+def _gather_live_stacked(pack: SegmentPack, live_idx: np.ndarray,
+                         with_px: bool = False):
+    """(xs, alphas, half_norms, ids[, projs]) of the live slabs from the
+    pack's stacked rep (zero-copy when every segment is live)."""
     xs, al, hn, ids = pack.stacked()
+    px = pack.stacked_projs() if with_px else None
     if live_idx.size < pack.n_segments:
         sel = jnp.asarray(live_idx)
         xs, al, hn = xs[sel], al[sel], hn[sel]
         ids = ids[live_idx]
-    return xs, al, hn, ids
+        if px is not None:
+            px = px[sel]
+    return (xs, al, hn, ids, px) if with_px else (xs, al, hn, ids)
+
+
+def _tile_candidates(pack: SegmentPack, live_idx: np.ndarray,
+                     starts_l: np.ndarray, al_np: np.ndarray,
+                     t0: int, tm: int, aq64, r64, pq64, qn64) -> np.ndarray:
+    """Concat-row candidate columns for the query tile ``[t0, t0 + tm)``.
+
+    The host mirror of the kernels' conjunctive box test: per live segment,
+    a diff-array union of the tile's per-query float64 intervals over the
+    segment's sorted alphas (component 0), intersected with the rank-space
+    interval unions of every extra component via ``proj_sorted``/
+    ``proj_rank``.  Every interval is a SUPERSET of the float32 device
+    predicate (`_box_interval_radius`; component 0 needs only the relative
+    inflation — a correctly-rounded subtract has bounded relative error), so
+    the returned columns cover every pair either pass could keep.  Ascending
+    order (segments in pack order, local positions ascending) keeps the
+    downstream scatter in CSR order.
+    """
+    aq_t = aq64[t0:t0 + tm]
+    r_t = r64[t0:t0 + tm]
+    R0_t = r_t * (1.0 + 1e-6) + 1e-30
+    qn_t = qn64[t0:t0 + tm]
+    kq = pq64.shape[0]
+    out = []
+    for j, k in enumerate(live_idx):
+        seg = pack.segments[k]
+        if seg.alpha_lo > seg.alpha_hi:
+            continue
+        Rb_t = _box_interval_radius(r_t, qn_t, seg.xnorm_max)
+        sel = (aq_t + R0_t >= seg.alpha_lo) & (aq_t - R0_t <= seg.alpha_hi)
+        for c in range(kq):
+            sel &= ((pq64[c, t0:t0 + tm] + Rb_t >= seg.proj_lo[c])
+                    & (pq64[c, t0:t0 + tm] - Rb_t <= seg.proj_hi[c]))
+        if not sel.any():
+            continue
+        s0, s1 = int(starts_l[j]), int(starts_l[j + 1])
+        n_loc = s1 - s0
+        al_loc = al_np[s0:s1]
+        # component 0: intervals directly on the sorted alphas.  Empty
+        # intervals (kNN's r = -1 "done" rows) mark hi before lo and the
+        # running sum never goes positive — naturally excluded.
+        lo_i = np.searchsorted(al_loc, aq_t[sel] - R0_t[sel], side="left")
+        hi_i = np.searchsorted(al_loc, aq_t[sel] + R0_t[sel], side="right")
+        mark = np.zeros(n_loc + 1, np.int64)
+        np.add.at(mark, lo_i, 1)
+        np.add.at(mark, hi_i, -1)
+        inmask = np.cumsum(mark[:n_loc]) > 0
+        for c in range(kq):
+            psc, prc = seg.proj_sorted[c], seg.proj_rank[c]
+            pqc = pq64[c, t0:t0 + tm][sel]
+            lo_i = np.searchsorted(psc, pqc - Rb_t[sel], side="left")
+            hi_i = np.searchsorted(psc, pqc + Rb_t[sel], side="right")
+            markc = np.zeros(n_loc + 1, np.int64)
+            np.add.at(markc, lo_i, 1)
+            np.add.at(markc, hi_i, -1)
+            in_c = np.zeros(n_loc, bool)
+            in_c[prc[np.cumsum(markc[:n_loc]) > 0]] = True
+            inmask &= in_c
+        cand_local = np.flatnonzero(inmask)
+        if cand_local.size:
+            out.append(s0 + cand_local)
+    if not out:
+        return np.zeros(0, np.int64)
+    return np.concatenate(out)
+
+
+def _pruned_setup(pack: SegmentPack, live_idx: np.ndarray, kq: int):
+    """Shared prologue of the candidate-pruned packed oracle paths.
+
+    Appends ONE +BIG sentinel row to the live concat arrays: power-of-two
+    candidate padding points every unused slot at it, and no predicate can
+    ever keep it.  The sentinel-extended device arrays depend only on the
+    pack, the live-segment set and ``kq``, so they are memoized on the pack
+    (an execution *plan*): repeated batches — the kNN expansion loop, graph
+    chunks, serving — pay the O(N) concat once, not per launch."""
+    key = (live_idx.tobytes(), kq)
+    hit = pack._pruned.get(key)
+    if hit is not None:
+        return hit
+    xs_c, al_c, hn_c, ids, sizes, px_c = _gather_live_concat(
+        pack, live_idx, with_px=True)
+    starts_l = np.zeros(live_idx.size + 1, np.int64)
+    np.cumsum(sizes, out=starts_l[1:])
+    al_np = np.asarray(al_c)
+    big = np.float32(_ops.BIG)
+    # host copies: the candidate gathers below run in numpy (XLA's CPU
+    # gather is serial and pathological for this access pattern; fancy
+    # indexing is the fast spelling) and only the gathered submatrix is
+    # shipped to the jitted filter
+    xs_s = np.concatenate([np.asarray(xs_c),
+                           np.zeros((1, xs_c.shape[1]), np.float32)])
+    al_s = np.concatenate([al_np, np.full(1, big, np.float32)])
+    hn_s = np.concatenate([np.asarray(hn_c), np.full(1, big, np.float32)])
+    px_s = np.concatenate([np.asarray(px_c[:kq]),
+                           np.full((kq, 1), big, np.float32)], axis=1)
+    out = (xs_s, al_s, hn_s, px_s, ids, starts_l, al_np)
+    if len(pack._pruned) >= 8:  # live sets vary per batch; bound the memos
+        pack._pruned.clear()
+    pack._pruned[key] = out
+    return out
+
+
+# Candidate-generation tile: the pruned oracle paths form PER-TILE interval
+# UNIONS across the tile's queries, so a wide tile (128 alpha-sorted queries
+# spanning many clusters) inflates every union toward the whole database.
+# Narrow tiles keep the unions near the per-query boxes; the jitted filter
+# cost is per-element, so more (smaller) launches cost only dispatch.
+_PRUNED_TILE = 16
+
+
+def _run_csr_packed_pruned(pack, qp, aqp, rp, thp, m, live_idx, *,
+                           query_tile, pq_np, pq64, qn64, kq, mixed):
+    """Packed-oracle CSR with host candidate pruning (the kq > 0 path).
+
+    Instead of one dense (m_pad, N) filter, each query tile evaluates the
+    SAME jitted filter on only the columns its k-dim box intervals can
+    reach (`_tile_candidates`).  The d-length contraction per element is
+    shape-independent, so every kept pair carries the identical float32
+    dhalf as the dense path — output stays bit-identical while the work
+    drops to the survivors of the box.  With ``mixed``, pass-1 counts come
+    from the certified bf16 margin filter on the same submatrix; the
+    certificate makes them equal to the f32 counts, which the scatter
+    verifies at runtime.
+    """
+    aq64 = np.asarray(aqp, np.float64)
+    r64 = np.asarray(rp, np.float64)
+    pq_j = jnp.asarray(pq_np)
+    xs_s, al_s, hn_s, px_s, ids, starts_l, al_np = _pruned_setup(
+        pack, live_idx, kq)
+    L = int(live_idx.size)
+    sent = int(al_np.shape[0])  # index of the appended sentinel row
+    m_pad = int(qp.shape[0])
+    counts_pad = np.zeros(m_pad, np.int64)
+    ptile = min(query_tile, _PRUNED_TILE)
+    rows_l, cols_l, dh_l = [], [], []
+    for t0 in range(0, m, ptile):
+        tm = min(ptile, m - t0)
+        cand = _tile_candidates(pack, live_idx, starts_l, al_np, t0, tm,
+                                aq64, r64, pq64, qn64)
+        if cand.size == 0:
+            continue
+        cap_c = _ops.csr_capacity(cand.size)
+        cand_p = np.full(cap_c, sent, np.int64)
+        cand_p[:cand.size] = cand
+        t1 = t0 + ptile
+        q_t, aq_t, r_t, th_t = qp[t0:t1], aqp[t0:t1], rp[t0:t1], thp[t0:t1]
+        sub = (jnp.asarray(xs_s[cand_p]), jnp.asarray(al_s[cand_p]),
+               jnp.asarray(hn_s[cand_p]))
+        pq_t, px_t = pq_j[:, t0:t1], jnp.asarray(px_s[:, cand_p])
+        DISPATCH_STATS.kernel_launches += 1
+        DISPATCH_STATS.host_transfers += 1
+        dh_t = np.asarray(_ops.snn_filter(q_t, aq_t, r_t, th_t, *sub,
+                                          pq_t, px_t, use_pallas=False))[:tm]
+        keep_t = dh_t < _ops.BIG
+        if mixed:
+            DISPATCH_STATS.kernel_launches += 1
+            DISPATCH_STATS.host_transfers += 1
+            cnt_t = np.asarray(_ops.snn_count(
+                q_t, aq_t, r_t, th_t, *sub, pq_t, px_t,
+                use_pallas=False, mixed=True))[:tm]
+        else:
+            cnt_t = keep_t.sum(axis=1)
+        counts_pad[t0:t0 + tm] = cnt_t
+        tr, tc = np.nonzero(keep_t)
+        rows_l.append(t0 + tr.astype(np.int64))
+        cols_l.append(cand_p[tc])
+        dh_l.append(dh_t[tr, tc])
+
+    counts = counts_pad[:m]
+    indptr = np.zeros(m + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    total = int(indptr[-1])
+    rows = np.concatenate(rows_l) if rows_l else np.zeros(0, np.int64)
+    if total == 0 and rows.size == 0:
+        return indptr, counts, np.zeros(0, np.int64), np.zeros(0, np.float32)
+    if rows.size != total:  # a broken mixed certificate fails loudly
+        raise RuntimeError("CSR pass-1/pass-2 disagreement (packed)")
+    cols = np.concatenate(cols_l)
+    dh_vals = np.concatenate(dh_l)
+    seg_of = np.searchsorted(starts_l, cols, side="right") - 1
+    gk = rows * np.int64(L) + seg_of
+    per = np.bincount(gk, minlength=m_pad * L).reshape(m_pad, L).T
+    seg_base = np.cumsum(per, axis=0) - per
+    gstart = np.flatnonzero(np.r_[True, gk[1:] != gk[:-1]])
+    within = np.arange(gk.size, dtype=np.int64) \
+        - np.repeat(gstart, np.diff(np.r_[gstart, gk.size]))
+    slots = indptr[rows] + seg_base[seg_of, rows] + within
+    flat_ids, flat_dh, owned = _SCRATCH.take(total + 1)
+    flat_ids[slots] = ids[cols]
+    flat_dh[slots] = dh_vals
+    if not (flat_ids[:total] >= 0).all():
+        raise RuntimeError("CSR pass-1/pass-2 disagreement (packed)")
+    if owned:
+        return indptr, counts, flat_ids[:total], flat_dh[:total]
+    return indptr, counts, flat_ids[:total].copy(), flat_dh[:total].copy()
+
+
+def _run_counts_packed_pruned(pack, qp, aqp, rp, thp, m, live_idx, *,
+                              query_tile, pq_np, pq64, qn64, kq, mixed):
+    """Pass 1 only, candidate-pruned: the counts twin of
+    `_run_csr_packed_pruned` (same tiles, same gathered submatrices, same
+    count expressions — the counts-parity contract)."""
+    aq64 = np.asarray(aqp, np.float64)
+    r64 = np.asarray(rp, np.float64)
+    pq_j = jnp.asarray(pq_np)
+    xs_s, al_s, hn_s, px_s, _, starts_l, al_np = _pruned_setup(
+        pack, live_idx, kq)
+    sent = int(al_np.shape[0])
+    counts = np.zeros(m, np.int64)
+    ptile = min(query_tile, _PRUNED_TILE)
+    for t0 in range(0, m, ptile):
+        tm = min(ptile, m - t0)
+        cand = _tile_candidates(pack, live_idx, starts_l, al_np, t0, tm,
+                                aq64, r64, pq64, qn64)
+        if cand.size == 0:
+            continue
+        cap_c = _ops.csr_capacity(cand.size)
+        cand_p = np.full(cap_c, sent, np.int64)
+        cand_p[:cand.size] = cand
+        t1 = t0 + ptile
+        DISPATCH_STATS.kernel_launches += 1
+        DISPATCH_STATS.host_transfers += 1
+        counts[t0:t0 + tm] = np.asarray(_ops.snn_count(
+            qp[t0:t1], aqp[t0:t1], rp[t0:t1], thp[t0:t1],
+            jnp.asarray(xs_s[cand_p]), jnp.asarray(al_s[cand_p]),
+            jnp.asarray(hn_s[cand_p]),
+            pq_j[:, t0:t1], jnp.asarray(px_s[:, cand_p]),
+            use_pallas=False, mixed=mixed))[:tm]
+    return counts
 
 
 def run_csr_packed(
@@ -593,6 +1034,8 @@ def run_csr_packed(
     use_pallas: bool | None = None,
     first_seg: int = 0,
     memory_budget_mb: float | None = None,
+    pq=None,
+    mixed: bool = False,
 ):
     """Execute a `SegmentPack` plan: the two passes as single launches.
 
@@ -624,10 +1067,23 @@ def run_csr_packed(
 
     Flat totals are int32 on the Pallas path (~2^31 pair ceiling); use the
     looped engine for result sets beyond that.
+
+    ``pq`` ((kq, m_pad) padded extra query projections) and ``mixed`` are
+    the packed twins of `run_csr`'s: the prune tightens to the k-dim box
+    and — on the oracle path — the dense filter is replaced by per-tile
+    candidate gathers (`_run_csr_packed_pruned`), with identical output.
     """
     if use_pallas is None:
         use_pallas = _ops.on_tpu()
-    live_idx = _live_idx(pack, aqp, rp, m, first_seg)
+    kq = 0
+    if pq is not None and pack.ke:
+        kq = min(pack.ke, int(np.asarray(pq).shape[0]))
+    pq_np = pq64 = qn64 = None
+    if kq:
+        pq_np = np.asarray(pq, np.float32)[:kq]
+        pq64 = pq_np[:, :m].astype(np.float64)
+        qn64 = _qnorm64(rp, thp, m)
+    live_idx = _live_idx(pack, aqp, rp, m, first_seg, pq64, qn64)
     indptr0 = np.zeros(m + 1, np.int64)
     if live_idx.size == 0:
         return (indptr0, np.zeros(m, np.int64), np.zeros(0, np.int64),
@@ -636,7 +1092,24 @@ def run_csr_packed(
 
     if use_pallas:
         return _execute_stacked(pack, qp, aqp, rp, thp, m, live_idx,
-                                query_tile=query_tile)
+                                query_tile=query_tile,
+                                pq=None if not kq else jnp.asarray(pq_np),
+                                mixed=mixed)
+    if kq:
+        if memory_budget_mb is not None:
+            rows_all = int(sum(pack.segments[k].xs.shape[0]
+                               for k in live_idx))
+            # conservative: the pruned path's largest possible tile gather
+            if query_tile * (rows_all + 1) * 4 > memory_budget_mb * 2**20:
+                return run_csr([pack.segments[k] for k in live_idx],
+                               qp, aqp, rp, thp, m, query_tile=query_tile,
+                               use_pallas=False,
+                               memory_budget_mb=memory_budget_mb,
+                               pq=jnp.asarray(pq_np), mixed=mixed)
+        return _run_csr_packed_pruned(pack, qp, aqp, rp, thp, m, live_idx,
+                                      query_tile=query_tile, pq_np=pq_np,
+                                      pq64=pq64, qn64=qn64, kq=kq,
+                                      mixed=mixed)
     xs_c, al_c, hn_c, ids, sizes = _gather_live_concat(pack, live_idx)
     n_live_rows = int(sizes.sum())
     if memory_budget_mb is not None \
@@ -697,6 +1170,8 @@ def run_counts_packed(
     query_tile: int = 128,
     use_pallas: bool | None = None,
     memory_budget_mb: float | None = None,
+    pq=None,
+    mixed: bool = False,
 ) -> np.ndarray:
     """Pass 1 ONLY: per-query survivor counts (m,) int64 over a plan.
 
@@ -706,23 +1181,46 @@ def run_counts_packed(
     compaction until every radius has converged).  Evaluates the identical
     predicate pipeline as `run_csr_packed`'s pass 1 on the same inputs: a
     per-query radius vector whose counts satisfy a caller here yields the
-    exact same counts inside the final count→compact execution.
+    exact same counts inside the final count→compact execution.  That
+    contract extends to ``pq``/``mixed``: the same tiles, gathers and count
+    expressions run here as in pass 1 there.
     """
     if use_pallas is None:
         use_pallas = _ops.on_tpu()
-    live_idx = _live_idx(pack, aqp, rp, m)
+    kq = 0
+    if pq is not None and pack.ke:
+        kq = min(pack.ke, int(np.asarray(pq).shape[0]))
+    pq_np = pq64 = qn64 = None
+    if kq:
+        pq_np = np.asarray(pq, np.float32)[:kq]
+        pq64 = pq_np[:, :m].astype(np.float64)
+        qn64 = _qnorm64(rp, thp, m)
+    live_idx = _live_idx(pack, aqp, rp, m, 0, pq64, qn64)
     if live_idx.size == 0:
         return np.zeros(m, np.int64)
 
     if use_pallas:
-        xs, al, hn, _ = _gather_live_stacked(pack, live_idx)
+        xs, al, hn, _, px = _gather_live_stacked(pack, live_idx,
+                                                 with_px=True)
+        pq_j = None
+        if kq:
+            pq_j = jnp.asarray(pq_np)
+            if px.shape[1] != kq:
+                px = px[:, :kq]
+        else:
+            px = None
         DISPATCH_STATS.kernel_launches += 1
-        per = _ops.snn_count_stacked(qp, aqp, rp, thp, xs, al, hn,
+        per = _ops.snn_count_stacked(qp, aqp, rp, thp, xs, al, hn, pq_j, px,
                                      tq=query_tile, bn=pack.block,
-                                     use_pallas=True)
+                                     use_pallas=True, mixed=mixed)
         DISPATCH_STATS.host_transfers += 1
         return np.asarray(per).sum(axis=0)[:m].astype(np.int64)
 
+    if kq:
+        return _run_counts_packed_pruned(pack, qp, aqp, rp, thp, m, live_idx,
+                                         query_tile=query_tile, pq_np=pq_np,
+                                         pq64=pq64, qn64=qn64, kq=kq,
+                                         mixed=mixed)
     xs_c, al_c, hn_c, _, sizes = _gather_live_concat(pack, live_idx)
     n_live_rows = int(sizes.sum())
     if memory_budget_mb is not None \
@@ -735,26 +1233,41 @@ def run_counts_packed(
             DISPATCH_STATS.host_transfers += 1
             counts += np.asarray(_ops.snn_count(
                 qp, aqp, rp, thp, seg.xs, seg.alphas, seg.half_norms,
-                tq=query_tile, bn=seg.block, use_pallas=False))[:m]
+                tq=query_tile, bn=seg.block, use_pallas=False,
+                mixed=mixed))[:m]
         return counts
     DISPATCH_STATS.kernel_launches += 1
     DISPATCH_STATS.host_transfers += 1
+    if mixed:
+        return np.asarray(_ops.snn_count(
+            qp, aqp, rp, thp, xs_c, al_c, hn_c,
+            use_pallas=False, mixed=True))[:m].astype(np.int64)
     dh = np.asarray(_ops.snn_filter(qp, aqp, rp, thp, xs_c, al_c, hn_c,
                                     use_pallas=False))[:m]
     return (dh < _ops.BIG).sum(axis=1).astype(np.int64)
 
 
 def _execute_stacked(pack: SegmentPack, qp, aqp, rp, thp, m: int,
-                     live_idx: np.ndarray, *, query_tile: int):
+                     live_idx: np.ndarray, *, query_tile: int,
+                     pq=None, mixed: bool = False):
     """The Pallas executor of `run_csr_packed`: stacked-grid kernels with
-    on-device prefix sums (see `run_csr_packed` docstring)."""
-    xs, al, hn, ids = _gather_live_stacked(pack, live_idx)
+    on-device prefix sums (see `run_csr_packed` docstring).  ``pq`` arrives
+    already sliced to the effective component count; the matching stacked
+    projections are gathered here.  ``mixed`` applies to pass 1 only —
+    pass 2 always verifies in f32."""
+    xs, al, hn, ids, px = _gather_live_stacked(pack, live_idx, with_px=True)
+    kq = 0 if pq is None else int(pq.shape[0])
+    if kq:
+        if px.shape[1] != kq:
+            px = px[:, :kq]
+    else:
+        px = None
 
     # ---- pass 1: ONE stacked count launch --------------------------------
     DISPATCH_STATS.kernel_launches += 1
-    per = _ops.snn_count_stacked(qp, aqp, rp, thp, xs, al, hn,
+    per = _ops.snn_count_stacked(qp, aqp, rp, thp, xs, al, hn, pq, px,
                                  tq=query_tile, bn=pack.block,
-                                 use_pallas=True)
+                                 use_pallas=True, mixed=mixed)
 
     # ---- device prefix sums + the one pass-boundary sync -----------------
     DISPATCH_STATS.kernel_launches += 1
@@ -771,7 +1284,7 @@ def _execute_stacked(pack: SegmentPack, qp, aqp, rp, thp, m: int,
     cap = _ops.csr_capacity(total)
     DISPATCH_STATS.kernel_launches += 1
     fi, fd = _ops.snn_compact_stacked(
-        qp, aqp, rp, thp, offsets_dev, xs, al, hn,
+        qp, aqp, rp, thp, offsets_dev, xs, al, hn, pq, px,
         nnz=cap, tq=query_tile, bn=pack.block, use_pallas=True)
     DISPATCH_STATS.host_transfers += 2
     fi = np.asarray(fi)[:total]
@@ -792,22 +1305,29 @@ def query_csr(
     query_tile: int = 128,
     use_pallas: bool | None = None,
     native: bool = True,
+    mixed: bool = False,
 ):
     """Full CSR query over ``segments``: predicates from ``index`` (the owner
     of mu/v1/metric/xi), then `run_csr`, then distance finalization.
 
     ``radius`` is a scalar or a per-query (m,) vector in the native metric
     (`snn.prepare_queries`).  This is the single entry every front-end
-    (single-device, sharded, streaming, serving) routes through.
+    (single-device, sharded, streaming, serving) routes through.  Extra
+    query projections (the k-dim box prune) are derived from ``index`` when
+    it carries a multi-component basis; ``mixed`` opts pass 1 into the
+    certified bf16 margin filter.  Both leave results bit-identical.
     """
     from . import snn as _snn  # deferred: snn imports this module lazily too
 
     xq, aq, r, th, qsq = _snn.prepare_query_predicates(index, q, radius)
     m = xq.shape[0]
     qp, aqp, rp, thp, _ = _ops.pad_queries(xq, aq, r, th, tq=query_tile)
+    pq = _snn.query_extra_projections(index, xq)
+    pqp = None if pq is None else _ops.pad_components(pq, qp.shape[0])
     indptr, counts, ids, dh = run_csr(segments, qp, aqp, rp, thp, m,
                                       query_tile=query_tile,
-                                      use_pallas=use_pallas)
+                                      use_pallas=use_pallas,
+                                      pq=pqp, mixed=mixed)
     return _snn.csr_finalize(index, indptr, ids, dh, xq, qsq, counts,
                              return_distance, native)
 
@@ -823,6 +1343,7 @@ def query_csr_packed(
     use_pallas: bool | None = None,
     native: bool = True,
     memory_budget_mb: float | None = None,
+    mixed: bool = False,
 ):
     """`query_csr` executed through a prebuilt `SegmentPack` plan.
 
@@ -830,15 +1351,19 @@ def query_csr_packed(
     mu/v1/metric/xi), then `run_csr_packed`, then distance finalization.
     Front-ends that own a long-lived index (streaming snapshots, serving
     generations, graph builds) build the pack once per epoch and route every
-    query batch through here.
+    query batch through here.  ``mixed`` and the index-derived box
+    projections behave as in `query_csr`.
     """
     from . import snn as _snn  # deferred: snn imports this module lazily too
 
     xq, aq, r, th, qsq = _snn.prepare_query_predicates(index, q, radius)
     m = xq.shape[0]
     qp, aqp, rp, thp, _ = _ops.pad_queries(xq, aq, r, th, tq=query_tile)
+    pq = _snn.query_extra_projections(index, xq)
+    pqp = None if pq is None else _ops.pad_components(pq, qp.shape[0])
     indptr, counts, ids, dh = run_csr_packed(
         pack, qp, aqp, rp, thp, m, query_tile=query_tile,
-        use_pallas=use_pallas, memory_budget_mb=memory_budget_mb)
+        use_pallas=use_pallas, memory_budget_mb=memory_budget_mb,
+        pq=pqp, mixed=mixed)
     return _snn.csr_finalize(index, indptr, ids, dh, xq, qsq, counts,
                              return_distance, native)

@@ -163,7 +163,8 @@ def _mirror_merge(indptr, cols, dists, chunk: int):
 # --------------------------------------------------------------------------- #
 def _self_join(index, segments, xq, aq, r, th, *, query_chunk: int,
                segs_per_chunk: int, query_tile: int, use_pallas,
-               packed: bool = True, memory_budget_mb=None):
+               packed: bool = True, memory_budget_mb=None,
+               mixed: bool = False):
     """Run sorted query chunks through the engine over ``segments``.
 
     ``packed=True`` (default) builds ONE `engine.SegmentPack` plan for the
@@ -187,27 +188,43 @@ def _self_join(index, segments, xq, aq, r, th, *, query_chunk: int,
     ids_parts: list[np.ndarray] = []
     dh_parts: list[np.ndarray] = []
     pack = _engine.SegmentPack.build(segments) if packed else None
+    # the queries ARE the database, so the extra projections come for free
+    # from the index's own basis — computed once for the whole join
+    pq_full = _snn.query_extra_projections(index, xq)
+    pq64_full = (None if pq_full is None
+                 else np.asarray(pq_full, np.float64))
     for c0 in range(0, m, query_chunk):
         c1 = min(c0 + query_chunk, m)
         k0 = (c0 // query_chunk) * segs_per_chunk if segs_per_chunk else 0
         qp, aqp, rp, thp, _ = _ops.pad_queries(
             xq[c0:c1], aq[c0:c1], r[c0:c1], th[c0:c1], tq=query_tile)
+        pqp = (None if pq_full is None
+               else _ops.pad_components(pq_full[:, c0:c1], qp.shape[0]))
         if packed:
             # the vectorized interval-overlap prune inside the packed
             # executor plays the role of the per-segment window loop
             _, cnt, ids, dh = _engine.run_csr_packed(
                 pack, qp, aqp, rp, thp, c1 - c0,
                 query_tile=query_tile, use_pallas=use_pallas,
-                first_seg=k0, memory_budget_mb=memory_budget_mb)
+                first_seg=k0, memory_budget_mb=memory_budget_mb,
+                pq=pqp, mixed=mixed)
         else:
             # the schedule: alpha-adjacent queries span a narrow window, so
             # most segments fail this interval test and never launch
-            live = [s for s in segments[k0:]
-                    if _engine._window_may_hit(s, aq64[c0:c1], r64[c0:c1])]
+            if pq64_full is None:
+                live = [s for s in segments[k0:]
+                        if _engine._window_may_hit(s, aq64[c0:c1],
+                                                   r64[c0:c1])]
+            else:
+                qn64 = _engine._qnorm64(rp, thp, c1 - c0)
+                live = [s for s in segments[k0:]
+                        if _engine._window_may_hit(
+                            s, aq64[c0:c1], r64[c0:c1],
+                            pq64_full[:, c0:c1], qn64)]
             _, cnt, ids, dh = _engine.run_csr(
                 live, qp, aqp, rp, thp, c1 - c0,
                 query_tile=query_tile, use_pallas=use_pallas,
-                memory_budget_mb=memory_budget_mb)
+                memory_budget_mb=memory_budget_mb, pq=pqp, mixed=mixed)
         counts[c0:c1] = cnt
         ids_parts.append(ids)
         dh_parts.append(dh)
@@ -248,14 +265,15 @@ def _resolve_chunk(n: int, query_chunk: int | None, memory_budget_mb,
 def _graph_from_join(index, segments, x_sorted, eps, *, symmetric: bool,
                      query_chunk: int, segs_per_chunk: int, query_tile: int,
                      use_pallas, return_distance: bool, native: bool,
-                     packed: bool = True, memory_budget_mb=None):
+                     packed: bool = True, memory_budget_mb=None,
+                     mixed: bool = False):
     """Shared tail of both public builders: join, finalize, mirror, unsort."""
     xq, aq, r, th, qsq = _snn.prepare_query_predicates(index, x_sorted, eps)
     counts, flat_ids, flat_dh = _self_join(
         index, segments, xq, aq, r, th, query_chunk=query_chunk,
         segs_per_chunk=segs_per_chunk if symmetric else 0,
         query_tile=query_tile, use_pallas=use_pallas, packed=packed,
-        memory_budget_mb=memory_budget_mb)
+        memory_budget_mb=memory_budget_mb, mixed=mixed)
     indptr = _indptr_from_counts(counts)
     fin = _snn.csr_finalize(index, indptr, flat_ids, flat_dh, xq, qsq, counts,
                             return_distance, native)
@@ -287,6 +305,7 @@ def build_neighbor_graph(
     native: bool = True,
     n_iter: int = 64,
     packed: bool = True,
+    mixed: bool = False,
 ) -> _snn.CSRNeighbors:
     """Exact (n, n) eps-neighbor self-join of ``x`` as one `CSRNeighbors`.
 
@@ -315,6 +334,8 @@ def build_neighbor_graph(
       packed: build one `engine.SegmentPack` plan for the whole join and
         execute every chunk through it (default); False keeps the looped
         per-segment cross-check path.  Bit-identical either way.
+      mixed: run the engine's count pass through the certified bf16 margin
+        filter (`run_csr_packed`); results stay bit-identical.
 
     Returns:
       `CSRNeighbors` with ``distances`` populated iff ``return_distance``.
@@ -357,7 +378,7 @@ def build_neighbor_graph(
         index, segments, x[index.order], eps, symmetric=symmetric,
         query_chunk=cs, segs_per_chunk=cs // sr, query_tile=query_tile,
         use_pallas=use_pallas, return_distance=return_distance, native=native,
-        packed=packed, memory_budget_mb=memory_budget_mb)
+        packed=packed, memory_budget_mb=memory_budget_mb, mixed=mixed)
 
 
 def build_neighbor_graph_sharded(
@@ -377,6 +398,7 @@ def build_neighbor_graph_sharded(
     native: bool = True,
     n_iter: int = 64,
     packed: bool = True,
+    mixed: bool = False,
 ) -> _snn.CSRNeighbors:
     """`build_neighbor_graph` over a mesh-sharded database.
 
@@ -414,4 +436,4 @@ def build_neighbor_graph_sharded(
         index, segments, x[index.order], eps, symmetric=False,
         query_chunk=cs, segs_per_chunk=0, query_tile=query_tile,
         use_pallas=use_pallas, return_distance=return_distance, native=native,
-        packed=packed, memory_budget_mb=memory_budget_mb)
+        packed=packed, memory_budget_mb=memory_budget_mb, mixed=mixed)

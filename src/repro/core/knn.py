@@ -50,6 +50,7 @@ import numpy as np
 from ..kernels import ops as _ops
 from . import engine as _engine
 from . import metrics as _metrics
+from . import snn as _snn
 
 # final-pass radius inflation: absorbs float32 predicate rounding at the
 # ball boundary (counts are monotone in r, so the margin only ever adds
@@ -134,15 +135,17 @@ def _sample_estimate(parts, xq: np.ndarray, k_eff: np.ndarray,
 
 
 def _count_pass(pack, xq, aq, qsq, r, *, query_tile, use_pallas,
-                memory_budget_mb):
+                memory_budget_mb, pq=None, mixed=False):
     """One engine count launch for ``xq`` under per-query Euclidean ``r``."""
     thresh = ((r * r - qsq) / 2.0).astype(np.float32)
     qp, aqp, rp, thp, m = _ops.pad_queries(xq, aq, r.astype(np.float32),
                                            thresh, tq=query_tile)
+    pqp = None if pq is None else _ops.pad_components(pq, qp.shape[0])
     return _engine.run_counts_packed(pack, qp, aqp, rp, thp, m,
                                      query_tile=query_tile,
                                      use_pallas=use_pallas,
-                                     memory_budget_mb=memory_budget_mb)
+                                     memory_budget_mb=memory_budget_mb,
+                                     pq=pqp, mixed=mixed)
 
 
 def _fetch_rows(parts, ids: np.ndarray) -> np.ndarray:
@@ -179,6 +182,7 @@ def query_knn(
     use_pallas: bool | None = None,
     memory_budget_mb: float | None = None,
     max_rounds: int = 100,
+    mixed: bool = False,
 ):
     """Exact k nearest neighbors of each query (indices and distances).
 
@@ -224,6 +228,7 @@ def query_knn(
         # the predicate inputs the engine sees (float32, computed ONCE) and
         # their float64 twins for the seed/cap arithmetic
         aq = (xq @ owner.v1).astype(np.float32)
+        pq = _snn.query_extra_projections(owner, xq)
         qsq32 = np.einsum("ij,ij->i", xq, xq)
         aq64 = (xq.astype(np.float64) @ owner.v1.astype(np.float64))
         qsq64 = np.einsum("ij,ij->i", xq.astype(np.float64), xq)
@@ -245,7 +250,9 @@ def query_knn(
             counts = _count_pass(pack, xq[active], aq[active], qsq32[active],
                                  r[active], query_tile=query_tile,
                                  use_pallas=use_pallas,
-                                 memory_budget_mb=memory_budget_mb)
+                                 memory_budget_mb=memory_budget_mb,
+                                 pq=None if pq is None else pq[:, active],
+                                 mixed=mixed)
             short = counts < k_eff[active]
             if not short.any():
                 break
@@ -268,9 +275,11 @@ def query_knn(
         thresh[k_eff == 0] = np.float32(-_ops.BIG)
         qp, aqp, rp, thp, _ = _ops.pad_queries(
             xq, aq, r_fin.astype(np.float32), thresh, tq=query_tile)
+        pqp = None if pq is None else _ops.pad_components(pq, qp.shape[0])
         indptr, _, flat_ids, _ = _engine.run_csr_packed(
             pack, qp, aqp, rp, thp, m, query_tile=query_tile,
-            use_pallas=use_pallas, memory_budget_mb=memory_budget_mb)
+            use_pallas=use_pallas, memory_budget_mb=memory_budget_mb,
+            pq=pqp, mixed=mixed)
 
         # float64 distance refinement on the survivors: the half-norm trick
         # loses low bits to cancellation exactly where kNN ordering needs

@@ -27,10 +27,12 @@ def _axis_size(mesh: Mesh, axis) -> int:
 def _pad_for_shards(index: _snn.SNNIndex, nshards: int, block: int = 512):
     """Host-side shard padding: rows to a (nshards * block) multiple.
 
-    Returns (xs, alphas, half_norms, order, rows_per_shard); padding rows carry
-    +BIG alpha / half-norm so they never match.
+    Returns (xs, alphas, half_norms, order, projs, rows_per_shard); padding
+    rows carry +BIG alpha / half-norm (and +BIG extra projections, when the
+    index has them) so they never match.
     """
     from ..kernels.snn_query import BIG
+    from .engine import _index_extra_projs
 
     unit = nshards * block
     n, d = index.xs.shape
@@ -40,7 +42,11 @@ def _pad_for_shards(index: _snn.SNNIndex, nshards: int, block: int = 512):
     al = np.concatenate([index.alphas, np.full(npad - n, big, np.float32)], 0)
     hn = np.concatenate([index.half_norms, np.full(npad - n, big, np.float32)], 0)
     od = np.concatenate([index.order, np.full(npad - n, -1, np.int64)], 0)
-    return xs, al, hn, od, npad // nshards
+    ep = _index_extra_projs(index)
+    pj = None if ep is None else np.concatenate(
+        [ep.astype(np.float32), np.full((ep.shape[0], npad - n), big,
+                                        np.float32)], 1)
+    return xs, al, hn, od, pj, npad // nshards
 
 
 def shard_index(index: _snn.SNNIndex, mesh: Mesh, axis: str = "data", block: int = 512):
@@ -49,7 +55,7 @@ def shard_index(index: _snn.SNNIndex, mesh: Mesh, axis: str = "data", block: int
     Returns (xs, alphas, half_norms, order) device arrays sharded P(axis) on
     rows.  Padding rows carry +BIG alpha / half-norm so they never match.
     """
-    xs, al, hn, od, _ = _pad_for_shards(index, _axis_size(mesh, axis), block)
+    xs, al, hn, od, _, _ = _pad_for_shards(index, _axis_size(mesh, axis), block)
     s2 = NamedSharding(mesh, P(axis, None))
     s1 = NamedSharding(mesh, P(axis))
     return (jax.device_put(xs, s2), jax.device_put(al, s1),
@@ -210,12 +216,15 @@ def mesh_segments(index: _snn.SNNIndex, mesh: Mesh, axis: str = "data",
     from . import engine as _engine
 
     nshards = _axis_size(mesh, axis)
-    xs_h, al_h, hn_h, od_h, n_per = _pad_for_shards(index, nshards, block)
+    xs_h, al_h, hn_h, od_h, pj_h, n_per = _pad_for_shards(index, nshards,
+                                                          block)
     return [_engine.make_segment(xs_h[k * n_per:(k + 1) * n_per],
                                  al_h[k * n_per:(k + 1) * n_per],
                                  hn_h[k * n_per:(k + 1) * n_per],
                                  od_h[k * n_per:(k + 1) * n_per],
-                                 block=block)
+                                 block=block,
+                                 projs=None if pj_h is None
+                                 else pj_h[:, k * n_per:(k + 1) * n_per])
             for k in range(nshards)]
 
 

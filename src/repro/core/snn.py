@@ -47,6 +47,12 @@ class SNNIndex:
       order:      (n,) original row index of each sorted row.
       metric:     one of metrics.VALID_METRICS.
       xi:         max raw-data norm (mips lift only).
+      vs:         (k, d) pruning directions, row 0 is exactly ``v1``.  Any
+                  basis is VALID (each row has norm <= 1, so every row yields
+                  a Cauchy–Schwarz bound); accuracy only tightens the box.
+      projs:      (k, n) per-sorted-row projections ``xs @ vs[c]``; row 0 is
+                  bit-for-bit equal to ``alphas``, so single-component
+                  behavior is identical to historical builds.
     """
 
     mu: np.ndarray
@@ -57,6 +63,16 @@ class SNNIndex:
     order: np.ndarray
     metric: str = "euclidean"
     xi: float = 0.0
+    vs: np.ndarray | None = None
+    projs: np.ndarray | None = None
+
+    def __post_init__(self):
+        # legacy constructions (tests, streaming deltas before PR 6) omit the
+        # multi-component fields; degrade to the single-component basis
+        if self.vs is None:
+            self.vs = np.asarray(self.v1)[None, :]
+        if self.projs is None:
+            self.projs = np.asarray(self.alphas)[None, :]
 
     @property
     def n(self) -> int:
@@ -98,13 +114,49 @@ def _power_iteration(x: jnp.ndarray, n_iter: int = 64) -> jnp.ndarray:
     return v * jnp.where(s == 0, 1.0, s)
 
 
+def _extra_components(xs: np.ndarray, v1: np.ndarray, alphas: np.ndarray,
+                      n_components: int, n_iter: int) -> tuple[np.ndarray, np.ndarray]:
+    """Deflation power iteration for components 2..k over the sorted data.
+
+    Row 0 of the returned (vs, projs) reuses ``v1``/``alphas`` verbatim, so
+    component-0 behavior (windows, thresholds) is bit-identical to
+    single-component builds.  Each deflated direction has norm <= 1 (the
+    normalization divides by max(||w||, 1e-30)), which is all the
+    Cauchy–Schwarz box bound needs — imperfect deflation or convergence only
+    makes the box looser, never wrong.
+    """
+    n, d = xs.shape
+    k = max(1, min(int(n_components), max(d, 1)))
+    vs = [np.asarray(v1)]
+    projs = [np.asarray(alphas)]
+    if k > 1:
+        xj = jnp.asarray(xs)
+        vj = jnp.asarray(v1)
+        resid = xj - jnp.asarray(alphas)[:, None] * vj[None, :]
+        for _ in range(k - 1):
+            vc = _power_iteration(resid, n_iter=n_iter)
+            vs.append(np.asarray(vc))
+            # project the ORIGINAL data: exact orthogonality is not required
+            projs.append(np.asarray(xj @ vc))
+            resid = resid - (resid @ vc)[:, None] * vc[None, :]
+    return (np.ascontiguousarray(np.stack(vs)),
+            np.ascontiguousarray(np.stack(projs)))
+
+
 def build_index(
     p: np.ndarray,
     metric: str = "euclidean",
     n_iter: int = 64,
     dtype=np.float32,
+    n_components: int = 3,
 ) -> SNNIndex:
-    """Algorithm 1: center, score by first PC, sort, precompute half-norms."""
+    """Algorithm 1: center, score by first PC, sort, precompute half-norms.
+
+    ``n_components`` extra principal directions (deflation power iteration)
+    are stored for the k-dim box prune; clamped to [1, max(d, 1)].  Component
+    0 is always the historical v1/alphas pair, so results are identical for
+    any setting — extra components only prune more work.
+    """
     x_raw, xi = _metrics.transform_data(np.asarray(p), metric)
     x_raw = x_raw.astype(dtype)
     # an empty database has no mean; zeros keep every downstream predicate
@@ -126,7 +178,9 @@ def build_index(
     xs = np.ascontiguousarray(x[order])
     alphas = np.ascontiguousarray(alphas[order])
     half_norms = 0.5 * np.einsum("ij,ij->i", xs, xs)
-    return SNNIndex(mu, v1, xs, alphas, half_norms, order.astype(np.int64), metric, xi)
+    vs, projs = _extra_components(xs, v1, alphas, n_components, n_iter)
+    return SNNIndex(mu, v1, xs, alphas, half_norms, order.astype(np.int64),
+                    metric, xi, vs, projs)
 
 
 # --------------------------------------------------------------------------- #
@@ -340,6 +394,24 @@ def prepare_query_predicates(index: SNNIndex, q: np.ndarray, radius):
     return xq, aq, r.astype(np.float32), thresh, qsq
 
 
+def query_extra_projections(index: SNNIndex, xq: np.ndarray) -> np.ndarray | None:
+    """(ke, m) float32 EXTRA-component query projections for the box prune.
+
+    ``xq`` is the centered index-space query block from `prepare_queries` /
+    `prepare_query_predicates`.  Component 0 (``xq @ v1``) is deliberately NOT
+    included: the engine's alpha window already covers it, and keeping it out
+    preserves the historical ``aq`` values bit-for-bit (a (m, d) @ (d,) gemv
+    and a column of a gemm may round differently).  Returns None when the
+    index carries no extra components — the signal for every downstream layer
+    to take the exact pre-multi-component code path.
+    """
+    vs = getattr(index, "vs", None)
+    if vs is None or vs.shape[0] <= 1:
+        return None
+    return np.ascontiguousarray(
+        (np.asarray(xq) @ vs[1:].T).T.astype(np.float32))
+
+
 def _native_distance_csr(index: SNNIndex, sq_eucl: np.ndarray, xq: np.ndarray,
                          counts: np.ndarray) -> np.ndarray:
     """Vectorized `_native_distance` over a flat CSR distance array."""
@@ -361,6 +433,7 @@ def query_radius_csr(
     use_pallas: bool | None = None,
     native: bool = True,
     packed: bool = True,
+    mixed: bool = False,
 ) -> CSRNeighbors:
     """Exact device radius query with CSR output (two passes, no (m, n) array).
 
@@ -386,6 +459,11 @@ def query_radius_csr(
     the Pallas kernels on TPU; elsewhere a single dense-filter evaluation
     feeds both passes (correctness reference, not the memory story; pass
     ``use_pallas=True`` off-TPU to force the kernels through interpret mode).
+
+    ``mixed=True`` runs pass 1 (counts) with bf16 dot products under the
+    margin certificate (kernels.ref module docstring); pass 2 stays f32, and
+    the engine's pass-1/pass-2 agreement check then *validates* the
+    certificate at runtime — the CSR output is bit-identical either way.
     """
     from . import engine as _engine
 
@@ -394,11 +472,12 @@ def query_radius_csr(
         return _engine.query_csr_packed(index, pack, q, radius,
                                         return_distance,
                                         query_tile=query_tile,
-                                        use_pallas=use_pallas, native=native)
+                                        use_pallas=use_pallas, native=native,
+                                        mixed=mixed)
     seg = _engine.segment_from_index(index, block=block)
     return _engine.query_csr(index, [seg], q, radius, return_distance,
                              query_tile=query_tile, use_pallas=use_pallas,
-                             native=native)
+                             native=native, mixed=mixed)
 
 
 def csr_finalize(index: SNNIndex, indptr, indices, fd, xq, qsq, counts,

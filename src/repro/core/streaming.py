@@ -86,7 +86,16 @@ def merge_sorted_indexes(a: _snn.SNNIndex, b: _snn.SNNIndex) -> _snn.SNNIndex:
         al[pos] = src.alphas
         hn[pos] = src.half_norms
         od[pos] = src.order
-    return _snn.SNNIndex(a.mu, a.v1, xs, al, hn, od, a.metric, a.xi)
+    # merge the per-point projections on the shared frozen basis (deltas are
+    # projected onto the base's vs, so rows agree); a disagreeing component
+    # count keeps only the common prefix — the box bound stays valid for any
+    # prefix of the basis
+    kx = min(a.vs.shape[0], b.vs.shape[0])
+    pj = np.empty((kx, n), np.float32)
+    pj[:, pos_a] = np.asarray(a.projs)[:kx]
+    pj[:, pos_b] = np.asarray(b.projs)[:kx]
+    return _snn.SNNIndex(a.mu, a.v1, xs, al, hn, od, a.metric, a.xi,
+                         vs=np.asarray(a.vs)[:kx], projs=pj)
 
 
 class StreamingSNNIndex:
@@ -222,12 +231,22 @@ class StreamingSNNIndex:
             al = x @ base.v1
             loc = np.argsort(al, kind="stable")
             xs = np.ascontiguousarray(x[loc])
+            als = np.ascontiguousarray(al[loc])
+            # project onto the base's FROZEN extra components too: the box
+            # bound (like the window) is valid for any fixed ||v|| <= 1
+            # direction, so deltas inherit the base's basis unchanged and
+            # packed queries keep pruning across base + deltas uniformly
+            base_vs = np.asarray(base.vs)
+            projs = np.concatenate(
+                [als[None, :],
+                 (xs @ base_vs[1:].T).T.astype(np.float32)]) \
+                if base_vs.shape[0] > 1 else als[None, :]
             delta = _snn.SNNIndex(
-                base.mu, base.v1, xs,
-                np.ascontiguousarray(al[loc]),
+                base.mu, base.v1, xs, als,
                 0.5 * np.einsum("ij,ij->i", xs, xs),
                 (start_id + loc).astype(np.int64),
-                self.metric, base.xi)
+                self.metric, base.xi,
+                vs=base_vs, projs=projs)
             parts.append(delta)
             n_total = start_id + delta.n
             if n_total >= self.rebuild_ratio * max(self._n_at_build, 1):
@@ -320,7 +339,8 @@ class StreamingSNNIndex:
                          query_tile: int = 128,
                          use_pallas: bool | None = None,
                          native: bool = True,
-                         packed: bool = True) -> _snn.CSRNeighbors:
+                         packed: bool = True,
+                         mixed: bool = False) -> _snn.CSRNeighbors:
         """Exact CSR results over base + deltas via the unified engine.
 
         ``radius`` is a scalar or a per-query (m,) vector in the native
@@ -336,10 +356,11 @@ class StreamingSNNIndex:
         if packed:
             return _engine.query_csr_packed(
                 parts[0], plan, q, radius, return_distance,
-                query_tile=query_tile, use_pallas=use_pallas, native=native)
+                query_tile=query_tile, use_pallas=use_pallas, native=native,
+                mixed=mixed)
         return _engine.query_csr(parts[0], segs, q, radius, return_distance,
                                  query_tile=query_tile, use_pallas=use_pallas,
-                                 native=native)
+                                 native=native, mixed=mixed)
 
     def query_knn(self, q: np.ndarray, k, return_distance: bool = True, *,
                   native: bool = True, query_tile: int = 128,

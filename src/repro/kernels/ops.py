@@ -35,6 +35,18 @@ def pad_database(xs, alphas, half_norms, bn: int = 512, lane: int = 128):
     return jnp.asarray(xs), jnp.asarray(alphas), jnp.asarray(half_norms), n, d
 
 
+def pad_components(p, to: int, value: float = 0.0):
+    """Pad the column axis of a (ke, x) projection block to ``to`` columns.
+
+    Query projections pad with 0 (their padded rows carry r = -BIG, so the
+    box test is moot there); database projections pad with +BIG so padding
+    rows can never sit inside any query's box interval.
+    """
+    p = np.asarray(p, np.float32)
+    return jnp.asarray(np.pad(p, ((0, 0), (0, to - p.shape[1])),
+                              constant_values=np.float32(value)))
+
+
 def pad_queries(q, aq, r, thresh, tq: int = 128, lane: int = 128):
     """Pad queries to tq multiple; padding queries get r=-BIG (match nothing).
 
@@ -54,25 +66,32 @@ def pad_queries(q, aq, r, thresh, tq: int = 128, lane: int = 128):
     return jnp.asarray(q), jnp.asarray(aq), jnp.asarray(r), jnp.asarray(thresh), m
 
 
-def snn_filter(q, aq, r, thresh, xs, alphas, half_norms, *,
+def snn_filter(q, aq, r, thresh, xs, alphas, half_norms, pq=None, px=None, *,
                tq: int = 128, bn: int = 512, use_pallas: bool | None = None):
-    """Padded-and-dispatched masked distance filter; see kernels.snn_query."""
+    """Padded-and-dispatched masked distance filter; see kernels.snn_query.
+
+    ``pq`` (ke, m) / ``px`` (ke, n) extra projection components enable the
+    k-dim box prune (kernels.ref docstring); finite outputs are unchanged.
+    """
     if use_pallas is None:
         use_pallas = on_tpu()
     if not use_pallas:
-        return _ref.snn_filter_ref(q, aq, r, thresh, xs, alphas, half_norms)
-    return _filter_kernel(q, aq, r, thresh, xs, alphas, half_norms,
+        return _ref.snn_filter_ref(q, aq, r, thresh, xs, alphas, half_norms,
+                                   pq, px)
+    return _filter_kernel(q, aq, r, thresh, xs, alphas, half_norms, pq, px,
                           tq=tq, bn=bn, interpret=not on_tpu())
 
 
-def snn_count(q, aq, r, thresh, xs, alphas, half_norms, *,
-              tq: int = 128, bn: int = 512, use_pallas: bool | None = None):
+def snn_count(q, aq, r, thresh, xs, alphas, half_norms, pq=None, px=None, *,
+              tq: int = 128, bn: int = 512, use_pallas: bool | None = None,
+              mixed: bool = False):
     if use_pallas is None:
         use_pallas = on_tpu()
     if not use_pallas:
-        return _ref.snn_count_ref(q, aq, r, thresh, xs, alphas, half_norms)
-    return _count_kernel(q, aq, r, thresh, xs, alphas, half_norms,
-                         tq=tq, bn=bn, interpret=not on_tpu())
+        return _ref.snn_count_ref(q, aq, r, thresh, xs, alphas, half_norms,
+                                  pq, px, mixed=mixed)
+    return _count_kernel(q, aq, r, thresh, xs, alphas, half_norms, pq, px,
+                         tq=tq, bn=bn, interpret=not on_tpu(), mixed=mixed)
 
 
 def round_up(x: int, mult: int) -> int:
@@ -89,7 +108,8 @@ def csr_capacity(total_neighbors: int, lane: int = 128) -> int:
     return cap
 
 
-def snn_compact(q, aq, r, thresh, offsets, xs, alphas, half_norms, *,
+def snn_compact(q, aq, r, thresh, offsets, xs, alphas, half_norms,
+                pq=None, px=None, *,
                 nnz: int, tq: int = 128, bn: int = 512,
                 use_pallas: bool | None = None):
     """Padded-and-dispatched pass-2 CSR compaction; see kernels.snn_query.
@@ -101,14 +121,16 @@ def snn_compact(q, aq, r, thresh, offsets, xs, alphas, half_norms, *,
         use_pallas = on_tpu()
     if not use_pallas:
         return _ref.snn_compact_ref(q, aq, r, thresh, offsets, xs, alphas,
-                                    half_norms, nnz=nnz)
+                                    half_norms, pq, px, nnz=nnz)
     return _compact_kernel(q, aq, r, thresh, offsets, xs, alphas, half_norms,
-                           nnz=nnz, tq=tq, bn=bn, interpret=not on_tpu())
+                           pq, px, nnz=nnz, tq=tq, bn=bn,
+                           interpret=not on_tpu())
 
 
-def snn_count_stacked(q, aq, r, thresh, xs, alphas, half_norms, *,
+def snn_count_stacked(q, aq, r, thresh, xs, alphas, half_norms,
+                      pq=None, px=None, *,
                       tq: int = 128, bn: int = 512,
-                      use_pallas: bool | None = None):
+                      use_pallas: bool | None = None, mixed: bool = False):
     """Stacked pass-1: per-(segment, query) counts (S, m) int32, one launch.
 
     ``xs`` (S, n_pad, d), ``alphas``/``half_norms`` (S, n_pad) — a
@@ -118,12 +140,15 @@ def snn_count_stacked(q, aq, r, thresh, xs, alphas, half_norms, *,
         use_pallas = on_tpu()
     if not use_pallas:
         return _ref.snn_count_stacked_ref(q, aq, r, thresh, xs, alphas,
-                                          half_norms, n_seg=xs.shape[0])
+                                          half_norms, pq, px,
+                                          n_seg=xs.shape[0], mixed=mixed)
     return _count_stacked_kernel(q, aq, r, thresh, xs, alphas, half_norms,
-                                 tq=tq, bn=bn, interpret=not on_tpu())
+                                 pq, px, tq=tq, bn=bn,
+                                 interpret=not on_tpu(), mixed=mixed)
 
 
-def snn_compact_stacked(q, aq, r, thresh, offsets, xs, alphas, half_norms, *,
+def snn_compact_stacked(q, aq, r, thresh, offsets, xs, alphas, half_norms,
+                        pq=None, px=None, *,
                         nnz: int, tq: int = 128, bn: int = 512,
                         use_pallas: bool | None = None):
     """Stacked pass-2 compaction, one launch over the whole segment stack.
@@ -136,10 +161,10 @@ def snn_compact_stacked(q, aq, r, thresh, offsets, xs, alphas, half_norms, *,
         use_pallas = on_tpu()
     if not use_pallas:
         return _ref.snn_compact_stacked_ref(q, aq, r, thresh, offsets, xs,
-                                            alphas, half_norms,
+                                            alphas, half_norms, pq, px,
                                             n_seg=xs.shape[0], nnz=nnz)
     return _compact_stacked_kernel(q, aq, r, thresh, offsets, xs, alphas,
-                                   half_norms, nnz=nnz, tq=tq, bn=bn,
+                                   half_norms, pq, px, nnz=nnz, tq=tq, bn=bn,
                                    interpret=not on_tpu())
 
 

@@ -3,6 +3,23 @@
 Like the kernels, every oracle takes the per-query radius/threshold vectors
 ``r``/``thresh`` (one value per query row) — there is no scalar-radius form
 anywhere at this layer.
+
+This module is also the single source of truth for the two exactness-preserving
+candidate bounds (PR 6):
+
+* the k-dim Cauchy–Schwarz **box bound** (`box_mask`): for ANY direction v with
+  ``||v|| <= 1``, ``||x - q|| <= r`` implies ``|<x, v> - <q, v>| <= r``, so
+  extra projection components prune candidates before the distance dot-product
+  without ever dropping a true neighbor — validity never depends on how good
+  the power-iteration basis is;
+* the bf16 **margin certificate** (`mixed_keep_ref`): the count pass may run
+  its dot products in bfloat16 as long as every candidate whose bf16 half
+  distance lands within ``MIX_EPS * ||x|| * ||q||`` of the threshold is
+  re-verified with the exact f32 predicate.  Outside the band bf16 and f32
+  provably agree, so mixed counts are equal (not just close) to f32 counts.
+
+Both the oracles here and the Pallas kernels import these formulas, which is
+what keeps the dispatch paths bit-identical.
 """
 from __future__ import annotations
 
@@ -13,32 +30,121 @@ import jax.numpy as jnp
 
 BIG = float(jnp.finfo(jnp.float32).max / 8)
 
+# Box-bound slack, relative to ||x|| + ||q|| + r.  The f32 predicate
+# ``dhalf <= thresh`` can admit points whose true distance exceeds r by up to
+# ~sqrt(2 * d * u * ||x|| ||q||) (u = 2^-24, worst-case d-term dot rounding),
+# i.e. <= sqrt(2 d u)/2 * (||x|| + ||q||).  BOX_EPS = 1e-2 covers d up to
+# ~1.3e4 with worst-case (non-random) rounding, plus the rounding of the
+# projections themselves — the box may only ever be LOOSE, never clipping.
+BOX_EPS = 1e-2
+
+# bf16 margin, relative to ||x|| * ||q||.  A bf16 dot product (f32 accumulate)
+# errs by <= (2^-8 + 2 d u) * ||x|| ||q|| from rounding the inputs; 1/64 gives
+# ~4x headroom over the 2^-8 input-rounding term up to d ~ 1e5.
+MIX_EPS = 1.0 / 64.0
+
+
+def norm_scales(r, thresh, half_norms):
+    """(xnorm (n,), qnorm (m,)) recovered from the predicate operands.
+
+    ``qsq = r^2 - 2*thresh`` inverts core.snn.prepare_query_predicates, so no
+    new kernel operand is needed.  Padding queries (r = thresh = -BIG)
+    overflow to qnorm = +inf, which only inflates their slack — harmless,
+    their alpha window already rejects everything.
+    """
+    xn = jnp.sqrt(jnp.maximum(2.0 * half_norms, 0.0))
+    qn = jnp.sqrt(jnp.maximum(r * r - 2.0 * thresh, 0.0))
+    return xn, qn
+
+
+def box_mask(pq, px, r, thresh, half_norms):
+    """k-dim Cauchy–Schwarz box test -> (m, n) bool candidate mask.
+
+    ``pq`` (ke, m) / ``px`` (ke, n) are the EXTRA projection components
+    (component 0 is the alpha window the caller already applied).  True means
+    "may be a neighbor".  The slack conservatively covers every f32 rounding
+    in the projections and in the distance predicate itself (BOX_EPS above),
+    so every pair the f32 predicate would keep passes this box.
+    """
+    xn, qn = norm_scales(r, thresh, half_norms)
+    lim = r[:, None] + BOX_EPS * (xn[None, :] + qn[:, None]
+                                  + jnp.abs(r)[:, None])
+    ok = jnp.abs(px[0][None, :] - pq[0][:, None]) <= lim
+    for c in range(1, pq.shape[0]):
+        ok = ok & (jnp.abs(px[c][None, :] - pq[c][:, None]) <= lim)
+    return ok
+
+
+def _bf16_dhalf(q, xs, half_norms):
+    """Half distances with the dot product in bf16 (f32 accumulate)."""
+    dot16 = jax.lax.dot_general(
+        q.astype(jnp.bfloat16), xs.astype(jnp.bfloat16),
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    return half_norms[None, :] - dot16
+
+
+def mixed_keep_ref(q, aq, r, thresh, xs, alphas, half_norms,
+                   pq=None, px=None):
+    """(m, n) keep mask from the bf16 count pass + margin certificate.
+
+    Provably equal to the f32 mask ``geom & (dhalf32 <= thresh)``:
+    candidates at least ``margin`` below threshold in bf16 are definitely in,
+    at least ``margin`` above are definitely out, and the band in between is
+    re-verified with the exact f32 predicate.  (The oracle evaluates the f32
+    band densely; the Pallas kernel skips it per tile when the band is empty.)
+    """
+    geom = jnp.abs(alphas[None, :] - aq[:, None]) <= r[:, None]
+    if pq is not None:
+        geom = geom & box_mask(pq, px, r, thresh, half_norms)
+    dh16 = _bf16_dhalf(q, xs, half_norms)
+    xn, qn = norm_scales(r, thresh, half_norms)
+    margin = MIX_EPS * xn[None, :] * qn[:, None]
+    thc = thresh[:, None]
+    definite = geom & (dh16 <= thc - margin)
+    band = geom & (dh16 > thc - margin) & (dh16 <= thc + margin)
+    dh32 = half_norms[None, :] - q @ xs.T
+    return definite | (band & (dh32 <= thc))
+
 
 @jax.jit
-def snn_filter_ref(q, aq, r, thresh, xs, alphas, half_norms):
-    """Oracle for kernels.snn_query.snn_filter (no block skipping, same math)."""
+def snn_filter_ref(q, aq, r, thresh, xs, alphas, half_norms,
+                   pq=None, px=None):
+    """Oracle for kernels.snn_query.snn_filter (no block skipping, same math).
+
+    ``pq``/``px`` (both given or both None) add the k-dim box bound; the box
+    only removes pairs the distance predicate would reject anyway, so the
+    surviving (finite) entries are unchanged.
+    """
     dhalf = half_norms[None, :] - q @ xs.T
     inwin = jnp.abs(alphas[None, :] - aq[:, None]) <= r[:, None]
     keep = inwin & (dhalf <= thresh[:, None])
+    if pq is not None:
+        keep = keep & box_mask(pq, px, r, thresh, half_norms)
     return jnp.where(keep, dhalf, BIG)
 
 
-@jax.jit
-def snn_count_ref(q, aq, r, thresh, xs, alphas, half_norms):
-    """Oracle for kernels.snn_query.snn_count."""
-    dh = snn_filter_ref(q, aq, r, thresh, xs, alphas, half_norms)
+@functools.partial(jax.jit, static_argnames=("mixed",))
+def snn_count_ref(q, aq, r, thresh, xs, alphas, half_norms,
+                  pq=None, px=None, *, mixed: bool = False):
+    """Oracle for kernels.snn_query.snn_count (``mixed`` = bf16 count pass)."""
+    if mixed:
+        keep = mixed_keep_ref(q, aq, r, thresh, xs, alphas, half_norms, pq, px)
+        return jnp.sum(keep, axis=1).astype(jnp.int32)
+    dh = snn_filter_ref(q, aq, r, thresh, xs, alphas, half_norms, pq, px)
     return jnp.sum(dh < BIG, axis=1).astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("nnz",))
-def snn_compact_ref(q, aq, r, thresh, offsets, xs, alphas, half_norms, *, nnz: int):
+def snn_compact_ref(q, aq, r, thresh, offsets, xs, alphas, half_norms,
+                    pq=None, px=None, *, nnz: int):
     """Oracle for kernels.snn_query.snn_compact (dense filter + scatter).
 
     Dense (m, n) intermediate — correctness reference only, not the memory
     story.  Slot layout matches the kernel: ``nnz`` includes one trailing trash
     slot; unwritten idx slots are -1, dhalf slots +BIG.
     """
-    dh = snn_filter_ref(q, aq, r, thresh, xs, alphas, half_norms)
+    dh = snn_filter_ref(q, aq, r, thresh, xs, alphas, half_norms, pq, px)
     keep = dh < BIG
     within = jnp.cumsum(keep.astype(jnp.int32), axis=1) - 1
     trash = nnz - 1
@@ -54,19 +160,34 @@ def snn_compact_ref(q, aq, r, thresh, offsets, xs, alphas, half_norms, *, nnz: i
 # --------------------------------------------------------------------------- #
 # Stacked (SegmentPack) oracles                                                #
 # --------------------------------------------------------------------------- #
-@functools.partial(jax.jit, static_argnames=("n_seg",))
-def snn_count_stacked_ref(q, aq, r, thresh, xs, alphas, half_norms, *,
-                          n_seg: int):
+def _flatten_stacked_px(px):
+    """(S, ke, n_pad) stacked projections -> (ke, S*n_pad) concat order."""
+    if px is None:
+        return None
+    return px.transpose(1, 0, 2).reshape(px.shape[1], -1)
+
+
+@functools.partial(jax.jit, static_argnames=("n_seg", "mixed"))
+def snn_count_stacked_ref(q, aq, r, thresh, xs, alphas, half_norms,
+                          pq=None, px=None, *, n_seg: int,
+                          mixed: bool = False):
     """Oracle for kernels.snn_query.snn_count_stacked.
 
     ``xs`` (S, n_pad, d) and friends are flattened into one (S*n_pad, d)
     database so the whole pass is ONE matmul — per-column dot products are
     bit-identical to the per-segment calls (each output element reduces the
     same d-length vectors in the same order), which the packed-vs-looped
-    engine equivalence relies on.
+    engine equivalence relies on.  ``px`` is (S, ke, n_pad).
     """
-    dh = snn_filter_ref(q, aq, r, thresh, xs.reshape(-1, xs.shape[-1]),
-                        alphas.reshape(-1), half_norms.reshape(-1))
+    flat = (xs.reshape(-1, xs.shape[-1]), alphas.reshape(-1),
+            half_norms.reshape(-1))
+    px2 = _flatten_stacked_px(px)
+    if mixed:
+        keep = mixed_keep_ref(q, aq, r, thresh, *flat, pq, px2)
+        m = keep.shape[0]
+        return jnp.sum(keep.reshape(m, n_seg, -1),
+                       axis=2).astype(jnp.int32).T
+    dh = snn_filter_ref(q, aq, r, thresh, *flat, pq, px2)
     return stacked_counts_from_filter(dh, n_seg=n_seg)
 
 
@@ -118,12 +239,13 @@ def snn_compact_stacked_from_filter(dh, offsets, *, n_seg: int, nnz: int):
 
 @functools.partial(jax.jit, static_argnames=("n_seg", "nnz"))
 def snn_compact_stacked_ref(q, aq, r, thresh, offsets, xs, alphas, half_norms,
-                            *, n_seg: int, nnz: int):
+                            pq=None, px=None, *, n_seg: int, nnz: int):
     """Oracle for kernels.snn_query.snn_compact_stacked (recomputes the
     filter; the packed engine uses `snn_compact_stacked_from_filter` to
     reuse pass 1's evaluation)."""
     dh = snn_filter_ref(q, aq, r, thresh, xs.reshape(-1, xs.shape[-1]),
-                        alphas.reshape(-1), half_norms.reshape(-1))
+                        alphas.reshape(-1), half_norms.reshape(-1),
+                        pq, _flatten_stacked_px(px))
     return snn_compact_stacked_from_filter(dh, offsets, n_seg=n_seg, nnz=nnz)
 
 

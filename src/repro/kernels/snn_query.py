@@ -19,6 +19,18 @@ are both row-local, so a mixed-radius tile costs exactly what a uniform one
 does.  Callers broadcasting one radius do so at the query-prep layer
 (`core.metrics.broadcast_radius`), not here.
 
+Two optional, exactness-preserving accelerations (PR 6; shared formulas live
+in `kernels.ref`, the single source of truth for both dispatch paths):
+
+* ``pq``/``px`` extra projection components add the k-dim Cauchy–Schwarz box
+  test to every candidate BEFORE its result is kept — any unit-or-shorter
+  direction yields a valid bound, so the box only ever removes pairs the
+  distance predicate would reject;
+* ``mixed=True`` (count kernels only) runs the count dot products in bf16
+  under the margin certificate: candidates within ``MIX_EPS * ||x|| ||q||``
+  of the threshold are re-verified with the exact f32 predicate (skipped per
+  tile when the band is empty), so mixed counts EQUAL f32 counts.
+
 Five entry kernels share the body:
   * ``filter`` : emits masked halved sq. distances (m, n), +BIG where pruned;
   * ``count``  : emits per-query neighbor counts (m,), accumulated over blocks;
@@ -34,6 +46,9 @@ Five entry kernels share the body:
 Layout notes (TPU): 1-D per-row arrays (alpha, half-norm, per-query scalars)
 are carried as (1, n)/(1, m) so the last dim is the 128-lane axis; ``d`` is
 zero-padded to a multiple of 128 for the MXU (zero features change nothing).
+``pq`` rides as (ke, tq) tiles and ``px`` as (ke, bn) — ke is tiny (default
+2 extra components), so the box adds O(ke) VPU compares per candidate against
+the O(d) MXU work it saves.
 """
 from __future__ import annotations
 
@@ -43,6 +58,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
+
+from .ref import MIX_EPS, box_mask, norm_scales
 
 # jax renamed TPUCompilerParams -> CompilerParams; support both.
 _CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
@@ -55,13 +72,16 @@ def _window_hit(aq, r, a_lo, a_hi):
     return jnp.any((aq + r >= a_lo) & (aq - r <= a_hi))
 
 
-def _tile_body(q, aq, r, th, x, al, hn):
+def _tile_body(q, aq, r, th, x, al, hn, pq=None, px=None):
     """Shared compute for one (query tile, db block) cell -> (keep, dhalf).
 
     Takes plain arrays (not refs) so the looped 2-D kernels and the stacked
     3-D kernels run the exact same instruction sequence on the same block
     shapes — the pass-1/pass-2 and looped/stacked bit-identity both lean on
-    this body being the single compiled predicate pipeline.
+    this body being the single compiled predicate pipeline.  ``pq`` (ke, tq)
+    / ``px`` (ke, bn) add the k-dim box test (`ref.box_mask`); the box is a
+    superset of the distance predicate, so ``dhalf`` at kept positions is
+    unchanged by it.
     """
     s = jax.lax.dot_general(
         q, x,
@@ -73,19 +93,75 @@ def _tile_body(q, aq, r, th, x, al, hn):
     rc = r[0, :][:, None]
     inwin = jnp.abs(al - aqc) <= rc
     keep = inwin & (dhalf <= th[0, :][:, None])
+    if pq is not None:
+        keep = keep & box_mask(pq, px, r[0, :], th[0, :], hn[0, :])
     return keep, dhalf
 
 
-def _filter_kernel(q_ref, aq_ref, r_ref, th_ref, x_ref, al_ref, hn_ref, out_ref):
+def _count_tile(q, aq, r, th, x, al, hn, pq, px, mix):
+    """Per-query survivor counts (tq,) int32 for one cell.
+
+    ``mix`` (static) switches the dot products to bf16 under the margin
+    certificate: definitely-in candidates are counted from the bf16 pass,
+    and the in-band ones re-verified with the exact f32 predicate — but only
+    when the band is non-empty (`lax.cond`), so clear-cut tiles never touch
+    the f32 matmul.  The result provably equals the f32 count.
+    """
+    if not mix:
+        keep, _ = _tile_body(q, aq, r, th, x, al, hn, pq, px)
+        return jnp.sum(keep.astype(jnp.int32), axis=1)
+    aqc = aq[0, :][:, None]
+    rc = r[0, :][:, None]
+    thc = th[0, :][:, None]
+    geom = jnp.abs(al - aqc) <= rc
+    if pq is not None:
+        geom = geom & box_mask(pq, px, r[0, :], th[0, :], hn[0, :])
+    s16 = jax.lax.dot_general(
+        q.astype(jnp.bfloat16), x.astype(jnp.bfloat16),
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    dh16 = hn - s16
+    xn, qn = norm_scales(r[0, :], th[0, :], hn[0, :])
+    margin = MIX_EPS * xn[None, :] * qn[:, None]
+    definite = geom & (dh16 <= thc - margin)
+    band = geom & (dh16 > thc - margin) & (dh16 <= thc + margin)
+    cnt = jnp.sum(definite.astype(jnp.int32), axis=1)
+
+    def verify(_):
+        s32 = jax.lax.dot_general(
+            q, x,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        # the exact f32 predicate, same expression as `_tile_body`
+        return jnp.sum((band & ((hn - s32) <= thc)).astype(jnp.int32), axis=1)
+
+    return cnt + jax.lax.cond(jnp.any(band), verify,
+                              lambda _: jnp.zeros_like(cnt), 0)
+
+
+def _split_rest(rest, n_out):
+    """(pq, px, *outputs) or just outputs: kernels take optional projection
+    operands ahead of their outputs, discriminated by arity."""
+    if len(rest) == n_out + 2:
+        return rest[0], rest[1], rest[2:]
+    return None, None, rest
+
+
+def _filter_kernel(q_ref, aq_ref, r_ref, th_ref, x_ref, al_ref, hn_ref, *rest):
+    pq_ref, px_ref, (out_ref,) = _split_rest(rest, 1)
     a_lo = al_ref[0, 0]
     a_hi = al_ref[0, al_ref.shape[1] - 1]
     hit = _window_hit(aq_ref[0, :], r_ref[0, :], a_lo, a_hi)
 
     @pl.when(hit)
     def _():
-        keep, dhalf = _tile_body(q_ref[...], aq_ref[...], r_ref[...],
-                                 th_ref[...], x_ref[...], al_ref[...],
-                                 hn_ref[...])
+        keep, dhalf = _tile_body(
+            q_ref[...], aq_ref[...], r_ref[...], th_ref[...], x_ref[...],
+            al_ref[...], hn_ref[...],
+            None if pq_ref is None else pq_ref[...],
+            None if px_ref is None else px_ref[...])
         out_ref[...] = jnp.where(keep, dhalf, BIG)
 
     @pl.when(jnp.logical_not(hit))
@@ -93,7 +169,9 @@ def _filter_kernel(q_ref, aq_ref, r_ref, th_ref, x_ref, al_ref, hn_ref, out_ref)
         out_ref[...] = jnp.full_like(out_ref, BIG)
 
 
-def _count_kernel(q_ref, aq_ref, r_ref, th_ref, x_ref, al_ref, hn_ref, out_ref):
+def _count_kernel(mix, q_ref, aq_ref, r_ref, th_ref, x_ref, al_ref, hn_ref,
+                  *rest):
+    pq_ref, px_ref, (out_ref,) = _split_rest(rest, 1)
     bi = pl.program_id(1)
 
     @pl.when(bi == 0)
@@ -106,14 +184,18 @@ def _count_kernel(q_ref, aq_ref, r_ref, th_ref, x_ref, al_ref, hn_ref, out_ref):
 
     @pl.when(hit)
     def _():
-        keep, _ = _tile_body(q_ref[...], aq_ref[...], r_ref[...], th_ref[...],
-                             x_ref[...], al_ref[...], hn_ref[...])
-        out_ref[...] += jnp.sum(keep.astype(jnp.int32), axis=1)[None, :]
+        cnt = _count_tile(
+            q_ref[...], aq_ref[...], r_ref[...], th_ref[...], x_ref[...],
+            al_ref[...], hn_ref[...],
+            None if pq_ref is None else pq_ref[...],
+            None if px_ref is None else px_ref[...], mix)
+        out_ref[...] += cnt[None, :]
 
 
-def _count_stacked_kernel(q_ref, aq_ref, r_ref, th_ref, x_ref, al_ref, hn_ref,
-                          out_ref):
+def _count_stacked_kernel(mix, q_ref, aq_ref, r_ref, th_ref, x_ref, al_ref,
+                          hn_ref, *rest):
     """`_count_kernel` with a leading segment grid axis over stacked tensors."""
+    pq_ref, px_ref, (out_ref,) = _split_rest(rest, 1)
     bi = pl.program_id(2)
 
     @pl.when(bi == 0)
@@ -126,12 +208,15 @@ def _count_stacked_kernel(q_ref, aq_ref, r_ref, th_ref, x_ref, al_ref, hn_ref,
 
     @pl.when(hit)
     def _():
-        keep, _ = _tile_body(q_ref[...], aq_ref[...], r_ref[...], th_ref[...],
-                             x_ref[0], al_ref[...], hn_ref[...])
-        out_ref[...] += jnp.sum(keep.astype(jnp.int32), axis=1)[None, :]
+        cnt = _count_tile(
+            q_ref[...], aq_ref[...], r_ref[...], th_ref[...], x_ref[0],
+            al_ref[...], hn_ref[...],
+            None if pq_ref is None else pq_ref[...],
+            None if px_ref is None else px_ref[0], mix)
+        out_ref[...] += cnt[None, :]
 
 
-def _grid_specs(m, n, d, tq, bn):
+def _grid_specs(m, n, d, tq, bn, ke=0):
     grid = (m // tq, n // bn)
     in_specs = [
         pl.BlockSpec((tq, d), lambda qi, bi: (qi, 0)),    # q
@@ -142,6 +227,11 @@ def _grid_specs(m, n, d, tq, bn):
         pl.BlockSpec((1, bn), lambda qi, bi: (0, bi)),    # alpha
         pl.BlockSpec((1, bn), lambda qi, bi: (0, bi)),    # half_norms
     ]
+    if ke:
+        in_specs += [
+            pl.BlockSpec((ke, tq), lambda qi, bi: (0, qi)),   # pq (extras)
+            pl.BlockSpec((ke, bn), lambda qi, bi: (0, bi)),   # px (extras)
+        ]
     return grid, in_specs
 
 
@@ -152,16 +242,23 @@ def _compiler_params():
 
 
 @functools.partial(jax.jit, static_argnames=("tq", "bn", "interpret"))
-def snn_filter(q, aq, r, thresh, xs, alphas, half_norms, *,
+def snn_filter(q, aq, r, thresh, xs, alphas, half_norms, pq=None, px=None, *,
                tq: int = 128, bn: int = 512, interpret: bool = True):
     """Masked halved sq. distances (m, n); +BIG outside window/radius.
 
     Callers are expected to pre-pad: m % tq == 0, n % bn == 0, d % 128 == 0,
     with padding DB rows carrying +BIG alpha/half-norm (see ops.pad_database).
+    ``pq`` (ke, m) / ``px`` (ke, n) extra projections (padded to the same m/n)
+    enable the k-dim box prune; finite outputs are identical either way.
     """
     m, d = q.shape
     n = xs.shape[0]
-    grid, in_specs = _grid_specs(m, n, d, tq, bn)
+    ke = 0 if pq is None else pq.shape[0]
+    grid, in_specs = _grid_specs(m, n, d, tq, bn, ke)
+    args = (q, aq[None, :], r[None, :], thresh[None, :], xs,
+            alphas[None, :], half_norms[None, :])
+    if ke:
+        args += (pq, px)
     return pl.pallas_call(
         _filter_kernel,
         grid=grid,
@@ -170,27 +267,35 @@ def snn_filter(q, aq, r, thresh, xs, alphas, half_norms, *,
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
         compiler_params=_compiler_params(),
         interpret=interpret,
-    )(q, aq[None, :], r[None, :], thresh[None, :], xs,
-      alphas[None, :], half_norms[None, :])
+    )(*args)
 
 
-@functools.partial(jax.jit, static_argnames=("tq", "bn", "interpret"))
-def snn_count(q, aq, r, thresh, xs, alphas, half_norms, *,
-              tq: int = 128, bn: int = 512, interpret: bool = True):
-    """Per-query neighbor counts (m,) int32 (same padding contract as filter)."""
+@functools.partial(jax.jit, static_argnames=("tq", "bn", "interpret", "mixed"))
+def snn_count(q, aq, r, thresh, xs, alphas, half_norms, pq=None, px=None, *,
+              tq: int = 128, bn: int = 512, interpret: bool = True,
+              mixed: bool = False):
+    """Per-query neighbor counts (m,) int32 (same padding contract as filter).
+
+    ``mixed=True`` runs the bf16 count pass under the margin certificate —
+    counts are still exactly the f32 counts (module docstring).
+    """
     m, d = q.shape
     n = xs.shape[0]
-    grid, in_specs = _grid_specs(m, n, d, tq, bn)
+    ke = 0 if pq is None else pq.shape[0]
+    grid, in_specs = _grid_specs(m, n, d, tq, bn, ke)
+    args = (q, aq[None, :], r[None, :], thresh[None, :], xs,
+            alphas[None, :], half_norms[None, :])
+    if ke:
+        args += (pq, px)
     out = pl.pallas_call(
-        _count_kernel,
+        functools.partial(_count_kernel, mixed),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, tq), lambda qi, bi: (0, qi)),
         out_shape=jax.ShapeDtypeStruct((1, m), jnp.int32),
         compiler_params=_compiler_params(),
         interpret=interpret,
-    )(q, aq[None, :], r[None, :], thresh[None, :], xs,
-      alphas[None, :], half_norms[None, :])
+    )(*args)
     return out[0]
 
 
@@ -198,7 +303,8 @@ def snn_count(q, aq, r, thresh, xs, alphas, half_norms, *,
 # Pass-2 CSR compaction                                                        #
 # --------------------------------------------------------------------------- #
 def _compact_kernel(q_ref, aq_ref, r_ref, th_ref, off_ref,
-                    x_ref, al_ref, hn_ref, idx_ref, dh_ref, cursor_ref):
+                    x_ref, al_ref, hn_ref, *rest):
+    pq_ref, px_ref, (idx_ref, dh_ref, cursor_ref) = _split_rest(rest, 3)
     qi = pl.program_id(0)
     bi = pl.program_id(1)
     bn = x_ref.shape[0]
@@ -222,9 +328,11 @@ def _compact_kernel(q_ref, aq_ref, r_ref, th_ref, off_ref,
 
     @pl.when(hit)
     def _():
-        keep, dhalf = _tile_body(q_ref[...], aq_ref[...], r_ref[...],
-                                 th_ref[...], x_ref[...], al_ref[...],
-                                 hn_ref[...])
+        keep, dhalf = _tile_body(
+            q_ref[...], aq_ref[...], r_ref[...], th_ref[...], x_ref[...],
+            al_ref[...], hn_ref[...],
+            None if pq_ref is None else pq_ref[...],
+            None if px_ref is None else px_ref[...])
         keep_i = keep.astype(jnp.int32)
         # Survivor j of query row k goes to offsets[k] + cursor[k] + (number of
         # survivors before j in this block) — ascending sorted order, so each
@@ -262,7 +370,8 @@ def _compact_kernel(q_ref, aq_ref, r_ref, th_ref, off_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("nnz", "tq", "bn", "interpret"))
-def snn_compact(q, aq, r, thresh, offsets, xs, alphas, half_norms, *,
+def snn_compact(q, aq, r, thresh, offsets, xs, alphas, half_norms,
+                pq=None, px=None, *,
                 nnz: int, tq: int = 128, bn: int = 512, interpret: bool = True):
     """Scatter surviving (sorted-row index, dhalf) pairs into flat CSR arrays.
 
@@ -272,6 +381,8 @@ def snn_compact(q, aq, r, thresh, offsets, xs, alphas, half_norms, *,
     power of two, bounds recompilation).  Returns (idx (nnz,) int32 sorted-row
     positions with -1 in unwritten slots, dhalf (nnz,) f32).  Same padding
     contract as filter/count; padding queries must carry offsets < nnz.
+    ``pq``/``px`` must match pass 1's — both passes then evaluate the same
+    box-tightened predicate, preserving the count/compact agreement.
 
     Both grid dims are sequential: every cell scatters into the same flat
     output block, and a VMEM cursor carries each query's running write position
@@ -286,9 +397,14 @@ def snn_compact(q, aq, r, thresh, offsets, xs, alphas, half_norms, *,
     """
     m, d = q.shape
     n = xs.shape[0]
-    grid, in_specs = _grid_specs(m, n, d, tq, bn)
+    ke = 0 if pq is None else pq.shape[0]
+    grid, in_specs = _grid_specs(m, n, d, tq, bn, ke)
     in_specs = in_specs[:4] + [pl.BlockSpec((1, tq), lambda qi, bi: (0, qi))] \
         + in_specs[4:]
+    args = (q, aq[None, :], r[None, :], thresh[None, :], offsets[None, :], xs,
+            alphas[None, :], half_norms[None, :])
+    if ke:
+        args += (pq, px)
     out_idx, out_dh = pl.pallas_call(
         _compact_kernel,
         grid=grid,
@@ -301,15 +417,14 @@ def snn_compact(q, aq, r, thresh, offsets, xs, alphas, half_norms, *,
         compiler_params=_CompilerParams(
             dimension_semantics=(pltpu.ARBITRARY, pltpu.ARBITRARY)),
         interpret=interpret,
-    )(q, aq[None, :], r[None, :], thresh[None, :], offsets[None, :], xs,
-      alphas[None, :], half_norms[None, :])
+    )(*args)
     return out_idx[0], out_dh[0]
 
 
 # --------------------------------------------------------------------------- #
 # Stacked-grid variants (one launch over a whole SegmentPack)                  #
 # --------------------------------------------------------------------------- #
-def _stacked_grid_specs(n_seg, m, n, d, tq, bn):
+def _stacked_grid_specs(n_seg, m, n, d, tq, bn, ke=0):
     grid = (n_seg, m // tq, n // bn)
     in_specs = [
         pl.BlockSpec((tq, d), lambda s, qi, bi: (qi, 0)),      # q
@@ -320,26 +435,39 @@ def _stacked_grid_specs(n_seg, m, n, d, tq, bn):
         pl.BlockSpec((1, bn), lambda s, qi, bi: (s, bi)),      # alpha stack
         pl.BlockSpec((1, bn), lambda s, qi, bi: (s, bi)),      # half-norm stack
     ]
+    if ke:
+        in_specs += [
+            pl.BlockSpec((ke, tq), lambda s, qi, bi: (0, qi)),       # pq
+            pl.BlockSpec((1, ke, bn), lambda s, qi, bi: (s, 0, bi)),  # px stack
+        ]
     return grid, in_specs
 
 
-@functools.partial(jax.jit, static_argnames=("tq", "bn", "interpret"))
-def snn_count_stacked(q, aq, r, thresh, xs, alphas, half_norms, *,
-                      tq: int = 128, bn: int = 512, interpret: bool = True):
+@functools.partial(jax.jit, static_argnames=("tq", "bn", "interpret", "mixed"))
+def snn_count_stacked(q, aq, r, thresh, xs, alphas, half_norms,
+                      pq=None, px=None, *,
+                      tq: int = 128, bn: int = 512, interpret: bool = True,
+                      mixed: bool = False):
     """Per-(segment, query) survivor counts (S, m) int32 in ONE launch.
 
     ``xs`` is a (S, n_pad, d) stack of padded segments (`core.engine.
     SegmentPack`); ``alphas``/``half_norms`` are the matching (S, n_pad)
-    stacks.  Per-cell block pruning is unchanged — a segment whose alpha
-    range misses every query window in the tile skips its MXU work — so
-    stacking costs no extra predicate evaluations, only the per-launch
-    dispatch that the looped engine paid S times.
+    stacks and ``px`` the (S, ke, n_pad) projection stack.  Per-cell block
+    pruning is unchanged — a segment whose alpha range misses every query
+    window in the tile skips its MXU work — so stacking costs no extra
+    predicate evaluations, only the per-launch dispatch that the looped
+    engine paid S times.
     """
     m, d = q.shape
     n_seg, n, _ = xs.shape
-    grid, in_specs = _stacked_grid_specs(n_seg, m, n, d, tq, bn)
+    ke = 0 if pq is None else pq.shape[0]
+    grid, in_specs = _stacked_grid_specs(n_seg, m, n, d, tq, bn, ke)
+    args = (q, aq[None, :], r[None, :], thresh[None, :], xs, alphas,
+            half_norms)
+    if ke:
+        args += (pq, px)
     return pl.pallas_call(
-        _count_stacked_kernel,
+        functools.partial(_count_stacked_kernel, mixed),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, tq), lambda s, qi, bi: (s, qi)),
@@ -348,12 +476,11 @@ def snn_count_stacked(q, aq, r, thresh, xs, alphas, half_norms, *,
             dimension_semantics=(pltpu.PARALLEL, pltpu.PARALLEL,
                                  pltpu.ARBITRARY)),
         interpret=interpret,
-    )(q, aq[None, :], r[None, :], thresh[None, :], xs, alphas, half_norms)
+    )(*args)
 
 
 def _compact_stacked_kernel(q_ref, aq_ref, r_ref, th_ref, off_ref,
-                            x_ref, al_ref, hn_ref, idx_ref, dh_ref,
-                            cursor_ref):
+                            x_ref, al_ref, hn_ref, *rest):
     """`_compact_kernel` with a leading segment grid axis.
 
     Emitted flat indices are *pack-flat*: segment s's local row j becomes
@@ -361,6 +488,7 @@ def _compact_stacked_kernel(q_ref, aq_ref, r_ref, th_ref, off_ref,
     Offsets are per (segment, query) — the global CSR base plus the
     segment-axis exclusive prefix, both computed on device.
     """
+    pq_ref, px_ref, (idx_ref, dh_ref, cursor_ref) = _split_rest(rest, 3)
     si = pl.program_id(0)
     qi = pl.program_id(1)
     bi = pl.program_id(2)
@@ -383,9 +511,11 @@ def _compact_stacked_kernel(q_ref, aq_ref, r_ref, th_ref, off_ref,
 
     @pl.when(hit)
     def _():
-        keep, dhalf = _tile_body(q_ref[...], aq_ref[...], r_ref[...],
-                                 th_ref[...], x_ref[0], al_ref[...],
-                                 hn_ref[...])
+        keep, dhalf = _tile_body(
+            q_ref[...], aq_ref[...], r_ref[...], th_ref[...], x_ref[0],
+            al_ref[...], hn_ref[...],
+            None if pq_ref is None else pq_ref[...],
+            None if px_ref is None else px_ref[0])
         keep_i = keep.astype(jnp.int32)
         within = jnp.cumsum(keep_i, axis=1) - 1
         base = off_ref[0, :] + cursor_ref[0, :]
@@ -416,7 +546,8 @@ def _compact_stacked_kernel(q_ref, aq_ref, r_ref, th_ref, off_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("nnz", "tq", "bn", "interpret"))
-def snn_compact_stacked(q, aq, r, thresh, offsets, xs, alphas, half_norms, *,
+def snn_compact_stacked(q, aq, r, thresh, offsets, xs, alphas, half_norms,
+                        pq=None, px=None, *,
                         nnz: int, tq: int = 128, bn: int = 512,
                         interpret: bool = True):
     """Pass-2 compaction over a (S, n_pad, d) segment stack in ONE launch.
@@ -431,9 +562,14 @@ def snn_compact_stacked(q, aq, r, thresh, offsets, xs, alphas, half_norms, *,
     """
     m, d = q.shape
     n_seg, n, _ = xs.shape
-    grid, in_specs = _stacked_grid_specs(n_seg, m, n, d, tq, bn)
+    ke = 0 if pq is None else pq.shape[0]
+    grid, in_specs = _stacked_grid_specs(n_seg, m, n, d, tq, bn, ke)
     in_specs = in_specs[:4] \
         + [pl.BlockSpec((1, tq), lambda s, qi, bi: (s, qi))] + in_specs[4:]
+    args = (q, aq[None, :], r[None, :], thresh[None, :], offsets, xs,
+            alphas, half_norms)
+    if ke:
+        args += (pq, px)
     out_idx, out_dh = pl.pallas_call(
         _compact_stacked_kernel,
         grid=grid,
@@ -447,6 +583,5 @@ def snn_compact_stacked(q, aq, r, thresh, offsets, xs, alphas, half_norms, *,
             dimension_semantics=(pltpu.ARBITRARY, pltpu.ARBITRARY,
                                  pltpu.ARBITRARY)),
         interpret=interpret,
-    )(q, aq[None, :], r[None, :], thresh[None, :], offsets, xs,
-      alphas, half_norms)
+    )(*args)
     return out_idx[0], out_dh[0]

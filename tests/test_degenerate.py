@@ -179,3 +179,90 @@ def test_nmi_hand_computed():
 
     # empty input is defined as 0
     assert nmi(np.zeros(0, int), np.zeros(0, int)) == 0.0
+
+
+# --------------------------------------------------------------------------- #
+# multi-component box prune: degenerate bases must degrade to a LOOSE window   #
+# --------------------------------------------------------------------------- #
+def _assert_all_csr_variants_exact(index, q, radius):
+    """Looped/packed x oracle/interpret x plain/mixed all match the host sets.
+
+    The k-dim box bound is only a prune; whatever the basis looks like
+    (rank-deficient, zero, duplicated directions) the result sets must stay
+    exactly the brute host answer.
+    """
+    want = [set(g.tolist())
+            for g in query_radius_batch(index, q, radius,
+                                        return_distance=False)]
+    for packed in (False, True):
+        for up in (None, True):
+            for mixed in (False, True):
+                csr = query_radius_csr(index, q, radius,
+                                       return_distance=False, packed=packed,
+                                       use_pallas=up, mixed=mixed)
+                got = [set(csr.row(i).tolist()) for i in range(csr.m)]
+                assert got == want, (packed, up, mixed)
+
+
+def test_more_components_than_dimensions():
+    """n_components = 5 on d = 2 data: deflation runs out of directions; the
+    surplus rows must still be valid (norm <= 1) Cauchy–Schwarz directions."""
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(60, 2)).astype(np.float32)
+    index = build_index(x, n_components=5)
+    assert index.vs.shape[0] >= 1
+    assert (np.linalg.norm(index.vs.astype(np.float64), axis=1) <= 1 + 1e-6).all()
+    _assert_all_csr_variants_exact(index, x[:9], 0.7)
+
+
+def test_single_component_build_matches_legacy():
+    """n_components = 1 is exactly the historical single-direction index."""
+    rng = np.random.default_rng(4)
+    x = rng.normal(size=(50, 5)).astype(np.float32)
+    index = build_index(x, n_components=1)
+    assert index.vs.shape[0] == 1 and index.projs.shape[0] == 1
+    from repro.core.snn import query_extra_projections
+    assert query_extra_projections(index, x) is None
+    _assert_all_csr_variants_exact(index, x[:8], 1.2)
+
+
+def test_multicomponent_zero_variance():
+    """All-identical points: every deflated direction is zero; the box bound
+    collapses to [0, 0] per component and must still admit everything."""
+    x = np.full((12, 4), -1.5, np.float32)
+    index = build_index(x, n_components=3)
+    assert np.isfinite(index.vs).all() and np.isfinite(index.projs).all()
+    _assert_all_csr_variants_exact(index, x[:5], 1e-9)
+
+
+def test_multicomponent_duplicates_and_line():
+    """Heavy duplicates and exactly rank-1 data: the second/third principal
+    directions are numerically meaningless — the prune must stay a superset."""
+    rng = np.random.default_rng(5)
+    base = rng.normal(size=(6, 3)).astype(np.float32)
+    dup = base[rng.integers(0, 6, 64)]
+    index = build_index(dup, n_components=3)
+    _assert_all_csr_variants_exact(index, dup[:7], 0.9)
+
+    t = rng.normal(size=(40, 1)).astype(np.float32)
+    v = rng.normal(size=(1, 3)).astype(np.float32)
+    line = t @ v
+    index2 = build_index(line, n_components=3)
+    _assert_all_csr_variants_exact(index2, line[:7], 0.8)
+
+
+def test_multicomponent_tiny_and_empty():
+    """n = 0 and n = 1 with a multi-component request: build succeeds, every
+    engine variant agrees with the host path."""
+    empty = build_index(np.zeros((0, 3), np.float32), n_components=4)
+    q = np.ones((2, 3), np.float32)
+    csr = query_radius_csr(empty, q, 0.5, return_distance=False)
+    assert csr.m == 2 and csr.nnz == 0
+
+    one = build_index(np.full((1, 3), 2.0, np.float32), n_components=4)
+    _assert_all_csr_variants_exact(one, q, 10.0)
+
+    zero_d = build_index(np.zeros((5, 0), np.float32), n_components=4)
+    got = query_radius_batch(zero_d, np.zeros((2, 0), np.float32), 0.5,
+                             return_distance=False)
+    assert all(set(g.tolist()) == {0, 1, 2, 3, 4} for g in got)

@@ -1,0 +1,277 @@
+"""Exactness-certificate harness for the pruned + mixed-precision engine.
+
+PR 6 adds two accelerations that must not move a single bit of output: the
+k-dim box prune (extra principal-direction projections tighten the candidate
+set before any distance) and the certified bf16 count pass (pass 1 in reduced
+precision under a conservative error margin, margin-band candidates
+re-verified in float32).  Both are *supersets-then-filter* constructions, so
+the certificate is testable: every engine variant — looped/packed x
+oracle/interpret x plain/mixed — must be bit-identical to a float64 host
+oracle that knows nothing about windows, boxes or margins.
+
+The oracle reads the SAME stored float32 index rows and the SAME float32
+centered queries the engine sees (so the two sides differ only in arithmetic
+precision) and keeps ``||x - q||^2 <= r^2`` in float64.  Bit-identity between
+a float32 predicate and a float64 oracle is only meaningful when no rounding
+can flip a decision, so the planted datasets are built for it:
+
+* euclidean / mips — integer lattices (symmetric, so centering is exact) with
+  boundary shells at exactly-representable ``r^2``; every dot product is
+  exact in BOTH precisions, including points exactly ON the radius boundary;
+* cosine — ``+-e_i`` bases: normalization, centering and all cosines exact;
+* angular — arccos is transcendental, so boundary plants use ``+-1e-3`` rad
+  nudges (far beyond float32 rounding) instead of exact hits;
+* ulp plants — boundary points pushed a few float32 ulps in/out of the ball.
+
+Within each case all eight variants must also agree bitwise with each other
+on distances (they share one float32 distance pipeline by construction).
+"""
+import numpy as np
+import pytest
+from _hyp_compat import given, settings, st
+
+from repro.core import engine as _engine
+from repro.core import snn as _snn
+from repro.kernels import ops as _ops
+
+# full-lane suite: excluded from the fail-fast CI smoke lane
+pytestmark = pytest.mark.slow
+
+# (packed, use_pallas, mixed): looped/packed executor x dense-oracle/interpret
+# kernels x f32/certified-bf16 count pass
+VARIANTS = [(packed, up, mixed)
+            for packed in (False, True)
+            for up in (None, True)
+            for mixed in (False, True)]
+
+
+def _oracle_csr(index, q, radius):
+    """Float64 host oracle: membership by ``||x - q||^2 <= r^2``, no pruning.
+
+    Inputs are the index's stored float32 rows and the float32 centered
+    queries (identical bits to what the engine consumes); only the distance
+    arithmetic and the comparison run in float64.  Row order follows the
+    engine contract: ascending sorted-database position, mapped to original
+    ids through ``index.order``.
+    """
+    q2 = np.atleast_2d(np.asarray(q))
+    xq, r = index.prepare_queries(q2, radius)
+    xq64 = np.asarray(xq, np.float64)
+    xs64 = np.asarray(index.xs, np.float64)
+    order = np.asarray(index.order)
+    indptr = np.zeros(xq64.shape[0] + 1, np.int64)
+    rows = []
+    for i in range(xq64.shape[0]):
+        diff = xs64 - xq64[i]
+        sq = np.einsum("ij,ij->i", diff, diff)
+        sel = np.nonzero(sq <= r[i] * r[i])[0]
+        rows.append(order[sel])
+        indptr[i + 1] = indptr[i] + sel.size
+    ids = np.concatenate(rows) if rows else np.zeros(0, np.int64)
+    return indptr, ids.astype(np.int64)
+
+
+def _assert_bit_identical(index, q, radius, block=512):
+    """Every engine variant == the f64 oracle; distances agree bit-for-bit."""
+    want_indptr, want_ids = _oracle_csr(index, q, radius)
+    base_d = None
+    for packed, up, mixed in VARIANTS:
+        res = _snn.query_radius_csr(index, q, radius, packed=packed,
+                                    use_pallas=up, mixed=mixed, block=block)
+        tag = (packed, up, mixed)
+        assert np.array_equal(res.indptr, want_indptr), tag
+        assert np.array_equal(res.indices, want_ids), tag
+        d = np.asarray(res.distances)
+        if base_d is None:
+            base_d = d
+        else:
+            assert np.array_equal(base_d, d), tag
+    return want_indptr, want_ids
+
+
+def _nudge(vec, i, ulps):
+    """Push coordinate ``i`` by ``ulps`` float32 ulps (sign gives direction)."""
+    v = np.asarray(vec, np.float32).copy()
+    x = np.float32(v[i])
+    toward = np.float32(np.sign(ulps) * np.inf)
+    for _ in range(abs(int(ulps))):
+        x = np.nextafter(x, toward, dtype=np.float32)
+    v[i] = x
+    return v
+
+
+def _sym(points):
+    """Symmetric completion: every point with its negation => exact zero mean."""
+    p = np.asarray(points, np.float32)
+    return np.concatenate([p, -p], axis=0)
+
+
+# --------------------------------------------------------------------------- #
+# euclidean: exact integer boundary shells + ulp plants                        #
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_euclidean_exact_boundary_shell(dtype):
+    # symmetric lattice => mu == 0 exactly; every half-norm / dot / threshold
+    # is an exact small integer (or half-integer) in float32 AND float64
+    shell = [(3, 4, 0), (0, 3, 4), (4, 0, 3), (5, 0, 0), (0, 0, 5)]
+    inner = [(1, 1, 1), (2, 2, 0), (1, 0, 2)]
+    outer = [(6, 0, 0), (4, 4, 4), (0, 7, 1)]
+    x = _sym(shell + inner + outer)
+    index = _snn.build_index(x, dtype=dtype)
+    q = np.array([[0, 0, 0], [1, 0, 0], [2, 2, 2]], np.float32)
+    # r = 5: the whole 3-4-5 shell sits exactly ON the boundary of query 0
+    indptr, ids = _assert_bit_identical(index, q, 5.0)
+    n_on_shell = 2 * len(shell)
+    assert indptr[1] - indptr[0] == n_on_shell + 2 * len(inner)
+    # nudged radii bracket the shell: every boundary point flips sets
+    below, _ = _oracle_csr(index, q, 5.0 * (1.0 - 1e-5))
+    above, _ = _oracle_csr(index, q, 5.0 * (1.0 + 1e-5))
+    assert above[1] - below[1] == n_on_shell
+    _assert_bit_identical(index, q, 5.0 * (1.0 - 1e-5))
+    _assert_bit_identical(index, q, 5.0 * (1.0 + 1e-5))
+
+
+def test_euclidean_ulp_plants():
+    # boundary points pushed a few float32 ulps off the r = 5 sphere around
+    # the origin query; the f64 oracle and every f32 engine variant must make
+    # the same call on each
+    plants = [_nudge((3, 4, 0), 0, +4), _nudge((3, 4, 0), 0, -4),
+              _nudge((0, 3, 4), 2, +4), _nudge((0, 3, 4), 2, -4),
+              _nudge((5, 0, 0), 0, +4), _nudge((5, 0, 0), 0, -4)]
+    anchors = [(1, 1, 0), (2, 0, 1), (6, 1, 0)]
+    x = _sym(np.concatenate([np.stack(plants),
+                             np.asarray(anchors, np.float32)]))
+    index = _snn.build_index(x)
+    q = np.zeros((1, 3), np.float32)
+    indptr, ids = _assert_bit_identical(index, q, 5.0)
+    # exactly half the plants (the inward nudges, + their negations) are in
+    assert indptr[1] == 2 * 3 + 2 * 2  # 3 inward plant pairs + 2 anchor pairs
+
+
+# --------------------------------------------------------------------------- #
+# cosine: +-e_i bases, orthogonal points exactly on the radius-1 boundary      #
+# --------------------------------------------------------------------------- #
+def test_cosine_exact_orthogonal_boundary():
+    d = 6
+    x = _sym(7.0 * np.eye(d, dtype=np.float32))  # normalization is exact
+    index = _snn.build_index(x, metric="cosine")
+    q = 3.0 * np.eye(d, dtype=np.float32)[:2]
+    # cosine distance 1 - cos: +e_i itself 0, orthogonal 1 (boundary), -e_i 2
+    indptr, ids = _assert_bit_identical(index, q, 1.0)
+    assert np.all(np.diff(indptr) == 1 + 2 * (d - 1))
+    ip2, _ = _assert_bit_identical(index, q, 1.0 - 1e-6)
+    assert np.all(np.diff(ip2) == 1)  # only the aligned vector survives
+    ip3, _ = _assert_bit_identical(index, q, 2.0 + 1e-6)
+    assert np.all(np.diff(ip3) == 2 * d)  # everything, antipode included
+
+
+# --------------------------------------------------------------------------- #
+# mips: Pythagorean lift, exact inner-product threshold                        #
+# --------------------------------------------------------------------------- #
+def test_mips_exact_inner_product_boundary():
+    # norms {3, 4, 5, 0} with xi = 5: lift coordinates sqrt(25 - ||p||^2) are
+    # the exact integers {4, 3, 0, 5}; their mean over the 8 symmetric points
+    # is exactly 3.0, so centering keeps every coordinate an exact integer
+    x = _sym([(3, 0), (0, 4), (5, 0), (0, 0)])
+    index = _snn.build_index(x, metric="mips")
+    assert index.xi == 5.0
+    q = np.array([[3, 0]], np.float32)
+    # p.q >= 9 maps to r^2 = xi^2 + ||q||^2 - 2*9 = 16, an exact square; the
+    # point (3,0) sits exactly on the boundary (p.q == 9), (5,0) is inside
+    indptr, ids = _assert_bit_identical(index, q, 9.0)
+    assert indptr[1] == 2 and set(ids[:2].tolist()) == {0, 2}
+    ip2, ids2 = _assert_bit_identical(index, q, 9.0 + 1e-4)
+    assert ip2[1] == 1 and ids2[0] == 2  # boundary point drops out
+    ip3, _ = _assert_bit_identical(index, q, 9.0 - 1e-4)
+    assert ip3[1] == 2
+
+
+# --------------------------------------------------------------------------- #
+# angular: transcendental boundary => margin plants only                       #
+# --------------------------------------------------------------------------- #
+def test_angular_margin_plants():
+    theta = 0.8
+    margins = [-1e-3, 1e-3]
+    angles = [theta + m for m in margins] + [0.0, 0.3, 1.4, 2.0, 2.8]
+    emb = np.zeros((len(angles), 4), np.float32)
+    emb[:, 0] = np.cos(angles)
+    emb[:, 1] = np.sin(angles)
+    index = _snn.build_index(5.0 * emb, metric="angular")
+    q = np.zeros((1, 4), np.float32)
+    q[0, 0] = 2.0
+    indptr, ids = _assert_bit_identical(index, q, theta)
+    # inside: theta - 1e-3, 0.0, 0.3; outside: theta + 1e-3 and beyond
+    assert indptr[1] == 3 and set(ids.tolist()) == {0, 2, 3}
+
+
+# --------------------------------------------------------------------------- #
+# property sweep: random integer lattices, exact in both precisions            #
+# --------------------------------------------------------------------------- #
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n=st.integers(2, 60),
+       d=st.integers(1, 6), r=st.sampled_from([1.0, 1.5, 2.0, 2.5, 3.0]))
+def test_property_lattice_bit_identity(seed, n, d, r):
+    # integer data, symmetric completion, exactly-representable r and r^2:
+    # every dhalf/thresh is exact in float32 and float64, so boundary
+    # coincidences (frequent on a lattice) are decided identically — any
+    # divergence is an engine bug, not a rounding ambiguity
+    rng = np.random.default_rng(seed)
+    pts = rng.integers(-4, 5, size=(n, d)).astype(np.float32)
+    anchors = 2.0 * np.eye(d, dtype=np.float32)  # full rank: keeps v1 generic
+    x = _sym(np.concatenate([pts, anchors]))
+    q = rng.integers(-4, 5, size=(4, d)).astype(np.float32)
+    index = _snn.build_index(x)
+    _assert_bit_identical(index, q, float(r))
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 10 ** 6))
+def test_property_lattice_multisegment_vector_radius(seed):
+    # per-query radius vectors through a multi-segment pack (block=64 splits
+    # the 160-row lattice into several segments, exercising the live-segment
+    # prune + candidate-interval oracle across segment boundaries)
+    rng = np.random.default_rng(seed)
+    pts = rng.integers(-6, 7, size=(80, 4)).astype(np.float32)
+    x = _sym(pts)
+    q = rng.integers(-6, 7, size=(7, 4)).astype(np.float32)
+    radius = rng.choice([1.0, 1.5, 2.0, 2.5, 3.0, 4.0], size=7)
+    index = _snn.build_index(x)
+    _assert_bit_identical(index, q, radius, block=64)
+
+
+# --------------------------------------------------------------------------- #
+# counts-parity regression: run_counts_packed == pass 1 of run_csr_packed      #
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("use_pallas", [None, True])
+@pytest.mark.parametrize("mixed", [False, True])
+def test_counts_parity_with_csr_pass1(use_pallas, mixed):
+    # the kNN expansion loop trusts run_counts_packed to predict exactly what
+    # the final count->compact will emit; under the new box bound + bf16
+    # margin both entries must keep evaluating the identical predicate
+    # pipeline — counts bitwise equal to the CSR row lengths
+    rng = np.random.default_rng(7)
+    x = rng.normal(size=(600, 10)).astype(np.float32)
+    x[:, 4:] *= 0.05  # low intrinsic dimension: the box prune actually bites
+    index = _snn.build_index(x)
+    pack = _engine.pack_from_index(index, block=128)
+    q = rng.normal(size=(33, 10)).astype(np.float32)
+    radius = rng.uniform(0.3, 1.5, size=33)
+    xq, aq, r32, thresh, _ = _snn.prepare_query_predicates(index, q, radius)
+    qp, aqp, rp, thp, m = _ops.pad_queries(xq, aq, r32, thresh, tq=64)
+    pq = _snn.query_extra_projections(index, xq)
+    assert pq is not None and pack.ke > 0  # the new path is actually on
+    pqp = _ops.pad_components(pq, qp.shape[0])
+    indptr = _engine.run_csr_packed(pack, qp, aqp, rp, thp, m, query_tile=64,
+                                    use_pallas=use_pallas, pq=pqp,
+                                    mixed=mixed)[0]
+    counts = _engine.run_counts_packed(pack, qp, aqp, rp, thp, m,
+                                       query_tile=64, use_pallas=use_pallas,
+                                       pq=pqp, mixed=mixed)
+    assert np.array_equal(np.asarray(counts), np.diff(indptr))
+    # and the no-projection legacy call still agrees with its own pass 1
+    indptr0 = _engine.run_csr_packed(pack, qp, aqp, rp, thp, m, query_tile=64,
+                                     use_pallas=use_pallas)[0]
+    counts0 = _engine.run_counts_packed(pack, qp, aqp, rp, thp, m,
+                                        query_tile=64, use_pallas=use_pallas)
+    assert np.array_equal(np.asarray(counts0), np.diff(indptr0))
+    assert np.array_equal(np.diff(indptr0), np.diff(indptr))
