@@ -9,12 +9,18 @@ Two sections, both recorded into ``BENCH_serving.json``:
   execution per distinct radius — reconstructed here as the baseline),
   with `engine.DISPATCH_STATS` deltas recorded alongside wall time: the
   launch count is the thing the refactor collapses from O(R) to O(1).
+* **serving-varying** — a stream of *varying* batch sizes through the exact
+  CSR front-end, bucketed geometric-ladder padding vs exact-multiple padding.
+  The bucketed stream compiles O(log m_max) engine executables (measured by
+  the registry's launch-signature accounting, `DISPATCH_STATS.jit_compiles`)
+  while exact padding compiles one per distinct padded size — the p99
+  latency gap is the cost of those mid-stream XLA compiles.
 * **knn** — `core.knn.query_knn` (seed + count-expand + one compact) vs
   `baselines.KDTree.query_knn` (branch-and-bound on the median-split tree),
   with an in-bench exactness cross-check — speed is never traded for
   correctness.
 
-`run` executes both sections; `run_serving` / `run_knn` are the
+`run` executes all sections; `run_serving` / `run_knn` are the
 `benchmarks.run` suite entries and merge their cells into the shared JSON,
 so CI lanes can run either alone.
 """
@@ -22,12 +28,15 @@ from __future__ import annotations
 
 import json
 import os
+import time
 
 import numpy as np
 
 from repro.configs.snn_default import SNNConfig
 from repro.core import KDTree, build_index, query_knn
+from repro.core import snn as _snn
 from repro.data.pipeline import make_uniform
+from repro.kernels import registry as _registry
 from repro.serving.server import Request, SNNServer
 
 from .common import dispatch_counts, row, timeit
@@ -92,6 +101,82 @@ def _serving_cell(n: int, d: int, batch: int, record: list) -> dict:
 
 
 # --------------------------------------------------------------------------- #
+# serving-varying section: bucketed shape polymorphism under dynamic batching  #
+# --------------------------------------------------------------------------- #
+def _varying_cell(n: int, d: int, steps: int, m_max: int,
+                  record: list) -> dict:
+    data = make_uniform(n, d, seed=4)
+    # n_components=1 => no extra box projections => the engine runs the
+    # full-batch filter (dense oracle on CPU, stacked kernels on device),
+    # where the padded query-batch shape IS the executable's compile key.
+    # The kq>0 oracle path tiles queries at a fixed size instead, so batch
+    # bucketing is a no-op there by construction.
+    index = build_index(data, n_components=1)
+    rng = np.random.default_rng(5)
+    warm_sizes = rng.integers(1, m_max + 1, size=steps)
+    meas_sizes = rng.integers(1, m_max + 1, size=steps)
+
+    def batch(m):
+        return rng.random((int(m), d)).astype(np.float32)
+
+    warm_q = [batch(m) for m in warm_sizes]
+    meas_q = [batch(m) for m in meas_sizes]
+    tag = f"n{n}/d{d}/steps{steps}/mmax{m_max}"
+
+    # warm each stream on `steps` sizes, then measure `steps` FRESH sizes:
+    # the bucketed server's ladder is saturated after warmup (zero compiles
+    # in the measured window, forever), while exact-multiple padding keeps
+    # meeting novel padded sizes — the steady-state serving comparison
+    out = {}
+    for name, bucket in (("bucketed", True), ("exact_pad", False)):
+        _registry.reset_compile_counts()
+        warm_stats: dict = {}
+        with dispatch_counts(warm_stats):
+            for q in warm_q:
+                _snn.query_radius_csr(index, q, 0.4, bucket=bucket)
+        stats: dict = {}
+        lat = []
+        with dispatch_counts(stats):
+            for q in meas_q:
+                t0 = time.perf_counter()
+                _snn.query_radius_csr(index, q, 0.4, bucket=bucket)
+                lat.append(time.perf_counter() - t0)
+        lat = np.asarray(lat)
+        out[name] = {
+            "stats": stats,
+            "warm_compiles": warm_stats["jit_compiles"],
+            "p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3),
+            "mean_s": float(lat.mean()),
+            "signatures": _registry.compile_counts(),
+        }
+        record.append(row(
+            f"serving/varying_{name}/{tag}", out[name]["mean_s"],
+            f"p99_ms={out[name]['p99_ms']:.2f};"
+            f"jit_compiles={stats['jit_compiles']}"
+            f"(+{warm_stats['jit_compiles']} warmup)"))
+
+    # the ladder bound the tentpole claims — over warmup AND measurement:
+    # ceil(log2(m_max / tq)) + 2
+    bound = int(np.ceil(np.log2(max(m_max, 128) / 128))) + 2
+    sig_b = out["bucketed"]["signatures"]
+    ladder_ok = all(c <= (bound if "compact" not in op else 4 * bound)
+                    for op, c in sig_b.items())
+    return {
+        "n": n, "d": d, "steps": steps, "m_max": m_max,
+        "latency_ms": {name: {"p50": v["p50_ms"], "p99": v["p99_ms"]}
+                       for name, v in out.items()},
+        "dispatch": {name: v["stats"] for name, v in out.items()},
+        "compile_signatures": {name: v["signatures"]
+                               for name, v in out.items()},
+        "compile_bound": bound,
+        "ladder_ok": ladder_ok,
+        "varying_p99_speedup": out["exact_pad"]["p99_ms"]
+        / max(out["bucketed"]["p99_ms"], 1e-12),
+    }
+
+
+# --------------------------------------------------------------------------- #
 # knn section                                                                  #
 # --------------------------------------------------------------------------- #
 def _knn_cell(n: int, d: int, m: int, k: int, record: list) -> dict:
@@ -149,6 +234,15 @@ def run_serving(full: bool = False, out_json: str = OUT_JSON) -> list[str]:
             else [(100_000, 16, 256), (250_000, 32, 512)])
     cells = [_serving_cell(n, d, b, rows) for n, d, b in grid]
     _merge_payload(cells, "serving", full, out_json)
+    # m_max >> tq (128): exact padding sees up to m_max/128 distinct padded
+    # shapes over the stream, the ladder sees log2(m_max/128) + 1.  Small
+    # n keeps per-call work below one XLA compile — the latency-critical
+    # regime the ladder exists for (on accelerators the kernels' window
+    # prune skips padding blocks, so the regime covers large n too)
+    vgrid = ([(512, 16, 50, 4096)] if not full
+             else [(2_048, 16, 64, 8192)])
+    vcells = [_varying_cell(n, d, s, m, rows) for n, d, s, m in vgrid]
+    _merge_payload(vcells, "serving-varying", full, out_json)
     return rows
 
 

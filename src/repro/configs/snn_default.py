@@ -24,6 +24,14 @@ class SNNConfig:
                                     # stacked launch per pass, plan reused
                                     # across requests of an index generation);
                                     # False loops one launch per segment
+    serve_bucket: bool = True       # pad serving batches onto the geometric
+                                    # query ladder (ops.bucket_rows): dynamic
+                                    # batch sizes compile O(log m) engine
+                                    # executables instead of one per size
+    backend: str | None = None      # kernel backend name (kernels.registry:
+                                    # "pallas-tpu" | "pallas-gpu" | "oracle");
+                                    # None picks per-platform, SNN_BACKEND
+                                    # env overrides
     # streaming (LSM) index: appends become sorted delta segments on frozen
     # mu/v1; deltas merge into the base past delta_merge_ratio × base rows or
     # max_delta_segments; a full re-index (fresh mu/v1/xi) only happens once

@@ -59,6 +59,7 @@ import numpy as np
 
 from ..kernels import ops as _ops
 from ..kernels import ref as _ref
+from ..kernels import registry as _registry
 
 # Padding rows carry alpha = half_norm = +BIG; anything above this threshold
 # is sentinel, not data (used when recovering a segment's real alpha range).
@@ -74,7 +75,12 @@ class DispatchStats(threading.local):
     ``kernel_launches`` counts device computations dispatched (Pallas kernel
     or jitted oracle evaluations); ``host_transfers`` counts device->host
     materializations (``np.asarray`` of a device array, including the
-    scalar pass-boundary sync).  `benchmarks.common.dispatch_counts` reads
+    scalar pass-boundary sync); ``jit_compiles`` counts NEW kernel launch
+    signatures — (backend, op, shapes, static args) keys never seen before
+    in this process, i.e. launches that forced an XLA compile
+    (`kernels.registry.note_launch_signature`); ``bytes_planned`` counts
+    bytes accounted by newly built static `MemoryPlan`s (one per
+    (pack epoch, query bucket)).  `benchmarks.common.dispatch_counts` reads
     these to make packed-vs-looped overhead visible in the trajectory.
     Per-thread (``threading.local``): the engine is queried concurrently
     (streaming/serving), and cross-thread increments would corrupt a
@@ -84,17 +90,29 @@ class DispatchStats(threading.local):
     def __init__(self) -> None:
         self.kernel_launches = 0
         self.host_transfers = 0
+        self.jit_compiles = 0
+        self.bytes_planned = 0
 
     def reset(self) -> None:
         self.kernel_launches = 0
         self.host_transfers = 0
+        self.jit_compiles = 0
+        self.bytes_planned = 0
 
     def snapshot(self) -> dict:
         return {"kernel_launches": self.kernel_launches,
-                "host_transfers": self.host_transfers}
+                "host_transfers": self.host_transfers,
+                "jit_compiles": self.jit_compiles,
+                "bytes_planned": self.bytes_planned}
 
 
 DISPATCH_STATS = DispatchStats()
+
+
+def _oracle() -> "_registry.Backend":
+    """The oracle backend — the host-pruned packed paths are numpy-gather
+    code and always evaluate through the jnp reference lane."""
+    return _registry.get_backend("oracle")
 
 
 # --------------------------------------------------------------------------- #
@@ -339,7 +357,7 @@ def run_csr(
     m: int,
     *,
     query_tile: int = 128,
-    use_pallas: bool | None = None,
+    use_pallas: bool | str | None = None,
     memory_budget_mb: float | None = None,
     pq=None,
     mixed: bool = False,
@@ -375,9 +393,12 @@ def run_csr(
     Returns ``(indptr (m+1,) int64, counts (m,) int64, flat_ids (nnz,) int64,
     flat_dh (nnz,) float32)`` where ``flat_ids`` are original row ids in
     segment-major, locally-ascending order.
+
+    ``use_pallas`` is a backend selector (`kernels.registry.resolve`):
+    None = process default, True/False = device kernels / oracle, or a
+    registered backend name (e.g. "pallas-gpu").
     """
-    if use_pallas is None:
-        use_pallas = _ops.on_tpu()
+    backend = _registry.resolve(use_pallas)
     aq64 = np.asarray(aqp, np.float64)[:m]
     r64 = np.asarray(rp, np.float64)[:m]
     budget = (float("inf") if memory_budget_mb is None
@@ -406,21 +427,21 @@ def run_csr(
         if not _window_may_hit(seg, aq64, r64, pq64, qn64):
             continue
         live.append(k)
-        if use_pallas:
+        if backend.device:
             DISPATCH_STATS.kernel_launches += 1
             DISPATCH_STATS.host_transfers += 1
-            per[k] = np.asarray(_ops.snn_count(
+            per[k] = np.asarray(backend.snn_count(
                 qp, aqp, rp, thp, seg.xs, seg.alphas, seg.half_norms,
                 pq_j, _px(seg), tq=query_tile, bn=seg.block,
-                use_pallas=True, mixed=mixed))[:m]
+                mixed=mixed))[:m]
         else:
             # Oracle fast path: one dense filter feeds BOTH passes (counts
             # and scatter); np.nonzero's row-major order IS the CSR order.
             DISPATCH_STATS.kernel_launches += 1
             DISPATCH_STATS.host_transfers += 1
-            dh = np.asarray(_ops.snn_filter(
+            dh = np.asarray(backend.snn_filter(
                 qp, aqp, rp, thp, seg.xs, seg.alphas, seg.half_norms,
-                pq_j, _px(seg), use_pallas=False))[:m]
+                pq_j, _px(seg)))[:m]
             if cached_bytes + dh.nbytes <= budget:
                 cached[k] = dh
                 cached_bytes += dh.nbytes
@@ -444,15 +465,14 @@ def run_csr(
             cached[k] = None
             continue
         seg = segments[k]
-        if use_pallas:
+        if backend.device:
             off_k = jnp.asarray(np.concatenate(
                 [indptr[:-1] + seg_base[k], off_pad]).astype(np.int32))
             DISPATCH_STATS.kernel_launches += 1
             DISPATCH_STATS.host_transfers += 2
-            fi, fd = _ops.snn_compact(
+            fi, fd = backend.snn_compact(
                 qp, aqp, rp, thp, off_k, seg.xs, seg.alphas, seg.half_norms,
-                pq_j, _px(seg), nnz=cap, tq=query_tile, bn=seg.block,
-                use_pallas=True)
+                pq_j, _px(seg), nnz=cap, tq=query_tile, bn=seg.block)
             fi = np.asarray(fi)
             written = fi >= 0
             flat_ids[written] = seg.ids[fi[written]]
@@ -462,9 +482,9 @@ def run_csr(
             if dh is None:  # over-budget segment: identical jitted recompute
                 DISPATCH_STATS.kernel_launches += 1
                 DISPATCH_STATS.host_transfers += 1
-                dh = np.asarray(_ops.snn_filter(
+                dh = np.asarray(backend.snn_filter(
                     qp, aqp, rp, thp, seg.xs, seg.alphas, seg.half_norms,
-                    pq_j, _px(seg), use_pallas=False))[:m]
+                    pq_j, _px(seg)))[:m]
             keep = dh < _ops.BIG
             rows, cols = np.nonzero(keep)
             within = (np.cumsum(keep, axis=1) - 1)[rows, cols]
@@ -481,6 +501,87 @@ def run_csr(
         return indptr, counts, flat_ids[:total], flat_dh[:total]
     # copy out of the reusable scratch at exact size — callers own these
     return indptr, counts, flat_ids[:total].copy(), flat_dh[:total].copy()
+
+
+# --------------------------------------------------------------------------- #
+# Static memory planning                                                       #
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class MemoryPlan:
+    """Static buffer-size ledger for one (pack, query-bucket) combination.
+
+    Every buffer the packed two-pass execution touches is statically sized
+    by the pack geometry (segment count, padded rows, lane width) plus the
+    bucketed query-batch size and the count-pass worst case — so the sizes
+    are derived ONCE per index epoch per bucket instead of re-guessed at
+    runtime by `_FlatScratch`'s grow-only heuristics.  ``buffers`` maps
+    buffer name -> (shape, dtype, nbytes); ``staging_cap`` is the flat CSR
+    staging ceiling (`csr_capacity` of the worst-case survivor count,
+    clamped to `_SCRATCH_CACHE_MAX` — beyond that the engine uses one-off
+    arrays by design).  Totals land in ``DISPATCH_STATS.bytes_planned`` when
+    the plan is first built (`SegmentPack.memory_plan`).
+    """
+
+    m_pad: int
+    query_tile: int
+    buffers: tuple
+    total_bytes: int
+    staging_cap: int
+
+    def reserve(self) -> None:
+        """Pre-grow this thread's flat staging to the plan's ceiling.
+
+        Optional warm-up for latency-critical owners (serving): after this,
+        no steady-state query against the planned pack/bucket ever triggers
+        a staging reallocation in this thread.
+        """
+        if 0 < self.staging_cap <= _SCRATCH_CACHE_MAX:
+            _SCRATCH.take(self.staging_cap)
+
+
+def _build_memory_plan(pack: "SegmentPack", m_pad: int,
+                       query_tile: int) -> MemoryPlan:
+    """Derive every packed-execution buffer size from the pack geometry."""
+    S = pack.n_segments
+    n_pad = pack.n_pad
+    d_pad = int(pack.segments[0].xs.shape[1]) if pack.segments else 0
+    ke = pack.ke
+    n_real = int(sum(s.n for s in pack.segments))
+    bufs: list[tuple] = []
+
+    def add(name, shape, dtype):
+        nbytes = int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize
+        bufs.append((name, tuple(int(v) for v in shape),
+                     np.dtype(dtype).name, int(nbytes)))
+
+    # device-resident pack representations (once per epoch)
+    add("stacked_xs", (S, n_pad, d_pad), np.float32)
+    add("stacked_alphas", (S, n_pad), np.float32)
+    add("stacked_half_norms", (S, n_pad), np.float32)
+    add("stacked_ids", (S, n_pad), np.int64)
+    if ke:
+        add("stacked_projs", (S, ke, n_pad), np.float32)
+    # per-batch query operands at the bucketed size
+    add("queries", (m_pad, d_pad), np.float32)
+    add("query_alpha", (m_pad,), np.float32)
+    add("query_radius", (m_pad,), np.float32)
+    add("query_thresh", (m_pad,), np.float32)
+    if ke:
+        add("query_projs", (ke, m_pad), np.float32)
+    # pass-boundary buffers: counts, device prefix sums, write bases
+    add("counts", (S, m_pad), np.int32)
+    add("indptr", (m_pad + 1,), np.int32)
+    add("offsets", (S, m_pad), np.int32)
+    # flat CSR outputs: worst case = every real row survives for every query
+    nnz_cap = _ops.csr_capacity(m_pad * max(n_real, 0) + 1)
+    add("csr_flat_idx", (nnz_cap,), np.int32)
+    add("csr_flat_dh", (nnz_cap,), np.float32)
+    staging_cap = min(nnz_cap, _SCRATCH_CACHE_MAX)
+    add("csr_staging_ids", (staging_cap,), np.int64)
+    add("csr_staging_dh", (staging_cap,), np.float32)
+    total = sum(b[3] for b in bufs)
+    return MemoryPlan(int(m_pad), int(query_tile), tuple(bufs), int(total),
+                      int(staging_cap))
 
 
 # --------------------------------------------------------------------------- #
@@ -540,6 +641,8 @@ class SegmentPack:
         default=None, repr=False, compare=False)
     _pruned: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
+    _plans: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     @property
     def n_segments(self) -> int:
@@ -574,6 +677,22 @@ class SegmentPack:
                             for s in segments])
             xnm = np.asarray([s.xnorm_max for s in segments], np.float64)
         return cls(segments, lo, hi, block, epoch, ke, plo, phi, xnm)
+
+    def memory_plan(self, m_pad: int, query_tile: int = 128) -> MemoryPlan:
+        """The static `MemoryPlan` for a bucketed batch size (memoized).
+
+        Built once per (pack, bucket) and reused for every batch that pads
+        to the same ``m_pad``; first build accounts its bytes in
+        ``DISPATCH_STATS.bytes_planned``.
+        """
+        key = (int(m_pad), int(query_tile))
+        hit = self._plans.get(key)
+        if hit is not None:
+            return hit
+        plan = _build_memory_plan(self, int(m_pad), int(query_tile))
+        self._plans[key] = plan
+        DISPATCH_STATS.bytes_planned += plan.total_bytes
+        return plan
 
     def stacked(self):
         """(xs (S, n_pad, d), alphas (S, n_pad), half_norms (S, n_pad),
@@ -945,15 +1064,14 @@ def _run_csr_packed_pruned(pack, qp, aqp, rp, thp, m, live_idx, *,
         pq_t, px_t = pq_j[:, t0:t1], jnp.asarray(px_s[:, cand_p])
         DISPATCH_STATS.kernel_launches += 1
         DISPATCH_STATS.host_transfers += 1
-        dh_t = np.asarray(_ops.snn_filter(q_t, aq_t, r_t, th_t, *sub,
-                                          pq_t, px_t, use_pallas=False))[:tm]
+        dh_t = np.asarray(_oracle().snn_filter(q_t, aq_t, r_t, th_t, *sub,
+                                               pq_t, px_t))[:tm]
         keep_t = dh_t < _ops.BIG
         if mixed:
             DISPATCH_STATS.kernel_launches += 1
             DISPATCH_STATS.host_transfers += 1
-            cnt_t = np.asarray(_ops.snn_count(
-                q_t, aq_t, r_t, th_t, *sub, pq_t, px_t,
-                use_pallas=False, mixed=True))[:tm]
+            cnt_t = np.asarray(_oracle().snn_count(
+                q_t, aq_t, r_t, th_t, *sub, pq_t, px_t, mixed=True))[:tm]
         else:
             cnt_t = keep_t.sum(axis=1)
         counts_pad[t0:t0 + tm] = cnt_t
@@ -1016,12 +1134,12 @@ def _run_counts_packed_pruned(pack, qp, aqp, rp, thp, m, live_idx, *,
         t1 = t0 + ptile
         DISPATCH_STATS.kernel_launches += 1
         DISPATCH_STATS.host_transfers += 1
-        counts[t0:t0 + tm] = np.asarray(_ops.snn_count(
+        counts[t0:t0 + tm] = np.asarray(_oracle().snn_count(
             qp[t0:t1], aqp[t0:t1], rp[t0:t1], thp[t0:t1],
             jnp.asarray(xs_s[cand_p]), jnp.asarray(al_s[cand_p]),
             jnp.asarray(hn_s[cand_p]),
             pq_j[:, t0:t1], jnp.asarray(px_s[:, cand_p]),
-            use_pallas=False, mixed=mixed))[:tm]
+            mixed=mixed))[:tm]
     return counts
 
 
@@ -1031,7 +1149,7 @@ def run_csr_packed(
     m: int,
     *,
     query_tile: int = 128,
-    use_pallas: bool | None = None,
+    use_pallas: bool | str | None = None,
     first_seg: int = 0,
     memory_budget_mb: float | None = None,
     pq=None,
@@ -1072,9 +1190,11 @@ def run_csr_packed(
     the packed twins of `run_csr`'s: the prune tightens to the k-dim box
     and — on the oracle path — the dense filter is replaced by per-tile
     candidate gathers (`_run_csr_packed_pruned`), with identical output.
+    ``use_pallas`` is a backend selector (`kernels.registry.resolve`).
     """
-    if use_pallas is None:
-        use_pallas = _ops.on_tpu()
+    backend = _registry.resolve(use_pallas)
+    if pack.segments:
+        pack.memory_plan(int(qp.shape[0]), query_tile)
     kq = 0
     if pq is not None and pack.ke:
         kq = min(pack.ke, int(np.asarray(pq).shape[0]))
@@ -1090,11 +1210,11 @@ def run_csr_packed(
                 np.zeros(0, np.float32))
     L = int(live_idx.size)
 
-    if use_pallas:
+    if backend.device:
         return _execute_stacked(pack, qp, aqp, rp, thp, m, live_idx,
                                 query_tile=query_tile,
                                 pq=None if not kq else jnp.asarray(pq_np),
-                                mixed=mixed)
+                                mixed=mixed, backend=backend)
     if kq:
         if memory_budget_mb is not None:
             rows_all = int(sum(pack.segments[k].xs.shape[0]
@@ -1103,7 +1223,7 @@ def run_csr_packed(
             if query_tile * (rows_all + 1) * 4 > memory_budget_mb * 2**20:
                 return run_csr([pack.segments[k] for k in live_idx],
                                qp, aqp, rp, thp, m, query_tile=query_tile,
-                               use_pallas=False,
+                               use_pallas=backend,
                                memory_budget_mb=memory_budget_mb,
                                pq=jnp.asarray(pq_np), mixed=mixed)
         return _run_csr_packed_pruned(pack, qp, aqp, rp, thp, m, live_idx,
@@ -1116,15 +1236,15 @@ def run_csr_packed(
             and qp.shape[0] * n_live_rows * 4 > memory_budget_mb * 2**20:
         return run_csr([pack.segments[k] for k in live_idx],
                        qp, aqp, rp, thp, m, query_tile=query_tile,
-                       use_pallas=False, memory_budget_mb=memory_budget_mb)
+                       use_pallas=backend, memory_budget_mb=memory_budget_mb)
 
     # ---- pass 1: ONE filter launch over the ragged concatenation ---------
     # evaluated once and reused for the compaction — counts and scatter
     # cannot disagree
     DISPATCH_STATS.kernel_launches += 1
     DISPATCH_STATS.host_transfers += 1
-    dh_np = np.asarray(_ops.snn_filter(qp, aqp, rp, thp, xs_c, al_c, hn_c,
-                                       use_pallas=False))  # zero-copy on CPU
+    dh_np = np.asarray(backend.snn_filter(
+        qp, aqp, rp, thp, xs_c, al_c, hn_c))  # zero-copy on CPU
     keep = dh_np < _ops.BIG
 
     # ---- prefix sums (vectorized; host == device memory on CPU) ----------
@@ -1168,7 +1288,7 @@ def run_counts_packed(
     m: int,
     *,
     query_tile: int = 128,
-    use_pallas: bool | None = None,
+    use_pallas: bool | str | None = None,
     memory_budget_mb: float | None = None,
     pq=None,
     mixed: bool = False,
@@ -1183,10 +1303,12 @@ def run_counts_packed(
     per-query radius vector whose counts satisfy a caller here yields the
     exact same counts inside the final count→compact execution.  That
     contract extends to ``pq``/``mixed``: the same tiles, gathers and count
-    expressions run here as in pass 1 there.
+    expressions run here as in pass 1 there.  ``use_pallas`` is a backend
+    selector (`kernels.registry.resolve`).
     """
-    if use_pallas is None:
-        use_pallas = _ops.on_tpu()
+    backend = _registry.resolve(use_pallas)
+    if pack.segments:
+        pack.memory_plan(int(qp.shape[0]), query_tile)
     kq = 0
     if pq is not None and pack.ke:
         kq = min(pack.ke, int(np.asarray(pq).shape[0]))
@@ -1199,7 +1321,7 @@ def run_counts_packed(
     if live_idx.size == 0:
         return np.zeros(m, np.int64)
 
-    if use_pallas:
+    if backend.device:
         xs, al, hn, _, px = _gather_live_stacked(pack, live_idx,
                                                  with_px=True)
         pq_j = None
@@ -1210,9 +1332,9 @@ def run_counts_packed(
         else:
             px = None
         DISPATCH_STATS.kernel_launches += 1
-        per = _ops.snn_count_stacked(qp, aqp, rp, thp, xs, al, hn, pq_j, px,
-                                     tq=query_tile, bn=pack.block,
-                                     use_pallas=True, mixed=mixed)
+        per = backend.snn_count_stacked(qp, aqp, rp, thp, xs, al, hn,
+                                        pq_j, px, tq=query_tile,
+                                        bn=pack.block, mixed=mixed)
         DISPATCH_STATS.host_transfers += 1
         return np.asarray(per).sum(axis=0)[:m].astype(np.int64)
 
@@ -1231,30 +1353,31 @@ def run_counts_packed(
             seg = pack.segments[k]
             DISPATCH_STATS.kernel_launches += 1
             DISPATCH_STATS.host_transfers += 1
-            counts += np.asarray(_ops.snn_count(
+            counts += np.asarray(backend.snn_count(
                 qp, aqp, rp, thp, seg.xs, seg.alphas, seg.half_norms,
-                tq=query_tile, bn=seg.block, use_pallas=False,
-                mixed=mixed))[:m]
+                tq=query_tile, bn=seg.block, mixed=mixed))[:m]
         return counts
     DISPATCH_STATS.kernel_launches += 1
     DISPATCH_STATS.host_transfers += 1
     if mixed:
-        return np.asarray(_ops.snn_count(
+        return np.asarray(backend.snn_count(
             qp, aqp, rp, thp, xs_c, al_c, hn_c,
-            use_pallas=False, mixed=True))[:m].astype(np.int64)
-    dh = np.asarray(_ops.snn_filter(qp, aqp, rp, thp, xs_c, al_c, hn_c,
-                                    use_pallas=False))[:m]
+            mixed=True))[:m].astype(np.int64)
+    dh = np.asarray(backend.snn_filter(qp, aqp, rp, thp, xs_c, al_c, hn_c))[:m]
     return (dh < _ops.BIG).sum(axis=1).astype(np.int64)
 
 
 def _execute_stacked(pack: SegmentPack, qp, aqp, rp, thp, m: int,
                      live_idx: np.ndarray, *, query_tile: int,
-                     pq=None, mixed: bool = False):
-    """The Pallas executor of `run_csr_packed`: stacked-grid kernels with
+                     pq=None, mixed: bool = False, backend=None):
+    """The device executor of `run_csr_packed`: stacked-grid kernels with
     on-device prefix sums (see `run_csr_packed` docstring).  ``pq`` arrives
     already sliced to the effective component count; the matching stacked
     projections are gathered here.  ``mixed`` applies to pass 1 only —
-    pass 2 always verifies in f32."""
+    pass 2 always verifies in f32.  ``backend`` is the resolved device lane
+    (default: the historical pallas-tpu kernels)."""
+    if backend is None:
+        backend = _registry.get_backend("pallas-tpu")
     xs, al, hn, ids, px = _gather_live_stacked(pack, live_idx, with_px=True)
     kq = 0 if pq is None else int(pq.shape[0])
     if kq:
@@ -1265,9 +1388,9 @@ def _execute_stacked(pack: SegmentPack, qp, aqp, rp, thp, m: int,
 
     # ---- pass 1: ONE stacked count launch --------------------------------
     DISPATCH_STATS.kernel_launches += 1
-    per = _ops.snn_count_stacked(qp, aqp, rp, thp, xs, al, hn, pq, px,
-                                 tq=query_tile, bn=pack.block,
-                                 use_pallas=True, mixed=mixed)
+    per = backend.snn_count_stacked(qp, aqp, rp, thp, xs, al, hn, pq, px,
+                                    tq=query_tile, bn=pack.block,
+                                    mixed=mixed)
 
     # ---- device prefix sums + the one pass-boundary sync -----------------
     DISPATCH_STATS.kernel_launches += 1
@@ -1283,9 +1406,9 @@ def _execute_stacked(pack: SegmentPack, qp, aqp, rp, thp, m: int,
     # ---- pass 2: ONE stacked compaction launch ---------------------------
     cap = _ops.csr_capacity(total)
     DISPATCH_STATS.kernel_launches += 1
-    fi, fd = _ops.snn_compact_stacked(
+    fi, fd = backend.snn_compact_stacked(
         qp, aqp, rp, thp, offsets_dev, xs, al, hn, pq, px,
-        nnz=cap, tq=query_tile, bn=pack.block, use_pallas=True)
+        nnz=cap, tq=query_tile, bn=pack.block)
     DISPATCH_STATS.host_transfers += 2
     fi = np.asarray(fi)[:total]
     if not (fi >= 0).all():
@@ -1303,9 +1426,10 @@ def query_csr(
     return_distance: bool = True,
     *,
     query_tile: int = 128,
-    use_pallas: bool | None = None,
+    use_pallas: bool | str | None = None,
     native: bool = True,
     mixed: bool = False,
+    bucket: bool = False,
 ):
     """Full CSR query over ``segments``: predicates from ``index`` (the owner
     of mu/v1/metric/xi), then `run_csr`, then distance finalization.
@@ -1315,13 +1439,17 @@ def query_csr(
     (single-device, sharded, streaming, serving) routes through.  Extra
     query projections (the k-dim box prune) are derived from ``index`` when
     it carries a multi-component basis; ``mixed`` opts pass 1 into the
-    certified bf16 margin filter.  Both leave results bit-identical.
+    certified bf16 margin filter.  ``bucket`` pads the batch to the
+    geometric query-bucket ladder (`kernels.ops.bucket_rows`) so varying
+    batch sizes reuse O(log m) compiled shapes.  All three leave results
+    bit-identical.
     """
     from . import snn as _snn  # deferred: snn imports this module lazily too
 
     xq, aq, r, th, qsq = _snn.prepare_query_predicates(index, q, radius)
     m = xq.shape[0]
-    qp, aqp, rp, thp, _ = _ops.pad_queries(xq, aq, r, th, tq=query_tile)
+    qp, aqp, rp, thp, _ = _ops.pad_queries(xq, aq, r, th, tq=query_tile,
+                                           bucket=bucket)
     pq = _snn.query_extra_projections(index, xq)
     pqp = None if pq is None else _ops.pad_components(pq, qp.shape[0])
     indptr, counts, ids, dh = run_csr(segments, qp, aqp, rp, thp, m,
@@ -1340,10 +1468,11 @@ def query_csr_packed(
     return_distance: bool = True,
     *,
     query_tile: int = 128,
-    use_pallas: bool | None = None,
+    use_pallas: bool | str | None = None,
     native: bool = True,
     memory_budget_mb: float | None = None,
     mixed: bool = False,
+    bucket: bool = False,
 ):
     """`query_csr` executed through a prebuilt `SegmentPack` plan.
 
@@ -1351,14 +1480,15 @@ def query_csr_packed(
     mu/v1/metric/xi), then `run_csr_packed`, then distance finalization.
     Front-ends that own a long-lived index (streaming snapshots, serving
     generations, graph builds) build the pack once per epoch and route every
-    query batch through here.  ``mixed`` and the index-derived box
-    projections behave as in `query_csr`.
+    query batch through here.  ``mixed``, ``bucket`` and the index-derived
+    box projections behave as in `query_csr`.
     """
     from . import snn as _snn  # deferred: snn imports this module lazily too
 
     xq, aq, r, th, qsq = _snn.prepare_query_predicates(index, q, radius)
     m = xq.shape[0]
-    qp, aqp, rp, thp, _ = _ops.pad_queries(xq, aq, r, th, tq=query_tile)
+    qp, aqp, rp, thp, _ = _ops.pad_queries(xq, aq, r, th, tq=query_tile,
+                                           bucket=bucket)
     pq = _snn.query_extra_projections(index, xq)
     pqp = None if pq is None else _ops.pad_components(pq, qp.shape[0])
     indptr, counts, ids, dh = run_csr_packed(

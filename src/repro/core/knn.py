@@ -135,11 +135,17 @@ def _sample_estimate(parts, xq: np.ndarray, k_eff: np.ndarray,
 
 
 def _count_pass(pack, xq, aq, qsq, r, *, query_tile, use_pallas,
-                memory_budget_mb, pq=None, mixed=False):
-    """One engine count launch for ``xq`` under per-query Euclidean ``r``."""
+                memory_budget_mb, pq=None, mixed=False, bucket=True):
+    """One engine count launch for ``xq`` under per-query Euclidean ``r``.
+
+    Bucketed padding matters most HERE: the expansion loop re-enters with a
+    shrinking active subset each round, and without the ladder every round's
+    batch size would compile a fresh count executable.
+    """
     thresh = ((r * r - qsq) / 2.0).astype(np.float32)
     qp, aqp, rp, thp, m = _ops.pad_queries(xq, aq, r.astype(np.float32),
-                                           thresh, tq=query_tile)
+                                           thresh, tq=query_tile,
+                                           bucket=bucket)
     pqp = None if pq is None else _ops.pad_components(pq, qp.shape[0])
     return _engine.run_counts_packed(pack, qp, aqp, rp, thp, m,
                                      query_tile=query_tile,
@@ -179,10 +185,11 @@ def query_knn(
     native: bool = True,
     block: int = 512,
     query_tile: int = 128,
-    use_pallas: bool | None = None,
+    use_pallas: bool | str | None = None,
     memory_budget_mb: float | None = None,
     max_rounds: int = 100,
     mixed: bool = False,
+    bucket: bool = True,
 ):
     """Exact k nearest neighbors of each query (indices and distances).
 
@@ -196,8 +203,10 @@ def query_knn(
         distance, angle, or inner product for mips — for mips the columns
         descend, largest inner product first); False leaves them as squared
         Euclidean in index space.
-      block / query_tile / use_pallas / memory_budget_mb: engine knobs, as
-        in `snn.query_radius_csr`.
+      block / query_tile / use_pallas / memory_budget_mb / bucket: engine
+        knobs, as in `snn.query_radius_csr` (``bucket`` pads the shrinking
+        expansion-loop batches onto the geometric ladder, so the loop costs
+        O(log m) compiles instead of one per round).
 
     Returns:
       ``indices`` (m, K) int64 with K = max(k): column j is the (j+1)-th
@@ -252,7 +261,7 @@ def query_knn(
                                  use_pallas=use_pallas,
                                  memory_budget_mb=memory_budget_mb,
                                  pq=None if pq is None else pq[:, active],
-                                 mixed=mixed)
+                                 mixed=mixed, bucket=bucket)
             short = counts < k_eff[active]
             if not short.any():
                 break
@@ -274,7 +283,8 @@ def query_knn(
         thresh = ((r_fin * r_fin - qsq32) / 2.0).astype(np.float32)
         thresh[k_eff == 0] = np.float32(-_ops.BIG)
         qp, aqp, rp, thp, _ = _ops.pad_queries(
-            xq, aq, r_fin.astype(np.float32), thresh, tq=query_tile)
+            xq, aq, r_fin.astype(np.float32), thresh, tq=query_tile,
+            bucket=bucket)
         pqp = None if pq is None else _ops.pad_components(pq, qp.shape[0])
         indptr, _, flat_ids, _ = _engine.run_csr_packed(
             pack, qp, aqp, rp, thp, m, query_tile=query_tile,

@@ -430,10 +430,11 @@ def query_radius_csr(
     return_distance: bool = True,
     block: int = 512,
     query_tile: int = 128,
-    use_pallas: bool | None = None,
+    use_pallas: bool | str | None = None,
     native: bool = True,
     packed: bool = True,
     mixed: bool = False,
+    bucket: bool = True,
 ) -> CSRNeighbors:
     """Exact device radius query with CSR output (two passes, no (m, n) array).
 
@@ -464,6 +465,11 @@ def query_radius_csr(
     margin certificate (kernels.ref module docstring); pass 2 stays f32, and
     the engine's pass-1/pass-2 agreement check then *validates* the
     certificate at runtime — the CSR output is bit-identical either way.
+
+    ``bucket=True`` (the default) pads the batch to the geometric bucket
+    ladder (`kernels.ops.bucket_rows`) so a stream of varying batch sizes
+    reuses O(log m) compiled shapes; padding rows match nothing, so results
+    are bit-identical to exact-multiple padding.
     """
     from . import engine as _engine
 
@@ -473,11 +479,11 @@ def query_radius_csr(
                                         return_distance,
                                         query_tile=query_tile,
                                         use_pallas=use_pallas, native=native,
-                                        mixed=mixed)
+                                        mixed=mixed, bucket=bucket)
     seg = _engine.segment_from_index(index, block=block)
     return _engine.query_csr(index, [seg], q, radius, return_distance,
                              query_tile=query_tile, use_pallas=use_pallas,
-                             native=native, mixed=mixed)
+                             native=native, mixed=mixed, bucket=bucket)
 
 
 def csr_finalize(index: SNNIndex, indptr, indices, fd, xq, qsq, counts,

@@ -337,10 +337,11 @@ class StreamingSNNIndex:
     def query_radius_csr(self, q: np.ndarray, radius,
                          return_distance: bool = True, *,
                          query_tile: int = 128,
-                         use_pallas: bool | None = None,
+                         use_pallas: bool | str | None = None,
                          native: bool = True,
                          packed: bool = True,
-                         mixed: bool = False) -> _snn.CSRNeighbors:
+                         mixed: bool = False,
+                         bucket: bool = True) -> _snn.CSRNeighbors:
         """Exact CSR results over base + deltas via the unified engine.
 
         ``radius`` is a scalar or a per-query (m,) vector in the native
@@ -357,15 +358,16 @@ class StreamingSNNIndex:
             return _engine.query_csr_packed(
                 parts[0], plan, q, radius, return_distance,
                 query_tile=query_tile, use_pallas=use_pallas, native=native,
-                mixed=mixed)
+                mixed=mixed, bucket=bucket)
         return _engine.query_csr(parts[0], segs, q, radius, return_distance,
                                  query_tile=query_tile, use_pallas=use_pallas,
-                                 native=native, mixed=mixed)
+                                 native=native, mixed=mixed, bucket=bucket)
 
     def query_knn(self, q: np.ndarray, k, return_distance: bool = True, *,
                   native: bool = True, query_tile: int = 128,
-                  use_pallas: bool | None = None,
-                  memory_budget_mb: float | None = None):
+                  use_pallas: bool | str | None = None,
+                  memory_budget_mb: float | None = None,
+                  bucket: bool = True):
         """Exact k nearest neighbors over base + deltas (`core.knn`).
 
         Runs the per-query radius-expansion search against this snapshot's
@@ -377,7 +379,8 @@ class StreamingSNNIndex:
 
         return _knn.query_knn(self, q, k, return_distance, native=native,
                               query_tile=query_tile, use_pallas=use_pallas,
-                              memory_budget_mb=memory_budget_mb)
+                              memory_budget_mb=memory_budget_mb,
+                              bucket=bucket)
 
     def query_radius_batch(self, q: np.ndarray, radius,
                            return_distance: bool = True,

@@ -1,8 +1,12 @@
-"""Pallas TPU kernels for the perf-critical hot spots.
+"""Pallas kernels for the perf-critical hot spots.
 
-* snn_query     — the paper's pruned distance filter (block-skip + MXU GEMM)
+* snn_query     — the paper's pruned distance filter (block-skip + MXU GEMM),
+                  TPU lane (sequential compact grid + VMEM cursor)
+* snn_query_gpu — the same filter re-orchestrated for Triton's parallel grid
 * embedding_bag — recsys gather+segment-sum (scalar-prefetch indirection)
 
-``ops`` holds the padded/jit public wrappers; ``ref`` the pure-jnp oracles.
+``registry`` holds the backend dispatch registry (the ONE process-wide
+TPU/GPU/oracle decision); ``ops`` the padded/jit public wrappers routing
+through it; ``ref`` the pure-jnp oracles.
 """
-from . import ops, ref  # noqa: F401
+from . import ops, ref, registry  # noqa: F401

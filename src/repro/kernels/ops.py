@@ -1,26 +1,26 @@
-"""Public jit'd wrappers around the Pallas kernels.
+"""Public wrappers around the kernel entry points: padding + dispatch.
 
-These handle padding/alignment and pick Pallas (TPU) vs the jnp oracle (CPU:
-interpret mode is a Python-loop emulator, so the oracle is the fast CPU path;
-tests exercise the kernels in interpret mode explicitly).
+These handle padding/alignment and route every kernel call through the
+backend registry (`kernels.registry`): the process-wide backend decision
+happens exactly once there (TPU Pallas kernels, the GPU Pallas lane, or the
+jnp oracle — on CPU the oracle is the fast path, since interpret mode is a
+Python-loop emulator; tests exercise the kernels in interpret mode
+explicitly via ``use_pallas=True`` / a backend name).
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import ref as _ref
+from . import registry as _registry
 from .embedding_bag import embedding_bag as _bag_kernel
-from .snn_query import (BIG, snn_compact as _compact_kernel,
-                        snn_compact_stacked as _compact_stacked_kernel,
-                        snn_count as _count_kernel,
-                        snn_count_stacked as _count_stacked_kernel,
-                        snn_filter as _filter_kernel)
+from .snn_query import BIG  # noqa: F401  (re-export: the padding sentinel)
+from . import ref as _ref
 
-
-def on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
+# memoized platform probe (kernels.registry owns the decision; this
+# re-export keeps the historical `ops.on_tpu` name importable without a call
+# site — CI lints against new platform-probe calls outside the registry)
+on_tpu = _registry.on_tpu
 
 
 def pad_database(xs, alphas, half_norms, bn: int = 512, lane: int = 128):
@@ -47,17 +47,35 @@ def pad_components(p, to: int, value: float = 0.0):
                               constant_values=np.float32(value)))
 
 
-def pad_queries(q, aq, r, thresh, tq: int = 128, lane: int = 128):
+def bucket_rows(m: int, tq: int = 128) -> int:
+    """The geometric query-bucket ladder: smallest ``tq * 2^i >= m``.
+
+    Mirrors `csr_capacity`'s power-of-two rounding on the query axis: a
+    stream of varying batch sizes pads onto O(log m_max) distinct shapes,
+    so the engine compiles O(log m_max) executables total instead of one
+    per distinct size.  Padding rows carry the match-nothing sentinel, so
+    outputs are bit-identical to multiple-of-``tq`` padding.
+    """
+    cap = tq
+    while cap < m:
+        cap *= 2
+    return cap
+
+
+def pad_queries(q, aq, r, thresh, tq: int = 128, lane: int = 128,
+                bucket: bool = False):
     """Pad queries to tq multiple; padding queries get r=-BIG (match nothing).
 
     ``r``/``thresh`` are per-query (m,) vectors — the kernels' canonical
     radius representation (scalar broadcasting happens upstream, in
     `core.metrics`); padding rows extend them with the match-nothing
     sentinel, so mixed-radius batches need no grouping anywhere downstream.
+    ``bucket=True`` pads to the geometric ladder (`bucket_rows`) instead of
+    the next ``tq`` multiple — same outputs, O(log m) compiled shapes.
     """
     q, aq, r, thresh = map(np.asarray, (q, aq, r, thresh))
     m, d = q.shape
-    mpad = (-m) % tq if m else tq
+    mpad = (bucket_rows(m, tq) - m) if bucket else ((-m) % tq if m else tq)
     dpad = (-d) % lane
     q = np.pad(q, ((0, mpad), (0, dpad)))
     aq = np.pad(aq, (0, mpad))
@@ -67,31 +85,24 @@ def pad_queries(q, aq, r, thresh, tq: int = 128, lane: int = 128):
 
 
 def snn_filter(q, aq, r, thresh, xs, alphas, half_norms, pq=None, px=None, *,
-               tq: int = 128, bn: int = 512, use_pallas: bool | None = None):
+               tq: int = 128, bn: int = 512,
+               use_pallas: bool | str | None = None):
     """Padded-and-dispatched masked distance filter; see kernels.snn_query.
 
     ``pq`` (ke, m) / ``px`` (ke, n) extra projection components enable the
     k-dim box prune (kernels.ref docstring); finite outputs are unchanged.
+    ``use_pallas`` is a backend selector (`kernels.registry.resolve`).
     """
-    if use_pallas is None:
-        use_pallas = on_tpu()
-    if not use_pallas:
-        return _ref.snn_filter_ref(q, aq, r, thresh, xs, alphas, half_norms,
-                                   pq, px)
-    return _filter_kernel(q, aq, r, thresh, xs, alphas, half_norms, pq, px,
-                          tq=tq, bn=bn, interpret=not on_tpu())
+    return _registry.resolve(use_pallas).snn_filter(
+        q, aq, r, thresh, xs, alphas, half_norms, pq, px, tq=tq, bn=bn)
 
 
 def snn_count(q, aq, r, thresh, xs, alphas, half_norms, pq=None, px=None, *,
-              tq: int = 128, bn: int = 512, use_pallas: bool | None = None,
-              mixed: bool = False):
-    if use_pallas is None:
-        use_pallas = on_tpu()
-    if not use_pallas:
-        return _ref.snn_count_ref(q, aq, r, thresh, xs, alphas, half_norms,
-                                  pq, px, mixed=mixed)
-    return _count_kernel(q, aq, r, thresh, xs, alphas, half_norms, pq, px,
-                         tq=tq, bn=bn, interpret=not on_tpu(), mixed=mixed)
+              tq: int = 128, bn: int = 512,
+              use_pallas: bool | str | None = None, mixed: bool = False):
+    return _registry.resolve(use_pallas).snn_count(
+        q, aq, r, thresh, xs, alphas, half_norms, pq, px, tq=tq, bn=bn,
+        mixed=mixed)
 
 
 def round_up(x: int, mult: int) -> int:
@@ -111,69 +122,55 @@ def csr_capacity(total_neighbors: int, lane: int = 128) -> int:
 def snn_compact(q, aq, r, thresh, offsets, xs, alphas, half_norms,
                 pq=None, px=None, *,
                 nnz: int, tq: int = 128, bn: int = 512,
-                use_pallas: bool | None = None):
+                use_pallas: bool | str | None = None):
     """Padded-and-dispatched pass-2 CSR compaction; see kernels.snn_query.
 
     Returns (idx (nnz,) int32 sorted-row positions, dhalf (nnz,) f32); slots
     beyond each query's count hold -1 / +BIG.
     """
-    if use_pallas is None:
-        use_pallas = on_tpu()
-    if not use_pallas:
-        return _ref.snn_compact_ref(q, aq, r, thresh, offsets, xs, alphas,
-                                    half_norms, pq, px, nnz=nnz)
-    return _compact_kernel(q, aq, r, thresh, offsets, xs, alphas, half_norms,
-                           pq, px, nnz=nnz, tq=tq, bn=bn,
-                           interpret=not on_tpu())
+    return _registry.resolve(use_pallas).snn_compact(
+        q, aq, r, thresh, offsets, xs, alphas, half_norms, pq, px,
+        nnz=nnz, tq=tq, bn=bn)
 
 
 def snn_count_stacked(q, aq, r, thresh, xs, alphas, half_norms,
                       pq=None, px=None, *,
                       tq: int = 128, bn: int = 512,
-                      use_pallas: bool | None = None, mixed: bool = False):
+                      use_pallas: bool | str | None = None,
+                      mixed: bool = False):
     """Stacked pass-1: per-(segment, query) counts (S, m) int32, one launch.
 
     ``xs`` (S, n_pad, d), ``alphas``/``half_norms`` (S, n_pad) — a
     `core.engine.SegmentPack`'s live slabs.
     """
-    if use_pallas is None:
-        use_pallas = on_tpu()
-    if not use_pallas:
-        return _ref.snn_count_stacked_ref(q, aq, r, thresh, xs, alphas,
-                                          half_norms, pq, px,
-                                          n_seg=xs.shape[0], mixed=mixed)
-    return _count_stacked_kernel(q, aq, r, thresh, xs, alphas, half_norms,
-                                 pq, px, tq=tq, bn=bn,
-                                 interpret=not on_tpu(), mixed=mixed)
+    return _registry.resolve(use_pallas).snn_count_stacked(
+        q, aq, r, thresh, xs, alphas, half_norms, pq, px, tq=tq, bn=bn,
+        mixed=mixed)
 
 
 def snn_compact_stacked(q, aq, r, thresh, offsets, xs, alphas, half_norms,
                         pq=None, px=None, *,
                         nnz: int, tq: int = 128, bn: int = 512,
-                        use_pallas: bool | None = None):
+                        use_pallas: bool | str | None = None):
     """Stacked pass-2 compaction, one launch over the whole segment stack.
 
     Returns (idx (nnz,) int32 *pack-flat* positions ``s * n_pad + row``,
     dhalf (nnz,) f32); -1 / +BIG in unwritten slots, one trailing trash slot
     (same contract as `snn_compact`).
     """
-    if use_pallas is None:
-        use_pallas = on_tpu()
-    if not use_pallas:
-        return _ref.snn_compact_stacked_ref(q, aq, r, thresh, offsets, xs,
-                                            alphas, half_norms, pq, px,
-                                            n_seg=xs.shape[0], nnz=nnz)
-    return _compact_stacked_kernel(q, aq, r, thresh, offsets, xs, alphas,
-                                   half_norms, pq, px, nnz=nnz, tq=tq, bn=bn,
-                                   interpret=not on_tpu())
+    return _registry.resolve(use_pallas).snn_compact_stacked(
+        q, aq, r, thresh, offsets, xs, alphas, half_norms, pq, px,
+        nnz=nnz, tq=tq, bn=bn)
 
 
-def embedding_bag(ids, table, *, mode: str = "sum", use_pallas: bool | None = None):
+def embedding_bag(ids, table, *, mode: str = "sum",
+                  use_pallas: bool | None = None):
     """EmbeddingBag with -1 padding ids; modes: sum | mean."""
     if use_pallas is None:
-        use_pallas = on_tpu()
+        use_pallas = _registry.jax_backend() == "tpu"
     if use_pallas:
-        out = _bag_kernel(ids, table, interpret=not on_tpu())
+        out = _bag_kernel(ids, table,
+                          interpret=_registry.jax_backend() != "tpu")
     else:
         out = _ref.embedding_bag_ref(ids, table)
     if mode == "mean":

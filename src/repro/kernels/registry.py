@@ -1,0 +1,372 @@
+"""Backend dispatch registry: ONE process-wide decision, six kernel entry points.
+
+The paper's speed claim is that the sorted-window prune maps onto whatever
+dense-compute primitive the hardware offers — so the kernel layer must not be
+hard-wired TPU-Pallas-or-CPU-oracle.  This module is the single place that
+decision lives:
+
+* `Backend` — the protocol every lane implements: ``snn_filter`` /
+  ``snn_count`` / ``snn_compact`` and their ``_stacked`` twins (the six entry
+  points the two-pass CSR engine consumes), plus a ``device`` flag telling
+  the engine which orchestration to run (device two-pass kernels vs the
+  dense-oracle single filter).
+* Three registered lanes:
+    - ``pallas-tpu``  — the TPU kernels of `kernels.snn_query` (sequential
+      compact grid + VMEM cursor; interpret mode off-TPU);
+    - ``pallas-gpu``  — the parallel-grid kernels of `kernels.snn_query_gpu`
+      (Pallas-on-Triton lowering of the same shared ``_tile_body``;
+      interpret mode off-GPU, which is how CPU CI certifies it);
+    - ``oracle``      — the vectorized jnp/numpy references of `kernels.ref`.
+* Selection happens ONCE per process (`default_backend`, lru-cached): the
+  ``SNN_BACKEND`` env var wins, else ``jax.default_backend()`` maps
+  tpu → pallas-tpu, gpu/cuda/rocm → pallas-gpu, anything else → oracle.
+* `resolve` maps the engine's legacy ``use_pallas`` knob onto a backend and
+  is the ONLY dispatch test left in the codebase: ``None`` → the process
+  default, ``True`` → pallas-tpu (interpret off-TPU — the historical
+  "force the kernels" test knob), ``False`` → oracle, a string → that
+  registered lane by name.
+
+Every backend call also records a (backend, op, shape/static-param)
+signature; the first sighting of a signature bumps
+``engine.DISPATCH_STATS.jit_compiles`` — a deterministic proxy for XLA
+recompilation (jax caches compiled executables by exactly these keys), which
+is how the query-bucket ladder's O(log m) compile claim is measured.
+"""
+from __future__ import annotations
+
+import functools
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+
+ENV_VAR = "SNN_BACKEND"
+
+
+@functools.lru_cache(maxsize=1)
+def jax_backend() -> str:
+    """`jax.default_backend()`, queried once per process (it never changes)."""
+    return jax.default_backend()
+
+
+def on_tpu() -> bool:
+    """Memoized "are we on a TPU" probe.
+
+    Kept for the few layers that need the raw platform fact (interpret-mode
+    flags, embedding_bag); engine dispatch goes through `resolve` instead —
+    a CI lint forbids new ``on_tpu()`` call sites outside this module.
+    """
+    return jax_backend() == "tpu"
+
+
+# --------------------------------------------------------------------------- #
+# jit-compile signature accounting                                             #
+# --------------------------------------------------------------------------- #
+_sig_lock = threading.Lock()
+_signatures: dict[str, set] = {}
+
+
+def note_launch_signature(op: str, key: tuple) -> None:
+    """Record one (op, signature) pair; first sighting counts as a compile.
+
+    jax caches compiled executables per (function, input shapes/dtypes,
+    static args) — exactly the key recorded here — so the number of distinct
+    signatures an op has seen equals the number of XLA compiles it caused.
+    The count lands in the caller thread's ``DISPATCH_STATS.jit_compiles``.
+    """
+    with _sig_lock:
+        seen = _signatures.setdefault(op, set())
+        if key in seen:
+            return
+        seen.add(key)
+    from ..core import engine as _engine  # deferred: engine imports kernels
+
+    _engine.DISPATCH_STATS.jit_compiles += 1
+
+
+def compile_counts() -> dict[str, int]:
+    """Distinct launch signatures seen per op since the last reset."""
+    with _sig_lock:
+        return {op: len(s) for op, s in _signatures.items()}
+
+
+def reset_compile_counts() -> None:
+    with _sig_lock:
+        _signatures.clear()
+
+
+def _sig(*arrays, **statics) -> tuple:
+    parts = tuple(None if a is None else (tuple(a.shape), str(a.dtype))
+                  for a in arrays)
+    return parts + tuple(sorted(statics.items()))
+
+
+# --------------------------------------------------------------------------- #
+# The Backend protocol                                                         #
+# --------------------------------------------------------------------------- #
+class Backend:
+    """The six kernel entry points the CSR engine dispatches through.
+
+    ``device=True`` lanes run the two-pass kernel orchestration (count →
+    prefix → compact, no (m, n) intermediate); ``device=False`` lanes are
+    dense oracles where one filter feeds both passes.  All lanes evaluate
+    the same predicate formulas (`kernels.ref` is the single source of
+    truth), so CSR outputs are bit-identical across them — the
+    exactness-certificate suite is the referee.
+    """
+
+    name: str = "abstract"
+    device: bool = False
+
+    # -- looped (single-segment) entry points -------------------------------
+    def snn_filter(self, q, aq, r, thresh, xs, alphas, half_norms,
+                   pq=None, px=None, *, tq: int = 128, bn: int = 512):
+        raise NotImplementedError
+
+    def snn_count(self, q, aq, r, thresh, xs, alphas, half_norms,
+                  pq=None, px=None, *, tq: int = 128, bn: int = 512,
+                  mixed: bool = False):
+        raise NotImplementedError
+
+    def snn_compact(self, q, aq, r, thresh, offsets, xs, alphas, half_norms,
+                    pq=None, px=None, *, nnz: int, tq: int = 128,
+                    bn: int = 512):
+        raise NotImplementedError
+
+    # -- stacked (SegmentPack) entry points ---------------------------------
+    def snn_count_stacked(self, q, aq, r, thresh, xs, alphas, half_norms,
+                          pq=None, px=None, *, tq: int = 128, bn: int = 512,
+                          mixed: bool = False):
+        raise NotImplementedError
+
+    def snn_compact_stacked(self, q, aq, r, thresh, offsets, xs, alphas,
+                            half_norms, pq=None, px=None, *, nnz: int,
+                            tq: int = 128, bn: int = 512):
+        raise NotImplementedError
+
+    def snn_filter_stacked(self, q, aq, r, thresh, xs, alphas, half_norms,
+                           pq=None, px=None, *, tq: int = 128, bn: int = 512):
+        """(m, S * n_pad) masked distances over a (S, n_pad, d) stack.
+
+        Pack-flat columns (``s * n_pad + local_row`` — the stacked compact
+        kernels' id convention).  Implemented once here by flattening the
+        segment axis into rows: every segment is padded to a block multiple,
+        so db blocks never straddle segments and per-block window pruning
+        stays exactly as sharp as the per-segment launches.
+        """
+        S, n_pad, d = xs.shape
+        xs2 = jnp.reshape(xs, (S * n_pad, d))
+        al2 = jnp.reshape(alphas, (S * n_pad,))
+        hn2 = jnp.reshape(half_norms, (S * n_pad,))
+        px2 = None
+        if px is not None:
+            ke = px.shape[1]
+            px2 = jnp.reshape(jnp.transpose(px, (1, 0, 2)), (ke, S * n_pad))
+        return self.snn_filter(q, aq, r, thresh, xs2, al2, hn2, pq, px2,
+                               tq=tq, bn=bn)
+
+    # -- shared helpers -----------------------------------------------------
+    def _note(self, op: str, key: tuple) -> None:
+        note_launch_signature(f"{self.name}:{op}", key)
+
+
+class OracleBackend(Backend):
+    """The vectorized jnp reference lane (`kernels.ref`) — the fast CPU path
+    (Pallas interpret mode is a Python-loop emulator) and the cross-check
+    oracle for both device lanes."""
+
+    name = "oracle"
+    device = False
+
+    def snn_filter(self, q, aq, r, thresh, xs, alphas, half_norms,
+                   pq=None, px=None, *, tq: int = 128, bn: int = 512):
+        self._note("snn_filter", _sig(q, xs, pq))
+        return _ref.snn_filter_ref(q, aq, r, thresh, xs, alphas, half_norms,
+                                   pq, px)
+
+    def snn_count(self, q, aq, r, thresh, xs, alphas, half_norms,
+                  pq=None, px=None, *, tq: int = 128, bn: int = 512,
+                  mixed: bool = False):
+        self._note("snn_count", _sig(q, xs, pq, mixed=mixed))
+        return _ref.snn_count_ref(q, aq, r, thresh, xs, alphas, half_norms,
+                                  pq, px, mixed=mixed)
+
+    def snn_compact(self, q, aq, r, thresh, offsets, xs, alphas, half_norms,
+                    pq=None, px=None, *, nnz: int, tq: int = 128,
+                    bn: int = 512):
+        self._note("snn_compact", _sig(q, xs, pq, nnz=nnz))
+        return _ref.snn_compact_ref(q, aq, r, thresh, offsets, xs, alphas,
+                                    half_norms, pq, px, nnz=nnz)
+
+    def snn_count_stacked(self, q, aq, r, thresh, xs, alphas, half_norms,
+                          pq=None, px=None, *, tq: int = 128, bn: int = 512,
+                          mixed: bool = False):
+        self._note("snn_count_stacked", _sig(q, xs, pq, mixed=mixed))
+        return _ref.snn_count_stacked_ref(q, aq, r, thresh, xs, alphas,
+                                          half_norms, pq, px,
+                                          n_seg=xs.shape[0], mixed=mixed)
+
+    def snn_compact_stacked(self, q, aq, r, thresh, offsets, xs, alphas,
+                            half_norms, pq=None, px=None, *, nnz: int,
+                            tq: int = 128, bn: int = 512):
+        self._note("snn_compact_stacked", _sig(q, xs, pq, nnz=nnz))
+        return _ref.snn_compact_stacked_ref(q, aq, r, thresh, offsets, xs,
+                                            alphas, half_norms, pq, px,
+                                            n_seg=xs.shape[0], nnz=nnz)
+
+
+class TPUPallasBackend(Backend):
+    """The TPU kernels of `kernels.snn_query` (interpret mode off-TPU —
+    the historical ``use_pallas=True`` test knob)."""
+
+    name = "pallas-tpu"
+    device = True
+
+    def __init__(self) -> None:
+        from . import snn_query as _k
+
+        self._k = _k
+        self.interpret = not on_tpu()
+
+    def snn_filter(self, q, aq, r, thresh, xs, alphas, half_norms,
+                   pq=None, px=None, *, tq: int = 128, bn: int = 512):
+        self._note("snn_filter", _sig(q, xs, pq, tq=tq, bn=bn))
+        return self._k.snn_filter(q, aq, r, thresh, xs, alphas, half_norms,
+                                  pq, px, tq=tq, bn=bn,
+                                  interpret=self.interpret)
+
+    def snn_count(self, q, aq, r, thresh, xs, alphas, half_norms,
+                  pq=None, px=None, *, tq: int = 128, bn: int = 512,
+                  mixed: bool = False):
+        self._note("snn_count", _sig(q, xs, pq, tq=tq, bn=bn, mixed=mixed))
+        return self._k.snn_count(q, aq, r, thresh, xs, alphas, half_norms,
+                                 pq, px, tq=tq, bn=bn,
+                                 interpret=self.interpret, mixed=mixed)
+
+    def snn_compact(self, q, aq, r, thresh, offsets, xs, alphas, half_norms,
+                    pq=None, px=None, *, nnz: int, tq: int = 128,
+                    bn: int = 512):
+        self._note("snn_compact", _sig(q, xs, pq, tq=tq, bn=bn, nnz=nnz))
+        return self._k.snn_compact(q, aq, r, thresh, offsets, xs, alphas,
+                                   half_norms, pq, px, nnz=nnz, tq=tq, bn=bn,
+                                   interpret=self.interpret)
+
+    def snn_count_stacked(self, q, aq, r, thresh, xs, alphas, half_norms,
+                          pq=None, px=None, *, tq: int = 128, bn: int = 512,
+                          mixed: bool = False):
+        self._note("snn_count_stacked",
+                   _sig(q, xs, pq, tq=tq, bn=bn, mixed=mixed))
+        return self._k.snn_count_stacked(q, aq, r, thresh, xs, alphas,
+                                         half_norms, pq, px, tq=tq, bn=bn,
+                                         interpret=self.interpret,
+                                         mixed=mixed)
+
+    def snn_compact_stacked(self, q, aq, r, thresh, offsets, xs, alphas,
+                            half_norms, pq=None, px=None, *, nnz: int,
+                            tq: int = 128, bn: int = 512):
+        self._note("snn_compact_stacked",
+                   _sig(q, xs, pq, tq=tq, bn=bn, nnz=nnz))
+        return self._k.snn_compact_stacked(q, aq, r, thresh, offsets, xs,
+                                           alphas, half_norms, pq, px,
+                                           nnz=nnz, tq=tq, bn=bn,
+                                           interpret=self.interpret)
+
+
+class GPUPallasBackend(TPUPallasBackend):
+    """The parallel-grid GPU lane (`kernels.snn_query_gpu`).
+
+    Same shared ``_tile_body`` predicate pipeline, re-orchestrated for
+    Triton's parallel grid semantics (no cross-cell VMEM cursor, no
+    sequential dimension semantics — see the module docstring).  Off-GPU it
+    runs in interpret mode, which is how CPU CI certifies bit-identity.
+    """
+
+    name = "pallas-gpu"
+
+    def __init__(self) -> None:  # noqa: D401 - same wiring, different lane
+        from . import snn_query_gpu as _k
+
+        self._k = _k
+        self.interpret = jax_backend() not in ("gpu", "cuda", "rocm")
+
+
+# --------------------------------------------------------------------------- #
+# Registration + process-wide selection                                        #
+# --------------------------------------------------------------------------- #
+_REGISTRY: dict[str, type] = {
+    "oracle": OracleBackend,
+    "pallas-tpu": TPUPallasBackend,
+    "pallas-gpu": GPUPallasBackend,
+}
+
+# platform names (jax.default_backend() values) and convenience aliases
+_ALIASES = {
+    "tpu": "pallas-tpu",
+    "gpu": "pallas-gpu",
+    "cuda": "pallas-gpu",
+    "rocm": "pallas-gpu",
+    "cpu": "oracle",
+    "numpy": "oracle",
+    "ref": "oracle",
+}
+
+
+def register(name: str, factory: type) -> None:
+    """Add (or override) a backend lane; clears the instance caches."""
+    _REGISTRY[name] = factory
+    _instantiate.cache_clear()
+    default_backend.cache_clear()
+
+
+def available() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+@functools.lru_cache(maxsize=None)
+def _instantiate(canon: str) -> Backend:
+    return _REGISTRY[canon]()
+
+
+def get_backend(name: str) -> Backend:
+    """The (memoized) backend instance registered under ``name``.
+
+    Aliases canonicalize BEFORE the instance cache, so ``"gpu"`` and
+    ``"pallas-gpu"`` share one instance (and one signature namespace).
+    """
+    canon = _ALIASES.get(name, name)
+    if canon not in _REGISTRY:
+        raise ValueError(f"unknown backend {name!r}; "
+                         f"registered: {', '.join(available())}")
+    return _instantiate(canon)
+
+
+@functools.lru_cache(maxsize=1)
+def default_backend() -> Backend:
+    """The ONE process-wide backend decision.
+
+    ``SNN_BACKEND`` (env) overrides; otherwise `jax.default_backend()` maps
+    through the platform aliases (tpu → pallas-tpu, gpu → pallas-gpu,
+    cpu → oracle).  Memoized — tests overriding the env var must call
+    ``default_backend.cache_clear()``.
+    """
+    name = os.environ.get(ENV_VAR, "").strip()
+    return get_backend(name if name else jax_backend())
+
+
+def resolve(selector=None) -> Backend:
+    """Map an engine dispatch knob to a backend.
+
+    ``None`` → the process default; ``True`` → pallas-tpu (interpret
+    off-TPU, the historical force-the-kernels knob); ``False`` → oracle;
+    a string → that registered lane; a `Backend` passes through.
+    """
+    if selector is None:
+        return default_backend()
+    if isinstance(selector, Backend):
+        return selector
+    if isinstance(selector, str):
+        return get_backend(selector)
+    return get_backend("pallas-tpu" if selector else "oracle")

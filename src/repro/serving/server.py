@@ -278,7 +278,9 @@ class SNNServer:
         csr = index.query_radius_csr(qs[sel], radii,
                                      query_tile=self.cfg.query_tile,
                                      native=False,
-                                     packed=self.cfg.serve_packed)
+                                     packed=self.cfg.serve_packed,
+                                     use_pallas=self.cfg.backend,
+                                     bucket=self.cfg.serve_bucket)
         now = time.monotonic()
         for j, bi in enumerate(sel):
             r = batch[bi]
@@ -318,7 +320,9 @@ class SNNServer:
         """
         ks = np.asarray([batch[bi].k for bi in sel], np.int64)
         idx, sq = index.query_knn(qs[sel], ks, native=False,
-                                  query_tile=self.cfg.query_tile)
+                                  query_tile=self.cfg.query_tile,
+                                  use_pallas=self.cfg.backend,
+                                  bucket=self.cfg.serve_bucket)
         now = time.monotonic()
         for j, bi in enumerate(sel):
             r = batch[bi]

@@ -23,7 +23,7 @@ can flip a decision, so the planted datasets are built for it:
   nudges (far beyond float32 rounding) instead of exact hits;
 * ulp plants — boundary points pushed a few float32 ulps in/out of the ball.
 
-Within each case all eight variants must also agree bitwise with each other
+Within each case all twelve variants must also agree bitwise with each other
 on distances (they share one float32 distance pipeline by construction).
 """
 import numpy as np
@@ -37,11 +37,14 @@ from repro.kernels import ops as _ops
 # full-lane suite: excluded from the fail-fast CI smoke lane
 pytestmark = pytest.mark.slow
 
-# (packed, use_pallas, mixed): looped/packed executor x dense-oracle/interpret
-# kernels x f32/certified-bf16 count pass
+# (packed, use_pallas, mixed): looped/packed executor x backend lane x
+# f32/certified-bf16 count pass.  The backend axis covers the dense oracle
+# (None on CPU), the TPU Pallas kernels (True => interpret mode here) and the
+# Triton-shaped GPU lane ("pallas-gpu", also interpreted on CPU) — all three
+# registry lanes must emit bit-identical CSR output.
 VARIANTS = [(packed, up, mixed)
             for packed in (False, True)
-            for up in (None, True)
+            for up in (None, True, "pallas-gpu")
             for mixed in (False, True)]
 
 
@@ -242,7 +245,7 @@ def test_property_lattice_multisegment_vector_radius(seed):
 # --------------------------------------------------------------------------- #
 # counts-parity regression: run_counts_packed == pass 1 of run_csr_packed      #
 # --------------------------------------------------------------------------- #
-@pytest.mark.parametrize("use_pallas", [None, True])
+@pytest.mark.parametrize("use_pallas", [None, True, "pallas-gpu"])
 @pytest.mark.parametrize("mixed", [False, True])
 def test_counts_parity_with_csr_pass1(use_pallas, mixed):
     # the kNN expansion loop trusts run_counts_packed to predict exactly what

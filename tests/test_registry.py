@@ -1,0 +1,219 @@
+"""Backend registry: selection, compat mapping, GPU-lane bit-identity,
+bucketed shape polymorphism and the static memory planner.
+
+The GPU lane runs in Pallas interpret mode here (CPU CI) — the same
+certification trick the TPU kernels use.  Bit-identity across lanes is the
+load-bearing claim: the registry may pick ANY lane per process and no output
+bit may move.
+"""
+import numpy as np
+import pytest
+
+from repro.core import build_index, engine as _engine, snn as _snn
+from repro.core.sharded import prepare_query_arrays
+from repro.core.streaming import StreamingSNNIndex
+from repro.kernels import ops, registry
+
+
+@pytest.fixture(autouse=True)
+def _fresh_counters():
+    registry.reset_compile_counts()
+    yield
+    registry.reset_compile_counts()
+
+
+# --------------------------------------------------------------------------- #
+# selection + compat mapping                                                   #
+# --------------------------------------------------------------------------- #
+def test_default_backend_platform_mapping(monkeypatch):
+    monkeypatch.delenv(registry.ENV_VAR, raising=False)
+    registry.default_backend.cache_clear()
+    try:
+        want = {"tpu": "pallas-tpu", "gpu": "pallas-gpu", "cuda": "pallas-gpu",
+                "rocm": "pallas-gpu"}.get(registry.jax_backend(), "oracle")
+        assert registry.default_backend().name == want
+    finally:
+        registry.default_backend.cache_clear()
+
+
+def test_env_override_wins(monkeypatch):
+    monkeypatch.setenv(registry.ENV_VAR, "pallas-gpu")
+    registry.default_backend.cache_clear()
+    try:
+        assert registry.default_backend().name == "pallas-gpu"
+        assert registry.resolve(None).name == "pallas-gpu"
+    finally:
+        registry.default_backend.cache_clear()
+    # cache_clear after the monkeypatch restores: next caller re-decides
+    monkeypatch.delenv(registry.ENV_VAR)
+    registry.default_backend.cache_clear()
+
+
+def test_resolve_compat_mapping():
+    assert registry.resolve(True).name == "pallas-tpu"
+    assert registry.resolve(False).name == "oracle"
+    assert registry.resolve(None) is registry.default_backend()
+    for alias, want in [("tpu", "pallas-tpu"), ("gpu", "pallas-gpu"),
+                        ("cuda", "pallas-gpu"), ("cpu", "oracle"),
+                        ("ref", "oracle"), ("pallas-gpu", "pallas-gpu")]:
+        assert registry.resolve(alias).name == want
+    b = registry.get_backend("oracle")
+    assert registry.resolve(b) is b
+    with pytest.raises(ValueError, match="unknown backend"):
+        registry.resolve("no-such-lane")
+    assert set(registry.available()) >= {"oracle", "pallas-tpu", "pallas-gpu"}
+
+
+def test_backend_instances_memoized():
+    assert registry.get_backend("pallas-gpu") is registry.get_backend("gpu")
+    assert registry.get_backend("oracle") is registry.resolve(False)
+
+
+# --------------------------------------------------------------------------- #
+# GPU lane bit-identity (interpret mode = the CPU CI certification)            #
+# --------------------------------------------------------------------------- #
+def _kernel_args(seed=3, n=500, d=10, m=33, radius=1.2):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    q = rng.normal(size=(m, d)).astype(np.float32)
+    index = build_index(x)
+    xs, al, hn, _, _ = ops.pad_database(index.xs, index.alphas,
+                                        index.half_norms, bn=128)
+    xq, aq, r, th = prepare_query_arrays(index, q, radius)
+    qp, aqp, rp, thp, _ = ops.pad_queries(
+        np.asarray(xq), np.asarray(aq), np.asarray(r), np.asarray(th), tq=64)
+    return qp, aqp, rp, thp, xs, al, hn
+
+
+@pytest.mark.parametrize("mixed", [False, True])
+def test_gpu_lane_count_filter_bit_identity(mixed):
+    args = _kernel_args()
+    cnt_g = np.asarray(ops.snn_count(*args, tq=64, bn=128,
+                                     use_pallas="pallas-gpu", mixed=mixed))
+    cnt_o = np.asarray(ops.snn_count(*args, tq=64, bn=128,
+                                     use_pallas=False, mixed=mixed))
+    assert np.array_equal(cnt_g, cnt_o)
+    if not mixed:
+        f_g = np.asarray(ops.snn_filter(*args, tq=64, bn=128,
+                                        use_pallas="pallas-gpu"))
+        f_o = np.asarray(ops.snn_filter(*args, tq=64, bn=128,
+                                        use_pallas=False))
+        assert np.array_equal(f_g, f_o)
+
+
+def test_gpu_lane_compact_bit_identity():
+    qp, aqp, rp, thp, xs, al, hn = _kernel_args()
+    cnt = np.asarray(ops.snn_count(qp, aqp, rp, thp, xs, al, hn,
+                                   tq=64, bn=128, use_pallas=False))
+    nnz = ops.csr_capacity(int(cnt.sum()))
+    offsets = np.asarray(
+        np.concatenate([[0], np.cumsum(cnt[:-1])]), np.int32)
+    outs = {}
+    for lane in ("pallas-gpu", True, False):
+        idx, dh = ops.snn_compact(qp, aqp, rp, thp, offsets, xs, al, hn,
+                                  nnz=nnz, tq=64, bn=128, use_pallas=lane)
+        outs[lane] = (np.asarray(idx), np.asarray(dh))
+    for lane in ("pallas-gpu", True):
+        assert np.array_equal(outs[lane][0], outs[False][0]), lane
+        assert np.array_equal(outs[lane][1], outs[False][1]), lane
+
+
+def test_gpu_lane_end_to_end_multisegment():
+    # streaming appends => a multi-segment SegmentPack => the *stacked*
+    # count/compact GPU kernels run; every lane must agree bit-for-bit
+    rng = np.random.default_rng(11)
+    idx = StreamingSNNIndex(rng.normal(size=(300, 6)).astype(np.float32),
+                            block=128)
+    idx.append(rng.normal(size=(90, 6)).astype(np.float32))
+    idx.append(rng.normal(size=(40, 6)).astype(np.float32))
+    q = rng.normal(size=(17, 6)).astype(np.float32)
+    radius = rng.uniform(0.5, 1.5, size=17)
+    base = idx.query_radius_csr(q, radius, use_pallas=False)
+    for lane in ("pallas-gpu", True, None):
+        res = idx.query_radius_csr(q, radius, use_pallas=lane)
+        assert np.array_equal(res.indptr, base.indptr), lane
+        assert np.array_equal(res.indices, base.indices), lane
+        assert np.array_equal(res.distances, base.distances), lane
+
+
+# --------------------------------------------------------------------------- #
+# bucketed shape polymorphism                                                  #
+# --------------------------------------------------------------------------- #
+def test_bucket_rows_ladder():
+    assert [ops.bucket_rows(m) for m in (0, 1, 128, 129, 256, 257, 1000)] \
+        == [128, 128, 128, 256, 256, 512, 1024]
+    assert ops.bucket_rows(65, tq=64) == 128
+
+
+@pytest.mark.parametrize("m", [127, 128, 129, 255, 257])
+def test_bucketed_padding_bit_identity(m):
+    rng = np.random.default_rng(m)
+    x = rng.normal(size=(400, 8)).astype(np.float32)
+    index = build_index(x)
+    q = rng.normal(size=(m, 8)).astype(np.float32)
+    radius = rng.uniform(0.4, 1.2, size=m)
+    a = _snn.query_radius_csr(index, q, radius, bucket=True)
+    b = _snn.query_radius_csr(index, q, radius, bucket=False)
+    assert np.array_equal(a.indptr, b.indptr)
+    assert np.array_equal(a.indices, b.indices)
+    assert np.array_equal(a.distances, b.distances)
+
+
+def test_varying_batch_compile_ladder():
+    # 50 steps of random batch sizes: with bucketing the engine sees at most
+    # ceil(log2(m_max / tq)) + 2 distinct query shapes per op — the O(log m)
+    # compile claim, measured by the registry's launch-signature accounting
+    rng = np.random.default_rng(42)
+    x = rng.normal(size=(600, 8)).astype(np.float32)
+    index = build_index(x)
+    sizes = rng.integers(1, 513, size=50)
+    registry.reset_compile_counts()
+    _engine.DISPATCH_STATS.reset()
+    for m in sizes:
+        q = rng.normal(size=(int(m), 8)).astype(np.float32)
+        _snn.query_radius_csr(index, q, 1.0, bucket=True)
+    m_max = int(sizes.max())
+    allowed = int(np.ceil(np.log2(max(m_max, 128) / 128))) + 2
+    counts = registry.compile_counts()
+    assert counts, "no launch signatures recorded"
+    # query-shape-keyed ops obey the ladder; compact also keys on nnz, whose
+    # power-of-two capacity ladder is O(log nnz) by the same construction
+    for op, n_sigs in counts.items():
+        bound = allowed if "compact" not in op else allowed * 4
+        assert n_sigs <= bound, (op, n_sigs, dict(counts))
+    assert _engine.DISPATCH_STATS.jit_compiles == sum(counts.values())
+
+
+# --------------------------------------------------------------------------- #
+# static memory planning                                                       #
+# --------------------------------------------------------------------------- #
+def test_memory_plan_static_and_memoized():
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(700, 12)).astype(np.float32)
+    index = build_index(x)
+    pack = _engine.pack_from_index(index, block=128)
+    _engine.DISPATCH_STATS.reset()
+    plan = pack.memory_plan(256, 128)
+    assert _engine.DISPATCH_STATS.bytes_planned == plan.total_bytes > 0
+    assert pack.memory_plan(256, 128) is plan  # memoized, no double-count
+    assert _engine.DISPATCH_STATS.bytes_planned == plan.total_bytes
+    names = {b[0] for b in plan.buffers}
+    assert {"stacked_xs", "queries", "counts", "indptr", "offsets",
+            "csr_flat_idx", "csr_staging_ids"} <= names
+    assert plan.total_bytes == sum(b[3] for b in plan.buffers)
+    assert plan.staging_cap > 0
+    plan.reserve()  # pre-grow staging: must be a no-throw warm-up
+    # a second bucket is a distinct plan with strictly larger query buffers
+    plan2 = pack.memory_plan(512, 128)
+    assert plan2 is not plan and plan2.total_bytes > plan.total_bytes
+
+
+def test_memory_plan_accounted_during_query():
+    rng = np.random.default_rng(6)
+    x = rng.normal(size=(500, 8)).astype(np.float32)
+    index = build_index(x)
+    q = rng.normal(size=(10, 8)).astype(np.float32)
+    _engine.DISPATCH_STATS.reset()
+    _snn.query_radius_csr(index, q, 1.0)
+    snap = _engine.DISPATCH_STATS.snapshot()
+    assert snap["bytes_planned"] > 0
