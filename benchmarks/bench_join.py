@@ -1,0 +1,135 @@
+"""Bichromatic join core: scheduled join vs per-query loop, counts vs CSR.
+
+Two prices the join core (`core.join`) changes, both measured here:
+
+* **join(A, B, r)** — the baseline answers an A-vs-B workload by looping
+  `query_radius_csr` over A in original order, a chunk at a time, against
+  the whole index (every chunk pays the full predicate grid on the oracle
+  path).  `join` sorts A by its projection score once, so each chunk spans
+  a narrow alpha window and the segment interval-overlap prune discards
+  most of B per chunk — same output, bit-identical per row;
+* **count-only analytics** — `join_counts` / `query_counts_device` run
+  engine pass 1 only (`run_counts_packed`); the baseline materializes the
+  full CSR and reads ``np.diff(indptr)``.  At matched n the delta is the
+  whole compact pass + flat-output staging.
+
+Every cell cross-checks the scheduled join against the loop baseline
+(indptr + indices, bit-identical) and the counts against the CSR row
+lengths before recording a time.  Rows follow the
+``name,us_per_call,derived`` CSV contract; everything lands in
+``BENCH_join.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import build_index, join, join_counts, query_radius_csr
+from repro.core.snn import CSRNeighbors
+from repro.data.pipeline import make_uniform
+
+from .common import row
+
+OUT_JSON = "BENCH_join.json"
+
+
+def _loop_join(a: np.ndarray, index, radius, chunk: int = 2048) -> CSRNeighbors:
+    """The pre-join-core baseline: original-order A chunks, whole index."""
+    indptrs, indices = [np.zeros(1, np.int64)], []
+    for s in range(0, a.shape[0], chunk):
+        r = radius if np.ndim(radius) == 0 else radius[s:s + chunk]
+        csr = query_radius_csr(index, a[s:s + chunk], r,
+                               return_distance=False)
+        indptrs.append(csr.indptr[1:] + indptrs[-1][-1])
+        indices.append(csr.indices)
+    return CSRNeighbors(np.concatenate(indptrs),
+                        np.concatenate(indices) if indices
+                        else np.zeros(0, np.int64))
+
+
+def _timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return time.perf_counter() - t0, out
+
+
+def _one_cell(name: str, a: np.ndarray, b: np.ndarray, radius,
+              record: list) -> dict:
+    ma, nb, d = a.shape[0], b.shape[0], b.shape[1]
+    tag = f"{name}/ma{ma}/nb{nb}/d{d}"
+    index = build_index(b)
+
+    # Single-shot wall times: these are seconds-scale end-to-end joins.
+
+    # ---- join: per-query loop baseline vs sorted-chunk schedule -----------
+    t_loop, want = _timed(_loop_join, a, index, radius)
+    t_join, got = _timed(join, a, None, radius, b_index=index,
+                         return_distance=False)
+
+    # ---- exactness cross-check (never trade it for speed) -----------------
+    assert (got.indptr == want.indptr).all(), "join indptr mismatch"
+    assert (got.indices == want.indices).all(), "join indices mismatch"
+
+    record.append(row(f"join/loop_baseline/{tag}", t_loop,
+                      f"nnz={want.nnz}"))
+    record.append(row(f"join/scheduled/{tag}", t_join,
+                      f"speedup={t_loop / max(t_join, 1e-12):.2f}x"))
+
+    # ---- count-only: pass 1 alone vs full CSR + diff at matched n ---------
+    t_csr_counts, csr = _timed(query_radius_csr, index, a, radius,
+                               return_distance=False)
+    csr_counts = np.diff(csr.indptr)
+    t_counts, counts = _timed(join_counts, a, None, radius, b_index=index)
+    assert (counts == csr_counts).all(), "count mismatch vs CSR degrees"
+
+    record.append(row(f"join/counts_via_csr/{tag}", t_csr_counts,
+                      f"sum={int(csr_counts.sum())}"))
+    record.append(row(f"join/counts_only/{tag}", t_counts,
+                      f"speedup={t_csr_counts / max(t_counts, 1e-12):.2f}x"))
+
+    return {
+        "dataset": name, "ma": ma, "nb": nb, "d": d,
+        "radius": (float(radius) if np.ndim(radius) == 0
+                   else [float(radius.min()), float(radius.max())]),
+        "nnz": int(want.nnz),
+        "join_s": {"per_query_loop": t_loop, "scheduled": t_join},
+        "join_speedup": t_loop / max(t_join, 1e-12),
+        "counts_s": {"full_csr_diff": t_csr_counts, "count_pass": t_counts},
+        "counts_speedup": t_csr_counts / max(t_counts, 1e-12),
+    }
+
+
+def run(full: bool = False, out_json: str = OUT_JSON):
+    rows: list[str] = []
+    cells: list[dict] = []
+    sizes = [(5_000, 50_000)] if not full else [(20_000, 200_000),
+                                               (50_000, 500_000)]
+    for ma, nb in sizes:
+        d = 8
+        b = make_uniform(nb, d, seed=0)
+        a = make_uniform(ma, d, seed=1)
+        cells.append(_one_cell("uniform", a, b, 0.3, rows))
+        # per-row radius vector: the variable-density join
+        radii = np.random.default_rng(2).uniform(0.2, 0.4, ma)
+        cells.append(_one_cell("uniform_vec_r", a, b, radii, rows))
+    import jax
+
+    payload = {
+        "benchmark": "join",
+        "backend": jax.default_backend(),
+        "full": full,
+        "grid": {"sizes": sizes, "d": 8},
+        "cells": cells,
+    }
+    with open(out_json, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"# wrote {os.path.abspath(out_json)}", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

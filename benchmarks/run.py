@@ -73,7 +73,8 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,fig3,table45,table7,theory,"
-                         "roofline,csr,streaming,graph,packed,serving,knn")
+                         "roofline,csr,streaming,graph,join,packed,serving,"
+                         "knn")
     ap.add_argument("--aggregate-only", action="store_true",
                     help=f"just rebuild {TRAJECTORY_JSON} from existing "
                          "BENCH_*.json files")
@@ -83,8 +84,8 @@ def main() -> None:
         return
 
     from . import (bench_csr_engine, bench_engine_packed, bench_fig2_synthetic,
-                   bench_fig3_grid, bench_graph, bench_roofline, bench_serving,
-                   bench_streaming, bench_table45_realworld,
+                   bench_fig3_grid, bench_graph, bench_join, bench_roofline,
+                   bench_serving, bench_streaming, bench_table45_realworld,
                    bench_table7_dbscan, bench_theory)
     suites = {
         "fig2": bench_fig2_synthetic.run,
@@ -96,6 +97,7 @@ def main() -> None:
         "csr": bench_csr_engine.run,
         "streaming": bench_streaming.run,
         "graph": bench_graph.run,
+        "join": bench_join.run,
         "packed": bench_engine_packed.run,
         "serving": bench_serving.run_serving,
         "knn": bench_serving.run_knn,

@@ -3,6 +3,10 @@ bert4rec): score one user against 1M candidates via (a) full GEMM and (b) the
 paper's MIPS lift + sorted-window pruning — identical top results, with the
 pruned candidate fraction reported.
 
+The SNN side is ONE bichromatic join (`core.join` via
+`models.recsys.retrieve_above`): all K interest capsules stream through the
+lifted candidate index in a single call instead of K separate scans.
+
 Run:  PYTHONPATH=src python examples/recsys_retrieval.py
 """
 import time
@@ -11,7 +15,7 @@ import jax
 import numpy as np
 
 from repro.configs.registry import get_arch
-from repro.core import build_index, query_radius
+from repro.core import build_index
 from repro.models import recsys as rs
 
 
@@ -32,17 +36,22 @@ def main():
     top_full = np.argsort(-scores)[:10]
     t_full = time.perf_counter() - t0
 
-    # (b) SNN MIPS: one index reused for every interest capsule
+    # (b) SNN MIPS: lift the corpus once, join ALL interest capsules at once
     t0 = time.perf_counter()
     index = build_index(items, metric="mips")
     t_index = time.perf_counter() - t0
-    thresh = np.sort(scores)[-10]          # retrieve everything >= top-10 score
+    # retrieve everything >= the top-10 score.  The cutoff is placed halfway
+    # between the 10th and 11th scores: a threshold EXACTLY at the 10th
+    # score would make that item's membership rounding-dependent (the GEMM
+    # and the engine compute the same score along different float32 chains —
+    # docs/architecture.md's float-boundary caveat), while the midpoint
+    # gives both sides a margin of half the score gap
+    srt = np.sort(scores)
+    thresh = float(srt[-10] + srt[-11]) / 2.0
     t0 = time.perf_counter()
-    cand = set()
-    for k in range(interests.shape[0]):
-        idx, ip = query_radius(index, interests[k], thresh)
-        cand.update(idx.tolist())
+    csr = rs.retrieve_above(interests, items, thresh, index=index)
     t_snn = time.perf_counter() - t0
+    cand = set(csr.indices.tolist())       # union over the K capsule rows
     top_snn = sorted(cand, key=lambda i: -scores[i])[:10]
 
     assert set(top_full.tolist()) == set(top_snn), "SNN-MIPS must be exact"

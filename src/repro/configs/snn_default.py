@@ -28,6 +28,11 @@ class SNNConfig:
                                     # query ladder (ops.bucket_rows): dynamic
                                     # batch sizes compile O(log m) engine
                                     # executables instead of one per size
+    serve_count_pass: bool = True   # answer an all-count batch with the
+                                    # count-only executor (engine pass 1,
+                                    # no compact pass / no CSR staging);
+                                    # False folds counts into the CSR
+                                    # dispatch like mixed batches do
     backend: str | None = None      # kernel backend name (kernels.registry:
                                     # "pallas-tpu" | "pallas-gpu" | "oracle");
                                     # None picks per-platform, SNN_BACKEND

@@ -11,6 +11,9 @@ from .snn import (  # noqa: F401
 )
 from .engine import (Segment, make_segment, segment_from_index,  # noqa: F401
                      segments_from_index)
+from .join import (join, join_counts, reverse_neighbors,  # noqa: F401
+                   degree_histogram)
+from .join import query_counts as query_counts_device  # noqa: F401
 from .knn import query_knn  # noqa: F401
 from .graph import (build_neighbor_graph, build_neighbor_graph_sharded,  # noqa: F401
                     min_label_components)

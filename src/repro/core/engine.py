@@ -48,6 +48,13 @@ mostly-padding shards cheap.  Packed output is bit-identical to looped
 output: both evaluate the same predicate pipeline per element (the stacked
 matmul reduces the same d-length vectors per output element) and share the
 slot formula above.
+
+Callers normally reach this module through `core.join`, the workload
+front-end layer: `join(A, B, r)` (and the point-query / self-join /
+reverse / count-only front-ends built on it) owns query-side scheduling —
+sorting A, chunking, permuting results back — and hands each chunk to
+`run_csr_packed` / `run_counts_packed` here.  The engine itself never
+reorders queries.
 """
 from __future__ import annotations
 

@@ -4,12 +4,15 @@ The paper's flagship application (§6.4, DBSCAN) and every radius-graph
 workload (GNN edge construction, correlation clustering, percolation
 analysis) need the *same* artifact: the full (n, n) graph whose row i lists
 every database point within ``eps`` of point i.  `build_neighbor_graph`
-materializes it once as a `CSRNeighbors`, exactly, through the two-pass
-segment engine — and exploits the one structural fact a self-join has that
-an arbitrary query batch does not: **the queries ARE the database**, so the
-index's own alpha-sorted order is also a schedule.
+materializes it once as a `CSRNeighbors`, exactly — as the self-join special
+case ``join(X, X, eps)`` of the bichromatic join core (`core.join`), which
+owns the sorted-query-chunk scheduling and window-overlap segment pruning
+this module pioneered.  What stays HERE is the one structural fact a
+self-join has that an arbitrary A-vs-B join does not: **the queries ARE the
+database**, so the index's own alpha-sorted order is the schedule (no query
+argsort needed) and symmetry is exploitable.
 
-Scheduling (vs the blind chunk loop):
+Scheduling (see `core.join.chunked_join` for the loop itself):
 
 * the sorted database is partitioned into contiguous `engine.Segment` runs
   of ``segment_rows`` rows (`engine.segments_from_index`);
@@ -22,12 +25,13 @@ Scheduling (vs the blind chunk loop):
 * ``symmetric=True`` additionally halves the predicate work using
   d(i, j) = d(j, i): chunk k only joins against segments at or after its own
   first segment (the block upper triangle), and the missing lower-triangle
-  pairs are reconstructed by a vectorized CSR mirror+merge.  Row contents
-  still ascend in sorted position, so the output is identical to the plain
-  join up to float-boundary ties (each cross-chunk pair's predicate is
-  evaluated once instead of twice; an exactly-on-the-boundary pair could in
-  principle round differently per direction — the same measure-zero caveat
-  as docs/architecture.md notes for host-vs-device thresholds);
+  pairs are reconstructed by a vectorized CSR mirror+merge
+  (`core.join.mirror_merge`).  Row contents still ascend in sorted position,
+  so the output is identical to the plain join up to float-boundary ties
+  (each cross-chunk pair's predicate is evaluated once instead of twice; an
+  exactly-on-the-boundary pair could in principle round differently per
+  direction — the same measure-zero caveat as docs/architecture.md notes
+  for host-vs-device thresholds);
 * ``memory_budget_mb`` sizes ``query_chunk`` so the worst-case oracle-path
   footprint (one dense (chunk, n) filter) fits the budget — the knob callers
   tune for device-memory pressure.
@@ -45,9 +49,20 @@ from __future__ import annotations
 
 import numpy as np
 
-from ..kernels import ops as _ops
 from . import engine as _engine
 from . import snn as _snn
+# `repro.core.join` the module is shadowed by the package-level `join`
+# function export, so pull names straight from the module path
+from .join import (chunked_join, indptr_from_counts, mirror_merge,
+                   permute_rows, resolve_chunk, sorted_join_csr)
+
+# historical import surface: these lived here before the join core was
+# extracted; tests and downstream callers keep importing them from graph
+_indptr_from_counts = indptr_from_counts
+_permute_rows = permute_rows
+_mirror_merge = mirror_merge
+_self_join = chunked_join
+_resolve_chunk = resolve_chunk
 
 
 # --------------------------------------------------------------------------- #
@@ -86,203 +101,20 @@ def min_label_components(n: int, rows: np.ndarray, cols: np.ndarray) -> np.ndarr
             return lab
 
 
-# --------------------------------------------------------------------------- #
-# CSR plumbing                                                                 #
-# --------------------------------------------------------------------------- #
-def _indptr_from_counts(counts: np.ndarray) -> np.ndarray:
-    out = np.zeros(counts.size + 1, np.int64)
-    np.cumsum(counts, out=out[1:])
-    return out
-
-
-def _permute_rows(indptr, indices, distances, dest):
-    """Reorder CSR rows: input row i becomes output row ``dest[i]``.
-
-    One O(nnz) gather; used to undo the alpha sort (``dest = index.order``)
-    so the public graph is in original point order.
-    """
-    counts = np.diff(indptr)
-    counts_out = np.empty_like(counts)
-    counts_out[dest] = counts
-    out_indptr = _indptr_from_counts(counts_out)
-    pos = np.repeat(out_indptr[:-1][dest] - indptr[:-1], counts) \
-        + np.arange(indices.size)
-    out_idx = np.empty_like(indices)
-    out_idx[pos] = indices
-    out_d = None
-    if distances is not None:
-        out_d = np.empty_like(distances)
-        out_d[pos] = distances
-    return out_indptr, out_idx, out_d
-
-
-def _mirror_merge(indptr, cols, dists, chunk: int):
-    """Complete a block-upper-triangular self-join with its mirror pairs.
-
-    Input rows/cols are sorted positions; every pair (i, j) whose column
-    falls in a LATER query chunk than its row was evaluated exactly once, so
-    its mirror (j, i) is added here (intra-chunk pairs were evaluated in
-    both directions already).  Mirrored neighbors of row j all precede j's
-    chunk and are inserted ahead of the direct ones in ascending source
-    order, so merged rows stay ascending in sorted position — the invariant
-    every other engine path guarantees.  Distances mirror verbatim — valid
-    because native-metric distances (and non-native squared Euclidean for
-    the query-independent transforms) are symmetric in exact arithmetic;
-    the one asymmetric combination (mips with ``native=False``, whose
-    lifted distance depends on which point is the query) is rejected in
-    `build_neighbor_graph` before this runs.
-    """
-    n = indptr.size - 1
-    counts_d = np.diff(indptr)
-    rows = np.repeat(np.arange(n, dtype=np.int64), counts_d)
-    cross = (cols // chunk) > (rows // chunk)
-    rows_m, cols_m = cols[cross], rows[cross]
-    d_m = dists[cross] if dists is not None else None
-    src = np.argsort(rows_m, kind="stable")  # group by target row, keep order
-    rows_m, cols_m = rows_m[src], cols_m[src]
-    counts_m = np.bincount(rows_m, minlength=n).astype(np.int64)
-    indptr_m = _indptr_from_counts(counts_m)
-    out_indptr = _indptr_from_counts(counts_m + counts_d)
-    start = out_indptr[:-1]
-    pos_m = np.repeat(start - indptr_m[:-1], counts_m) + np.arange(rows_m.size)
-    pos_d = np.repeat(start + counts_m - indptr[:-1], counts_d) \
-        + np.arange(cols.size)
-    out_cols = np.empty(rows_m.size + cols.size, np.int64)
-    out_cols[pos_m] = cols_m
-    out_cols[pos_d] = cols
-    out_d = None
-    if dists is not None:
-        out_d = np.empty(out_cols.size, dists.dtype)
-        out_d[pos_m] = d_m[src]
-        out_d[pos_d] = dists
-    return out_indptr, out_cols, out_d
-
-
-# --------------------------------------------------------------------------- #
-# The chunked self-join loop                                                   #
-# --------------------------------------------------------------------------- #
-def _self_join(index, segments, xq, aq, r, th, *, query_chunk: int,
-               segs_per_chunk: int, query_tile: int, use_pallas,
-               packed: bool = True, memory_budget_mb=None,
-               mixed: bool = False):
-    """Run sorted query chunks through the engine over ``segments``.
-
-    ``packed=True`` (default) builds ONE `engine.SegmentPack` plan for the
-    whole build and executes every chunk through `engine.run_csr_packed` —
-    the stack, padding and device transfer happen once, and each chunk pays
-    two stacked launches instead of two per live segment (the biggest
-    throughput win of the plan/execute split: a build has m/query_chunk
-    chunks all querying the same segments).  ``packed=False`` keeps the
-    looped `engine.run_csr` cross-check path.
-
-    ``segs_per_chunk > 0`` turns on the triangular schedule: chunk k only
-    sees segments from its own first segment onward (requires chunks and
-    segments to tile the sorted order with ``query_chunk`` an exact multiple
-    of the segment size).  Returns chunk-major (= ascending sorted row)
-    ``(counts, flat_ids, flat_dh)``.
-    """
-    m = xq.shape[0]
-    aq64 = np.asarray(aq, np.float64)
-    r64 = np.asarray(r, np.float64)
-    counts = np.zeros(m, np.int64)
-    ids_parts: list[np.ndarray] = []
-    dh_parts: list[np.ndarray] = []
-    pack = _engine.SegmentPack.build(segments) if packed else None
-    # the queries ARE the database, so the extra projections come for free
-    # from the index's own basis — computed once for the whole join
-    pq_full = _snn.query_extra_projections(index, xq)
-    pq64_full = (None if pq_full is None
-                 else np.asarray(pq_full, np.float64))
-    for c0 in range(0, m, query_chunk):
-        c1 = min(c0 + query_chunk, m)
-        k0 = (c0 // query_chunk) * segs_per_chunk if segs_per_chunk else 0
-        qp, aqp, rp, thp, _ = _ops.pad_queries(
-            xq[c0:c1], aq[c0:c1], r[c0:c1], th[c0:c1], tq=query_tile)
-        pqp = (None if pq_full is None
-               else _ops.pad_components(pq_full[:, c0:c1], qp.shape[0]))
-        if packed:
-            # the vectorized interval-overlap prune inside the packed
-            # executor plays the role of the per-segment window loop
-            _, cnt, ids, dh = _engine.run_csr_packed(
-                pack, qp, aqp, rp, thp, c1 - c0,
-                query_tile=query_tile, use_pallas=use_pallas,
-                first_seg=k0, memory_budget_mb=memory_budget_mb,
-                pq=pqp, mixed=mixed)
-        else:
-            # the schedule: alpha-adjacent queries span a narrow window, so
-            # most segments fail this interval test and never launch
-            if pq64_full is None:
-                live = [s for s in segments[k0:]
-                        if _engine._window_may_hit(s, aq64[c0:c1],
-                                                   r64[c0:c1])]
-            else:
-                qn64 = _engine._qnorm64(rp, thp, c1 - c0)
-                live = [s for s in segments[k0:]
-                        if _engine._window_may_hit(
-                            s, aq64[c0:c1], r64[c0:c1],
-                            pq64_full[:, c0:c1], qn64)]
-            _, cnt, ids, dh = _engine.run_csr(
-                live, qp, aqp, rp, thp, c1 - c0,
-                query_tile=query_tile, use_pallas=use_pallas,
-                memory_budget_mb=memory_budget_mb, pq=pqp, mixed=mixed)
-        counts[c0:c1] = cnt
-        ids_parts.append(ids)
-        dh_parts.append(dh)
-    flat_ids = (np.concatenate(ids_parts) if ids_parts
-                else np.zeros(0, np.int64))
-    flat_dh = (np.concatenate(dh_parts) if dh_parts
-               else np.zeros(0, np.float32))
-    return counts, flat_ids, flat_dh
-
-
-def _resolve_chunk(n: int, query_chunk: int | None, memory_budget_mb,
-                   align: int | None, block: int) -> int:
-    """Pick the query chunk size: explicit, or sized to a memory budget.
-
-    The budget bounds the worst case of the oracle (CPU) path — one cached
-    dense float32 filter of shape (chunk, n_padded) per chunk when every
-    segment is live — which is also a safe proxy for device-memory pressure
-    on TPU (flat CSR outputs scale with the same product).  A budget is a
-    CEILING: it floors the derived chunk, never inflates it.
-
-    ``align`` is the segment size the symmetric triangular schedule needs
-    chunks to tile in whole multiples of (None when any chunk size works:
-    the plain and sharded schedules).  Alignment floors to whole segments —
-    again never inflating a budgeted chunk — except that one segment is the
-    minimum a chunk can be.
-    """
-    if memory_budget_mb is not None:
-        n_pad = _ops.round_up(n, block)
-        cs = int(memory_budget_mb * 2**20) // (4 * n_pad)
-    else:
-        cs = int(query_chunk) if query_chunk else 2048
-    cs = max(cs, 1)
-    if align:
-        cs = max(cs // align, 1) * align
-    return cs
-
-
 def _graph_from_join(index, segments, x_sorted, eps, *, symmetric: bool,
                      query_chunk: int, segs_per_chunk: int, query_tile: int,
                      use_pallas, return_distance: bool, native: bool,
                      packed: bool = True, memory_budget_mb=None,
                      mixed: bool = False):
-    """Shared tail of both public builders: join, finalize, mirror, unsort."""
-    xq, aq, r, th, qsq = _snn.prepare_query_predicates(index, x_sorted, eps)
-    counts, flat_ids, flat_dh = _self_join(
-        index, segments, xq, aq, r, th, query_chunk=query_chunk,
-        segs_per_chunk=segs_per_chunk if symmetric else 0,
-        query_tile=query_tile, use_pallas=use_pallas, packed=packed,
-        memory_budget_mb=memory_budget_mb, mixed=mixed)
-    indptr = _indptr_from_counts(counts)
-    fin = _snn.csr_finalize(index, indptr, flat_ids, flat_dh, xq, qsq, counts,
-                            return_distance, native)
-    cols, dists = fin.indices, fin.distances
-    if symmetric:
-        indptr, cols, dists = _mirror_merge(indptr, cols, dists, query_chunk)
-        cols = index.order[cols]  # sorted positions -> original ids
-    indptr, cols, dists = _permute_rows(indptr, cols, dists, index.order)
-    return _snn.CSRNeighbors(indptr, cols, dists)
+    """Shared tail of both public builders — `core.join.sorted_join_csr`
+    with the index's own order as the schedule (the queries ARE the sorted
+    database, so ``dest = index.order`` undoes the sort)."""
+    return sorted_join_csr(
+        index, segments, x_sorted, eps, symmetric=symmetric,
+        query_chunk=query_chunk, segs_per_chunk=segs_per_chunk,
+        query_tile=query_tile, use_pallas=use_pallas,
+        return_distance=return_distance, native=native, dest=index.order,
+        packed=packed, memory_budget_mb=memory_budget_mb, mixed=mixed)
 
 
 # --------------------------------------------------------------------------- #
@@ -312,7 +144,9 @@ def build_neighbor_graph(
     Row i lists every point of ``x`` within ``eps`` of ``x[i]`` (itself
     included for metrics where d(i, i) <= eps), with rows and column ids in
     original point order and row contents ascending in the index's sorted
-    order — bit-identical per row to ``query_radius_csr(index, x, eps)``.
+    order — bit-identical per row to ``query_radius_csr(index, x, eps)``,
+    and bit-identical as a whole to ``join(x, x, eps)`` (this IS that join,
+    scheduled by the index's own sort).
 
     Args:
       x: (n, d) points; the database and the query set.

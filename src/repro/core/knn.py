@@ -49,6 +49,7 @@ import numpy as np
 
 from ..kernels import ops as _ops
 from . import engine as _engine
+from .join import count_pass as _join_count_pass
 from . import metrics as _metrics
 from . import snn as _snn
 
@@ -134,24 +135,13 @@ def _sample_estimate(parts, xq: np.ndarray, k_eff: np.ndarray,
     return np.sqrt(sq[np.arange(m), k_s - 1])
 
 
-def _count_pass(pack, xq, aq, qsq, r, *, query_tile, use_pallas,
-                memory_budget_mb, pq=None, mixed=False, bucket=True):
-    """One engine count launch for ``xq`` under per-query Euclidean ``r``.
-
-    Bucketed padding matters most HERE: the expansion loop re-enters with a
-    shrinking active subset each round, and without the ladder every round's
-    batch size would compile a fresh count executable.
-    """
-    thresh = ((r * r - qsq) / 2.0).astype(np.float32)
-    qp, aqp, rp, thp, m = _ops.pad_queries(xq, aq, r.astype(np.float32),
-                                           thresh, tq=query_tile,
-                                           bucket=bucket)
-    pqp = None if pq is None else _ops.pad_components(pq, qp.shape[0])
-    return _engine.run_counts_packed(pack, qp, aqp, rp, thp, m,
-                                     query_tile=query_tile,
-                                     use_pallas=use_pallas,
-                                     memory_budget_mb=memory_budget_mb,
-                                     pq=pqp, mixed=mixed)
+# the expansion loop's count primitive is the join core's pass-1-only
+# front-end (`core.join.count_pass`): each round is a single-chunk
+# count-only join of the still-active queries against the whole pack.
+# Bucketed padding matters most here — the loop re-enters with a shrinking
+# active subset each round, and without the ladder every round's batch size
+# would compile a fresh count executable.
+_count_pass = _join_count_pass
 
 
 def _fetch_rows(parts, ids: np.ndarray) -> np.ndarray:

@@ -9,11 +9,13 @@ Three query paths are provided:
 * the **fixed-shape path** (`query_radius_fixed`): jit-friendly block-pruned
   filter used on TPU; dense (m, n) intermediate and K-truncated output.
 * the **two-pass CSR path** (`query_radius_csr`): the device engine of record —
-  a thin single-segment front-end over `core.engine` (pass-1 count, host
-  prefix sum, pass-2 compaction scattering survivors straight into their CSR
-  slots).  Exact variable-length results with peak device memory
-  O(total_neighbors + m) instead of O(m * n).  The same engine serves the
-  sharded (`core.sharded`) and streaming (`core.streaming`) front-ends.
+  a single-chunk front-end over the bichromatic join core (`core.join`, which
+  drives `core.engine`: pass-1 count, host prefix sum, pass-2 compaction
+  scattering survivors straight into their CSR slots).  Exact
+  variable-length results with peak device memory O(total_neighbors + m)
+  instead of O(m * n).  The same join core serves the sharded
+  (`core.sharded`), streaming (`core.streaming`), graph (`core.graph`) and
+  reverse/count-only (`core.join`) front-ends.
 
 The index is built with a jit-compiled power iteration for the first principal
 component.  Exactness of SNN never depends on the accuracy of v1 (any direction
@@ -470,20 +472,18 @@ def query_radius_csr(
     ladder (`kernels.ops.bucket_rows`) so a stream of varying batch sizes
     reuses O(log m) compiled shapes; padding rows match nothing, so results
     are bit-identical to exact-multiple padding.
-    """
-    from . import engine as _engine
 
-    if packed:
-        pack = _engine.pack_from_index(index, block=block)
-        return _engine.query_csr_packed(index, pack, q, radius,
-                                        return_distance,
-                                        query_tile=query_tile,
-                                        use_pallas=use_pallas, native=native,
-                                        mixed=mixed, bucket=bucket)
-    seg = _engine.segment_from_index(index, block=block)
-    return _engine.query_csr(index, [seg], q, radius, return_distance,
-                             query_tile=query_tile, use_pallas=use_pallas,
-                             native=native, mixed=mixed, bucket=bucket)
+    Structurally, a point-query batch is the bichromatic join whose A side
+    is a single chunk — this function delegates to `core.join.single_query`
+    (imported lazily: the join core imports this module at load time), the
+    same front-end the streaming index serves through.
+    """
+    from .join import single_query as _single_query
+
+    return _single_query(index, q, radius, return_distance,
+                         block=block, query_tile=query_tile,
+                         use_pallas=use_pallas, native=native,
+                         packed=packed, mixed=mixed, bucket=bucket)
 
 
 def csr_finalize(index: SNNIndex, indptr, indices, fd, xq, qsq, counts,

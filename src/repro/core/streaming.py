@@ -49,6 +49,9 @@ import numpy as np
 
 from . import engine as _engine
 from . import metrics as _metrics
+# direct module-path import: the package-level `join` export is the function
+from .join import query_counts as _join_query_counts
+from .join import single_query as _join_single_query
 from . import snn as _snn
 
 
@@ -352,16 +355,34 @@ class StreamingSNNIndex:
         ``packed=True`` (default) executes the snapshot's cached
         `SegmentPack` plan — one stacked launch per pass over base + all
         live deltas; ``packed=False`` keeps the per-segment looped executor.
+        Delegates to `core.join.single_query` (a point-query batch is a
+        single-chunk bichromatic join) with this snapshot's plan/segments.
         """
         parts, segs, plan = self._snapshot()
-        if packed:
-            return _engine.query_csr_packed(
-                parts[0], plan, q, radius, return_distance,
-                query_tile=query_tile, use_pallas=use_pallas, native=native,
-                mixed=mixed, bucket=bucket)
-        return _engine.query_csr(parts[0], segs, q, radius, return_distance,
-                                 query_tile=query_tile, use_pallas=use_pallas,
-                                 native=native, mixed=mixed, bucket=bucket)
+        return _join_single_query(parts[0], q, radius, return_distance,
+                                  pack=plan, segments=segs,
+                                  query_tile=query_tile,
+                                  use_pallas=use_pallas, native=native,
+                                  packed=packed, mixed=mixed, bucket=bucket)
+
+    def query_counts_device(self, q: np.ndarray, radius, *,
+                            query_tile: int = 128,
+                            use_pallas: bool | str | None = None,
+                            memory_budget_mb: float | None = None,
+                            mixed: bool = False,
+                            bucket: bool = True) -> np.ndarray:
+        """Exact per-query neighbor counts over base + deltas — pass 1 only.
+
+        The count-only analytics front-end (`core.join.query_counts`)
+        evaluated on this snapshot's cached plan: one
+        `engine.run_counts_packed` launch group, no compact pass, no CSR
+        staging.  Counts equal ``np.diff(query_radius_csr(...).indptr)``
+        exactly (identical predicate pipeline), at O(m) output memory.
+        """
+        return _join_query_counts(self, q, radius, query_tile=query_tile,
+                                  use_pallas=use_pallas,
+                                  memory_budget_mb=memory_budget_mb,
+                                  mixed=mixed, bucket=bucket)
 
     def query_knn(self, q: np.ndarray, k, return_distance: bool = True, *,
                   native: bool = True, query_tile: int = 128,

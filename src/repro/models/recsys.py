@@ -336,3 +336,26 @@ def score_candidates(user_repr, cand_emb, top_k: int = 100):
     scores = user_repr @ cand_emb.T
     vals, idx = jax.lax.top_k(scores, top_k)
     return vals, idx
+
+
+def retrieve_above(user_repr, cand_emb, threshold, *, index=None):
+    """Exact threshold MIPS retrieval via the bichromatic join core.
+
+    Unlike `score_candidates` (full GEMM over every candidate + top-k), this
+    is ``core.join(user_repr, cand_emb, threshold, metric="mips")``: the
+    candidate table is lifted once (the paper's MIPS reduction) and only the
+    candidates the sorted-window prune admits are scored — yet the result is
+    EXACT: row b of the returned CSR lists every candidate with
+    ``score >= threshold`` for ``user_repr[b]``, inner products as the
+    distances.  ``threshold`` may be per-row (e.g. each user's own top-k
+    cutoff from a previous pass); pass a prebuilt ``index``
+    (`core.build_index(cand_emb, metric="mips")`) to amortize the lift
+    across calls — multi-interest models (MIND) join all K capsules in one
+    call instead of K index scans.
+    """
+    from ..core import join as snn_join
+    user_repr = np.asarray(user_repr, np.float32)
+    if user_repr.ndim == 1:
+        user_repr = user_repr[None, :]
+    cand = None if index is not None else np.asarray(cand_emb, np.float32)
+    return snn_join(user_repr, cand, threshold, metric="mips", b_index=index)

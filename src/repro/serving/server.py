@@ -6,20 +6,39 @@ full, untruncated neighbor set, whatever its length.  Setting
 ``cfg.serve_exact = False`` restores the legacy fixed-shape top-K path
 (bounded response size, ``truncated`` flag when counts exceed K).
 
-Two request types share the dispatcher:
+Five request kinds share the dispatcher; four of them are front-ends over
+the SAME bichromatic-join primitive (`core.join`) and fuse into ONE packed
+engine execution per batch:
 
 * **snn-radius** (``Request(query, radius)``) — the fixed-radius search;
+* **snn-join** (``Request(queries_2d, radius)``) — a whole A-side block
+  joined against the served database in one request: the response is the
+  block's CSR (``indptr`` + flat ``indices``/``sq_dists``); ``radius`` may
+  be a per-row vector;
+* **snn-count** (``Request(query, radius, count_only=True)``) — neighbor
+  COUNTS only (range counting / degree analytics).  An all-count batch
+  skips the compact pass entirely (`engine.run_counts_packed` via
+  `core.join.query_counts`); counts mixed into a CSR batch are read off
+  the fused CSR row lengths at no extra dispatch;
+* **snn-reverse** (``Request(target, reverse=True)``) — exact reverse
+  neighbors: every served point i whose stored per-point radius covers the
+  target (``d(p_i, t) <= r_i``, set once via `SNNServer.set_reverse_radii`).
+  Served as a forward row at the batch's cover radius inside the same fused
+  dispatch, then filtered per point against the stored radii (float64
+  index-space thresholds — same measure-zero boundary caveat as
+  docs/architecture.md notes for host-vs-device thresholds);
 * **snn-knn** (``Request(query, k=...)``) — exact k nearest neighbors via
   the per-query radius-expansion front-end (`core.knn`).
 
 Requests are dynamically batched: the dispatcher collects up to
 ``serve_batch`` requests or waits at most ``serve_timeout_ms``, then fuses
-EVERY pending request of a type into one engine execution — the per-request
-radii (or k's) are scattered into the fused query block as the engine's
-per-query vectors, and the CSR rows are scattered back per request.  A
-batch of B requests with R distinct radii costs O(1) engine dispatches, not
-O(R): the per-radius-group loop this module used to run is gone, because
-the engine's radius contract is per-query now.
+EVERY pending request of the CSR family (radius + join + count + reverse)
+into one engine execution — each request's rows land in the fused query
+block with its radii scattered into the engine's per-query radius vector,
+and the CSR rows are scattered back per request.  A batch of B requests
+with R distinct radii and any mix of kinds costs O(1) engine dispatches,
+not O(R) and not O(kinds): the per-radius-group loop this module used to
+run is gone, because the engine's radius contract is per-query now.
 
 Online updates go through `append`: new points become a sorted LSM delta
 segment on the index's frozen mu/v1 (O(b log b) for a b-point batch — no
@@ -40,29 +59,51 @@ import traceback
 import numpy as np
 
 from ..configs.snn_default import SNNConfig
+from ..core import metrics as _metrics
 from ..core.streaming import StreamingSNNIndex
 
 
 @dataclasses.dataclass
 class Request:
-    """One serving request: radius search (``radius``) or kNN (``k``).
+    """One serving request; the kind is derived from which fields are set.
 
-    Exactly one of ``radius`` / ``k`` must be set; ``k`` makes it an
-    snn-knn request whose response holds the k nearest neighbors (ascending
-    distance) instead of an eps-ball.
+    Exactly one of ``radius`` / ``k`` must be set — except for reverse
+    requests, which set NEITHER (their radii are the server's stored
+    per-point vector).  ``k`` makes it an snn-knn request whose response
+    holds the k nearest neighbors (ascending distance) instead of an
+    eps-ball.  A 2-D ``query`` block makes a radius request an snn-join
+    (``radius`` then may be a per-row vector); ``count_only`` downgrades
+    any radius/join request to counts; ``reverse`` asks for the points
+    whose stored radius covers the query target(s).
     """
 
     query: np.ndarray
-    radius: float | None = None
+    radius: float | np.ndarray | None = None
     id: int = 0
     k: int | None = None
+    count_only: bool = False
+    reverse: bool = False
     # stamped by submit(); a default keeps requests that reach the dispatcher
     # by other routes (tests, replays) from crashing mid-batch
     _t0: float = dataclasses.field(default=0.0, repr=False, compare=False)
 
     @property
     def kind(self) -> str:
-        return "snn-knn" if self.k is not None else "snn-radius"
+        if self.k is not None:
+            return "snn-knn"
+        if self.reverse:
+            return "snn-reverse"
+        if self.count_only:
+            return "snn-count"
+        if np.asarray(self.query).ndim == 2:
+            return "snn-join"
+        return "snn-radius"
+
+    @property
+    def rows(self) -> int:
+        """Rows this request contributes to the fused query block."""
+        q = np.asarray(self.query)
+        return q.shape[0] if q.ndim == 2 else 1
 
 
 @dataclasses.dataclass
@@ -72,6 +113,10 @@ class Response:
     sq_dists: np.ndarray
     truncated: bool
     latency_ms: float
+    # snn-join / snn-reverse: per-row CSR offsets into indices/sq_dists
+    indptr: np.ndarray | None = None
+    # snn-count: per-row neighbor counts (no indices/sq_dists materialized)
+    counts: np.ndarray | None = None
 
 
 class SNNServer:
@@ -92,6 +137,10 @@ class SNNServer:
         self._done = threading.Event()
         self._lock = threading.Lock()
         self._thread: threading.Thread | None = None
+        # per-point radii for snn-reverse requests (original append order);
+        # points appended after set_reverse_radii() have no radius and never
+        # match until the radii are set again
+        self._reverse_radii: np.ndarray | None = None
 
     @property
     def data(self) -> np.ndarray:
@@ -147,11 +196,65 @@ class SNNServer:
                 return
         self.index.rebuild()
 
+    def set_reverse_radii(self, radii: np.ndarray):
+        """Store the per-point radii snn-reverse requests are answered with.
+
+        ``radii[i]`` is point i's radius (original append order, native
+        metric; for mips the per-point inner-product threshold).  Must cover
+        every currently-served point; points appended later have no radius
+        and never match a reverse request until this is called again.
+        """
+        radii = np.asarray(radii, np.float64)
+        n = self.index.n
+        if radii.ndim != 1 or radii.shape[0] != n:
+            raise ValueError(f"reverse radii must be a ({n},) vector "
+                             f"(one per served point); got shape "
+                             f"{radii.shape}")
+        with self._lock:
+            self._reverse_radii = radii.copy()
+
     # ------------------------------------------------------------- client
     def submit(self, req: Request):
-        if (req.radius is None) == (req.k is None):
+        """Validate and enqueue ``req``.
+
+        The one validation point for every request kind: exactly one of
+        ``radius=`` / ``k=`` must be set (reverse requests set neither —
+        their radii are the stored per-point vector), and kind-specific
+        shape rules are checked here so a malformed request fails fast at
+        the call site instead of poisoning a fused batch.
+        """
+        q = np.asarray(req.query)
+        if req.reverse:
+            if req.radius is not None or req.k is not None:
+                raise ValueError(
+                    "an snn-reverse Request takes neither radius= nor k= — "
+                    "it is answered with the stored per-point radii "
+                    "(SNNServer.set_reverse_radii)")
+            if req.count_only:
+                raise ValueError("count_only is not supported for "
+                                 "snn-reverse requests")
+            if self._reverse_radii is None:
+                raise ValueError("call set_reverse_radii() before "
+                                 "submitting snn-reverse requests")
+        elif (req.radius is None) == (req.k is None):
             raise ValueError("a Request needs exactly one of radius= "
-                             "(snn-radius) or k= (snn-knn)")
+                             "(snn-radius / snn-join / snn-count) or k= "
+                             "(snn-knn)")
+        if req.k is not None:
+            if req.count_only:
+                raise ValueError("count_only applies to radius requests "
+                                 "only, not snn-knn")
+            if q.ndim != 1:
+                raise ValueError("snn-knn queries are single (d,) points; "
+                                 f"got shape {q.shape}")
+        if q.ndim not in (1, 2):
+            raise ValueError(f"query must be (d,) or (m, d); got {q.shape}")
+        if req.radius is not None and np.ndim(req.radius):
+            rv = np.asarray(req.radius)
+            if rv.ndim != 1 or rv.shape[0] != req.rows:
+                raise ValueError(
+                    f"per-row radius must be a ({req.rows},) vector "
+                    f"matching the query block; got shape {rv.shape}")
         req._t0 = time.monotonic()
         with self._lock:
             self._events.setdefault(req.id, threading.Event())
@@ -199,31 +302,33 @@ class SNNServer:
 
     def _run_batch(self, batch: list[Request]):
         index = self.index
-        qs = np.stack([r.query for r in batch])
-        knn_sel = np.asarray([i for i, r in enumerate(batch)
-                              if r.kind == "snn-knn"], np.int64)
-        rad_sel = np.asarray([i for i, r in enumerate(batch)
-                              if r.kind == "snn-radius"], np.int64)
-        if rad_sel.size:
+        knn_sel = [i for i, r in enumerate(batch) if r.kind == "snn-knn"]
+        csr_sel = [i for i, r in enumerate(batch) if r.kind != "snn-knn"]
+        if csr_sel:
             try:
                 if self.cfg.serve_exact:
                     try:
-                        self._respond_radius(index, batch, qs, rad_sel)
+                        self._respond_csr_family(index, batch, csr_sel)
                     except Exception:
                         # The exact path's flat output is data-dependent (a
                         # pathologically dense batch can exceed the compact
                         # kernel's VMEM ceiling); degrade to the K-bounded
-                        # fixed path — per-query radii there too.
+                        # fixed path — per-query radii there too.  Only the
+                        # plain-radius subset has a fixed-shape equivalent;
+                        # join/count/reverse requests in the batch time out.
                         traceback.print_exc()
-                        self._respond_fixed(index, batch, qs, rad_sel)
+                        self._respond_fixed(index, batch, [
+                            i for i in csr_sel
+                            if batch[i].kind == "snn-radius"])
                 else:
-                    self._respond_fixed(index, batch, qs, rad_sel)
+                    self._respond_fixed(index, batch, [
+                        i for i in csr_sel if batch[i].kind == "snn-radius"])
             except Exception:
                 # these requests will time out; keep serving the rest
                 traceback.print_exc()
-        if knn_sel.size:
+        if knn_sel:
             try:
-                self._respond_knn(index, batch, qs, knn_sel)
+                self._respond_knn(index, batch, knn_sel)
             except Exception:
                 traceback.print_exc()
 
@@ -259,13 +364,54 @@ class SNNServer:
                 del self._events[rid]
                 stale.set()
 
-    def _respond_radius(self, index, batch, qs, sel):
-        """Exact path: ONE fused dispatch for the whole batch, mixed radii.
+    # ------------------------------------------------- reverse radii plumbing
+    def _reverse_tables(self):
+        """(stored radii, index-space sq thresholds, cover radius) snapshot.
 
-        Each request's radius lands in the fused query block as one entry of
-        the engine's per-query radius vector — heterogeneous radii cost the
-        same single packed execution a uniform batch does, and each response
-        is bit-identical to querying its request alone.  With
+        The thresholds convert each stored native radius into the squared
+        index-space Euclidean bound the fused dispatch's ``sq_dists`` are
+        compared against (`metrics.euclidean_radius` squared, precomputed
+        per point); for mips the per-target ``xi^2 + ||q||^2`` offset is
+        added at filter time.  The cover radius is the single most inclusive
+        stored radius — running each target forward at the cover returns a
+        superset of every per-point answer, which the float64 threshold
+        filter then trims exactly.
+        """
+        rr = self._reverse_radii
+        metric = self.cfg.metric
+        if metric == "euclidean":
+            thr = rr * rr
+        elif metric == "cosine":
+            thr = 2.0 * rr
+        elif metric == "angular":
+            thr = 2.0 - 2.0 * np.cos(rr)
+        else:  # mips: threshold is xi^2 + ||q||^2 - 2 S; offset added later
+            thr = -2.0 * rr
+        # mips thresholds are inner products: SMALLER is more inclusive
+        cover = float(rr.min() if metric == "mips" else rr.max())
+        return rr, thr, cover
+
+    def _filter_reverse_row(self, ids, sq, thr, mips_offset):
+        """Trim a cover-radius forward row to the exact reverse answer.
+
+        Keeps point i iff i has a stored radius and the row's index-space
+        squared distance is within i's own threshold (float64 throughout).
+        """
+        keep = ids < thr.shape[0]
+        ids, sq = ids[keep], np.asarray(sq, np.float64)[keep]
+        ok = sq <= thr[ids] + mips_offset
+        return ids[ok], sq[ok]
+
+    def _respond_csr_family(self, index, batch, sel):
+        """Exact path: ONE fused dispatch for every CSR-family request.
+
+        Radius, join, count, and reverse requests all reduce to rows of one
+        query block with per-row radii — heterogeneous radii AND kinds cost
+        the same single packed execution a uniform batch does, and each
+        response is bit-identical to querying its request alone.  An
+        all-count batch never runs the compact pass at all
+        (`core.join.query_counts` == `engine.run_counts_packed`); counts
+        mixed with CSR kinds are read off the fused CSR row lengths.  With
         ``cfg.serve_packed`` (default) the execution runs the streaming
         snapshot's `SegmentPack` plan — built on the first request of an
         index generation, reused by every request until an append/rebuild
@@ -274,33 +420,112 @@ class SNNServer:
         staging buffers are engine-level scratch reused across requests, so
         steady-state serving allocates only the exact-size responses.
         """
-        radii = np.asarray([batch[bi].radius for bi in sel], np.float64)
-        csr = index.query_radius_csr(qs[sel], radii,
-                                     query_tile=self.cfg.query_tile,
-                                     native=False,
-                                     packed=self.cfg.serve_packed,
-                                     use_pallas=self.cfg.backend,
-                                     bucket=self.cfg.serve_bucket)
-        now = time.monotonic()
-        for j, bi in enumerate(sel):
+        cfg = self.cfg
+        rev_thr = rev_cover = None
+        if any(batch[bi].kind == "snn-reverse" for bi in sel):
+            _, rev_thr, rev_cover = self._reverse_tables()
+        spans, qparts, rparts = [], [], []
+        row0 = 0
+        for bi in sel:
             r = batch[bi]
-            idx, sq = csr.row(j)
-            # copy: row() returns views into the batch-wide flat arrays, and a
-            # Response parked in _results must not pin the whole batch
-            self._store(Response(
-                id=r.id, indices=np.array(idx), sq_dists=np.array(sq),
-                truncated=False,
-                latency_ms=(now - r._t0) * 1e3 if r._t0 else 0.0))
+            q = np.asarray(r.query, np.float32)
+            q2 = q[None, :] if q.ndim == 1 else q
+            mi = q2.shape[0]
+            if r.kind == "snn-reverse":
+                rv = np.full(mi, rev_cover, np.float64)
+            else:
+                rv = _metrics.broadcast_radius(r.radius, mi)
+            qparts.append(q2)
+            rparts.append(rv)
+            spans.append((bi, row0, mi))
+            row0 += mi
+        qs = np.concatenate(qparts, axis=0)
+        radii = np.concatenate(rparts)
+        empty_i = np.zeros(0, np.int64)
+        empty_f = np.zeros(0, np.float64)
+        if (cfg.serve_count_pass
+                and all(batch[bi].kind == "snn-count" for bi in sel)):
+            counts = index.query_counts_device(
+                qs, radii, query_tile=cfg.query_tile,
+                use_pallas=cfg.backend, bucket=cfg.serve_bucket)
+            now = time.monotonic()
+            for bi, s, mi in spans:
+                r = batch[bi]
+                self._store(Response(
+                    id=r.id, indices=empty_i, sq_dists=empty_f,
+                    truncated=False,
+                    latency_ms=(now - r._t0) * 1e3 if r._t0 else 0.0,
+                    counts=counts[s:s + mi].copy()))
+            return
+        csr = index.query_radius_csr(qs, radii,
+                                     query_tile=cfg.query_tile,
+                                     native=False,
+                                     packed=cfg.serve_packed,
+                                     use_pallas=cfg.backend,
+                                     bucket=cfg.serve_bucket)
+        now = time.monotonic()
+        for bi, s, mi in spans:
+            r = batch[bi]
+            lat = (now - r._t0) * 1e3 if r._t0 else 0.0
+            # copies throughout: CSR rows are views into the batch-wide flat
+            # arrays, and a Response parked in _results must not pin them
+            if r.kind == "snn-count":
+                cnt = (csr.indptr[s + 1:s + mi + 1]
+                       - csr.indptr[s:s + mi])
+                self._store(Response(
+                    id=r.id, indices=empty_i, sq_dists=empty_f,
+                    truncated=False, latency_ms=lat, counts=cnt.copy()))
+            elif r.kind == "snn-join":
+                lo, hi = csr.indptr[s], csr.indptr[s + mi]
+                self._store(Response(
+                    id=r.id, indices=np.array(csr.indices[lo:hi]),
+                    sq_dists=np.array(csr.distances[lo:hi]),
+                    truncated=False, latency_ms=lat,
+                    indptr=(csr.indptr[s:s + mi + 1] - lo).copy()))
+            elif r.kind == "snn-reverse":
+                if cfg.metric == "mips":
+                    xi = index.base.xi
+                    qsq = np.einsum("ij,ij->i",
+                                    np.asarray(qs[s:s + mi], np.float64),
+                                    np.asarray(qs[s:s + mi], np.float64))
+                    offs = xi * xi + qsq
+                else:
+                    offs = np.zeros(mi)
+                parts_i, parts_d = [], []
+                for t in range(mi):
+                    ids, sq = csr.row(s + t)
+                    fi, fd = self._filter_reverse_row(ids, sq, rev_thr,
+                                                      offs[t])
+                    parts_i.append(fi)
+                    parts_d.append(fd)
+                indptr = np.zeros(mi + 1, np.int64)
+                np.cumsum([p.size for p in parts_i], out=indptr[1:])
+                self._store(Response(
+                    id=r.id, indices=np.concatenate(parts_i),
+                    sq_dists=np.concatenate(parts_d),
+                    truncated=False, latency_ms=lat,
+                    indptr=(indptr if np.asarray(r.query).ndim == 2
+                            else None)))
+            else:  # snn-radius
+                idx, sq = csr.row(s)
+                self._store(Response(
+                    id=r.id, indices=np.array(idx), sq_dists=np.array(sq),
+                    truncated=False, latency_ms=lat))
 
-    def _respond_fixed(self, index, batch, qs, sel):
+    def _respond_fixed(self, index, batch, sel):
         """Legacy fixed-shape path: K-bounded responses with a truncated flag.
 
         Fused exactly like the exact path — the per-query radius vector
-        flows through `query_radius_fixed` unchanged.
+        flows through `query_radius_fixed` unchanged.  Plain snn-radius
+        requests only (join/count/reverse have no fixed-shape equivalent).
         """
+        if not sel:
+            return
+        qs = np.stack([np.asarray(batch[bi].query, np.float32)
+                       for bi in sel])
         radii = np.asarray([batch[bi].radius for bi in sel], np.float64)
         idx, sq, valid, counts = index.query_radius_fixed(
-            qs[sel], radii, self.cfg.max_neighbors)
+            qs, radii, self.cfg.max_neighbors)
         now = time.monotonic()
         for j, bi in enumerate(sel):
             r = batch[bi]
@@ -309,7 +534,7 @@ class SNNServer:
                 truncated=bool(counts[j] > self.cfg.max_neighbors),
                 latency_ms=(now - r._t0) * 1e3 if r._t0 else 0.0))
 
-    def _respond_knn(self, index, batch, qs, sel):
+    def _respond_knn(self, index, batch, sel):
         """snn-knn: one fused per-query-k search (`core.knn`) for the batch.
 
         Mixed k's fuse the same way mixed radii do — the expansion loop's
@@ -318,8 +543,10 @@ class SNNServer:
         (the radius paths' ``sq_dists`` convention), trimmed to each
         request's k.
         """
+        qs = np.stack([np.asarray(batch[bi].query, np.float32)
+                       for bi in sel])
         ks = np.asarray([batch[bi].k for bi in sel], np.int64)
-        idx, sq = index.query_knn(qs[sel], ks, native=False,
+        idx, sq = index.query_knn(qs, ks, native=False,
                                   query_tile=self.cfg.query_tile,
                                   use_pallas=self.cfg.backend,
                                   bucket=self.cfg.serve_bucket)

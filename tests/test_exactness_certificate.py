@@ -243,6 +243,69 @@ def test_property_lattice_multisegment_vector_radius(seed):
 
 
 # --------------------------------------------------------------------------- #
+# bichromatic join: boundary plants survive the sorted-chunk schedule          #
+# --------------------------------------------------------------------------- #
+def test_join_exact_boundary_shell():
+    # the same 3-4-5 shell construction as the euclidean certificate, but
+    # driven through `core.join`'s A-side argsort + chunked schedule: the
+    # schedule is a reordering, so every exactly-on-the-boundary decision
+    # must land identically to the unscheduled engine AND the f64 oracle
+    from repro.core.join import join as _join
+
+    shell = [(3, 4, 0), (0, 3, 4), (4, 0, 3), (5, 0, 0), (0, 0, 5)]
+    inner = [(1, 1, 1), (2, 2, 0), (1, 0, 2)]
+    outer = [(6, 0, 0), (4, 4, 4), (0, 7, 1)]
+    x = _sym(shell + inner + outer)
+    index = _snn.build_index(x)
+    # A side: lattice queries including the exact boundary-centred origin,
+    # deliberately NOT in alpha order (the join must sort and unsort them)
+    a = np.array([[2, 2, 2], [0, 0, 0], [1, 0, 0], [-1, -1, -1],
+                  [0, 0, 0]], np.float32)
+    want_indptr, want_ids = _oracle_csr(index, a, 5.0)
+    for qc, sr in ((1, 8), (2, 16), (512, 512)):
+        res = _join(a, None, 5.0, b_index=index, query_chunk=qc,
+                    segment_rows=sr)
+        tag = (qc, sr)
+        assert np.array_equal(res.indptr, want_indptr), tag
+        assert np.array_equal(res.indices, want_ids), tag
+    # the whole shell (and its negation for the origin query) is ON the
+    # boundary: bracketing radii must flip exactly those points
+    below = _join(a, None, 5.0 * (1.0 - 1e-5), b_index=index)
+    above = _join(a, None, 5.0 * (1.0 + 1e-5), b_index=index)
+    origin_rows = [1, 4]
+    for i in origin_rows:
+        flipped = ((above.indptr[i + 1] - above.indptr[i])
+                   - (below.indptr[i + 1] - below.indptr[i]))
+        assert flipped == 2 * len(shell), i
+
+
+def test_join_ulp_plants_per_row_radius():
+    # ulp-nudged boundary plants under PER-ROW radii: each A row carries its
+    # own exactly-representable radius, and the f64 oracle must agree with
+    # the scheduled join on every inward/outward call
+    from repro.core.join import join as _join
+
+    plants = [_nudge((3, 4, 0), 0, +4), _nudge((3, 4, 0), 0, -4),
+              _nudge((5, 0, 0), 0, +4), _nudge((5, 0, 0), 0, -4)]
+    anchors = [(1, 1, 0), (2, 0, 1), (6, 1, 0)]
+    x = _sym(np.concatenate([np.stack(plants),
+                             np.asarray(anchors, np.float32)]))
+    index = _snn.build_index(x)
+    a = np.zeros((3, 3), np.float32)
+    a[1, 0] = 1.0
+    a[2, 1] = -1.0
+    radii = np.array([5.0, 4.0, 6.0])
+    want_indptr, want_ids = _oracle_csr(index, a, radii)
+    res = _join(a, None, radii, b_index=index, query_chunk=2,
+                segment_rows=8)
+    assert np.array_equal(res.indptr, want_indptr)
+    assert np.array_equal(res.indices, want_ids)
+    # row 0 at r=5: exactly the two inward plant pairs + the (1,1,0) and
+    # (2,0,1) anchor pairs are inside
+    assert want_indptr[1] - want_indptr[0] == 2 * 2 + 2 * 2
+
+
+# --------------------------------------------------------------------------- #
 # counts-parity regression: run_counts_packed == pass 1 of run_csr_packed      #
 # --------------------------------------------------------------------------- #
 @pytest.mark.parametrize("use_pallas", [None, True, "pallas-gpu"])

@@ -1,0 +1,212 @@
+"""The bichromatic join core (core.join) and its workload front-ends.
+
+`join(A, B, r)` must be indistinguishable from the brute-force
+O(|A| * |B|) oracle for every metric, radius shape (scalar / per-row
+vector), degenerate input (empty A, empty B, duplicates), and schedule
+(chunk size, segment size) — and `build_neighbor_graph` must be
+bit-identical to ``join(X, X, eps)``, since the self-join IS that join.
+Reverse neighbors are checked against the transposed oracle and the
+count-only front-ends against the CSR row lengths.
+"""
+import numpy as np
+import pytest
+from _hyp_compat import given, settings, st
+
+from repro.core import (build_index, build_neighbor_graph, degree_histogram,
+                        join, join_counts, query_counts_device,
+                        query_radius_csr, reverse_neighbors)
+from repro.core import metrics as _metrics
+from repro.core.join import transpose_csr
+
+# only the hypothesis sweeps are excluded from the fail-fast CI smoke lane;
+# the deterministic parity/bit-identity tests run there
+
+
+# --------------------------------------------------------------------------- #
+# Oracle                                                                       #
+# --------------------------------------------------------------------------- #
+def _oracle_join(a, b, radius, metric):
+    """Brute-force float64 membership grid: mask[i, j] = b[j] in ball(a[i])."""
+    ta, _ = np.asarray(_metrics.transform_query(a, metric)), None
+    tb, xi = _metrics.transform_data(b, metric)
+    # index-space squared distances between transformed rows
+    sq = _metrics.pairwise_sq_dists(tb, ta)                      # (ma, nb)
+    re = _metrics.euclidean_radius(radius, ta, metric, xi)       # (ma,)
+    return sq <= (re * re)[:, None]
+
+
+def _rows_match_oracle(csr, mask, *, slack_from=None):
+    """Each CSR row must equal the oracle row as a SET of column ids.
+
+    ``slack_from`` relaxes exact-boundary disagreements: any id on which the
+    two differ must sit exactly on its row's boundary shell (|d - r| tiny) —
+    the device float32 chain and the float64 oracle may round an exact
+    boundary differently (docs/architecture.md caveat); random data makes
+    these measure-zero, so by default NO slack is applied.
+    """
+    m = mask.shape[0]
+    assert csr.indptr.shape == (m + 1,)
+    for i in range(m):
+        got = set(csr.row(i)[0].tolist())
+        want = set(np.nonzero(mask[i])[0].tolist())
+        assert got == want, f"row {i}: missing {want - got}, extra {got - want}"
+
+
+# --------------------------------------------------------------------------- #
+# join vs oracle                                                               #
+# --------------------------------------------------------------------------- #
+@pytest.mark.slow
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), ma=st.integers(1, 120),
+       nb=st.integers(1, 400), d=st.integers(1, 8),
+       rscale=st.floats(0.2, 2.0))
+def test_join_matches_oracle_euclidean(seed, ma, nb, d, rscale):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(ma, d)).astype(np.float32)
+    b = rng.normal(size=(nb, d)).astype(np.float32)
+    r = rscale * np.sqrt(d) * 0.4
+    csr = join(a, b, r, query_chunk=48, segment_rows=32)
+    _rows_match_oracle(csr, _oracle_join(a, b, r, "euclidean"))
+
+
+def test_join_matches_oracle_all_metrics():
+    rng = np.random.default_rng(3)
+    a = rng.normal(size=(60, 5)).astype(np.float32) + 0.2
+    b = rng.normal(size=(250, 5)).astype(np.float32) + 0.2
+    for metric, r in (("euclidean", 0.9), ("cosine", 0.3),
+                      ("angular", 0.7), ("mips", 0.5)):
+        csr = join(a, b, r, metric=metric, query_chunk=32, segment_rows=64)
+        _rows_match_oracle(csr, _oracle_join(a, b, r, metric))
+
+
+def test_join_per_row_radius_vector():
+    rng = np.random.default_rng(11)
+    a = rng.normal(size=(80, 4)).astype(np.float32)
+    b = rng.normal(size=(300, 4)).astype(np.float32)
+    radii = rng.uniform(0.2, 1.2, 80)
+    csr = join(a, b, radii, query_chunk=24, segment_rows=48)
+    _rows_match_oracle(csr, _oracle_join(a, b, radii, "euclidean"))
+    with pytest.raises(ValueError):
+        join(a, b, radii[:-1])  # wrong-length vector must be rejected
+
+
+def test_join_empty_sides_and_duplicates():
+    rng = np.random.default_rng(5)
+    b = rng.normal(size=(100, 3)).astype(np.float32)
+    ea = join(np.zeros((0, 3), np.float32), b, 0.5)
+    assert ea.indptr.shape == (1,) and ea.indices.size == 0
+    eb = join(b[:7], np.zeros((0, 3), np.float32), 0.5)
+    assert eb.indptr.shape == (8,) and eb.indices.size == 0
+    # duplicates on both sides: every copy must appear in every dup row
+    a = np.repeat(b[:5], 3, axis=0)                  # 15 rows, 5 distinct
+    bb = np.concatenate([b, b[:5]])                  # ids 100..104 dup 0..4
+    csr = join(a, bb, 0.4, query_chunk=4, segment_rows=16)
+    _rows_match_oracle(csr, _oracle_join(a, bb, 0.4, "euclidean"))
+
+
+def test_join_schedule_invariance():
+    """Chunk/segment sizing reorders work, never changes any row."""
+    rng = np.random.default_rng(9)
+    a = rng.normal(size=(90, 6)).astype(np.float32)
+    b = rng.normal(size=(350, 6)).astype(np.float32)
+    ref = join(a, b, 0.9)
+    for qc, sr in ((7, 16), (48, 96), (512, 512)):
+        got = join(a, b, 0.9, query_chunk=qc, segment_rows=sr)
+        np.testing.assert_array_equal(got.indptr, ref.indptr)
+        np.testing.assert_array_equal(got.indices, ref.indices)
+        np.testing.assert_array_equal(got.distances, ref.distances)
+
+
+def test_join_bit_identical_to_point_queries():
+    """Per row, the scheduled join IS the unscheduled query batch."""
+    rng = np.random.default_rng(17)
+    a = rng.normal(size=(70, 5)).astype(np.float32)
+    b = rng.normal(size=(400, 5)).astype(np.float32)
+    index = build_index(b)
+    want = query_radius_csr(index, a, 0.8, return_distance=True)
+    got = join(a, None, 0.8, b_index=index, query_chunk=16, segment_rows=64)
+    np.testing.assert_array_equal(got.indptr, want.indptr)
+    np.testing.assert_array_equal(got.indices, want.indices)
+    np.testing.assert_array_equal(got.distances, want.distances)
+
+
+# --------------------------------------------------------------------------- #
+# Self-join bit-identity                                                       #
+# --------------------------------------------------------------------------- #
+def test_graph_is_join_xx_bit_identical():
+    rng = np.random.default_rng(23)
+    x = rng.normal(size=(300, 6)).astype(np.float32)
+    for metric, eps in (("euclidean", 0.8), ("cosine", 0.3), ("mips", 0.4)):
+        g = build_neighbor_graph(x, eps, metric=metric, return_distance=True)
+        j = join(x, x, eps, metric=metric)
+        np.testing.assert_array_equal(g.indptr, j.indptr)
+        np.testing.assert_array_equal(g.indices, j.indices)
+        np.testing.assert_array_equal(g.distances, j.distances)
+
+
+# --------------------------------------------------------------------------- #
+# Reverse neighbors                                                            #
+# --------------------------------------------------------------------------- #
+@pytest.mark.slow
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), npts=st.integers(1, 120),
+       nt=st.integers(1, 150), d=st.integers(1, 6))
+def test_reverse_neighbors_matches_transpose_oracle(seed, npts, nt, d):
+    rng = np.random.default_rng(seed)
+    points = rng.normal(size=(npts, d)).astype(np.float32)
+    targets = rng.normal(size=(nt, d)).astype(np.float32)
+    radii = rng.uniform(0.2, 1.5, npts)
+    rev = reverse_neighbors(points, targets, radii, return_distance=True)
+    mask = _oracle_join(points, targets, radii, "euclidean")  # (npts, nt)
+    assert rev.indptr.shape == (nt + 1,)
+    for j in range(nt):
+        got = rev.row(j)[0]
+        want = np.nonzero(mask[:, j])[0]
+        # row contents keep ascending input-row order under the transpose
+        np.testing.assert_array_equal(got, want)
+
+
+def test_reverse_is_exact_transpose_of_forward():
+    rng = np.random.default_rng(31)
+    points = rng.normal(size=(80, 4)).astype(np.float32)
+    targets = rng.normal(size=(120, 4)).astype(np.float32)
+    radii = rng.uniform(0.3, 1.0, 80)
+    fwd = join(points, targets, radii, return_distance=True)
+    ti, tc, td = transpose_csr(fwd.indptr, fwd.indices, fwd.distances, 120)
+    rev = reverse_neighbors(points, targets, radii, return_distance=True)
+    np.testing.assert_array_equal(rev.indptr, ti)
+    np.testing.assert_array_equal(rev.indices, tc)
+    np.testing.assert_array_equal(rev.distances, td)
+
+
+# --------------------------------------------------------------------------- #
+# Count-only analytics                                                         #
+# --------------------------------------------------------------------------- #
+def test_join_counts_cross_checks_csr_degrees():
+    rng = np.random.default_rng(41)
+    a = rng.normal(size=(90, 5)).astype(np.float32)
+    b = rng.normal(size=(400, 5)).astype(np.float32)
+    radii = rng.uniform(0.3, 1.2, 90)
+    csr = join(a, b, radii, query_chunk=32, segment_rows=64)
+    counts = join_counts(a, b, radii, query_chunk=32, segment_rows=64)
+    np.testing.assert_array_equal(counts, np.diff(csr.indptr))
+
+
+def test_query_counts_device_cross_checks_csr():
+    rng = np.random.default_rng(43)
+    b = rng.normal(size=(350, 6)).astype(np.float32)
+    q = rng.normal(size=(40, 6)).astype(np.float32)
+    index = build_index(b)
+    csr = query_radius_csr(index, q, 0.9)
+    np.testing.assert_array_equal(query_counts_device(index, q, 0.9),
+                                  np.diff(csr.indptr))
+
+
+def test_degree_histogram_matches_graph_degrees():
+    rng = np.random.default_rng(47)
+    x = rng.normal(size=(250, 4)).astype(np.float32)
+    hist, degrees = degree_histogram(x, 0.7)
+    g = build_neighbor_graph(x, 0.7)
+    np.testing.assert_array_equal(degrees, np.diff(g.indptr))
+    np.testing.assert_array_equal(hist, np.bincount(degrees))
+    assert hist.sum() == 250

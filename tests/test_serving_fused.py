@@ -148,11 +148,146 @@ def test_knn_request_type_end_to_end():
 
 def test_submit_rejects_ambiguous_requests():
     server, _, _ = _mk_server(n=50, d=3)
+    q = np.zeros(3, np.float32)
+    qb = np.zeros((2, 3), np.float32)
     with pytest.raises(ValueError):
-        server.submit(Request(query=np.zeros(3, np.float32), id=0))
+        server.submit(Request(query=q, id=0))                 # neither set
     with pytest.raises(ValueError):
-        server.submit(Request(query=np.zeros(3, np.float32), radius=0.5,
-                              k=3, id=1))
+        server.submit(Request(query=q, radius=0.5, k=3, id=1))  # both set
+    with pytest.raises(ValueError):                           # reverse+radius
+        server.submit(Request(query=q, radius=0.5, reverse=True, id=2))
+    with pytest.raises(ValueError):                           # reverse+k
+        server.submit(Request(query=q, k=3, reverse=True, id=3))
+    with pytest.raises(ValueError):                           # radii not set
+        server.submit(Request(query=q, reverse=True, id=4))
+    with pytest.raises(ValueError):                           # knn + count
+        server.submit(Request(query=q, k=3, count_only=True, id=5))
+    with pytest.raises(ValueError):                           # knn on a block
+        server.submit(Request(query=qb, k=3, id=6))
+    with pytest.raises(ValueError):                           # bad radius vec
+        server.submit(Request(query=qb, radius=np.array([0.1, 0.2, 0.3]),
+                              id=7))
+    server.set_reverse_radii(np.full(50, 0.1))
+    with pytest.raises(ValueError):                           # reverse+count
+        server.submit(Request(query=q, reverse=True, count_only=True, id=8))
+    with pytest.raises(ValueError):                           # wrong length
+        server.set_reverse_radii(np.full(49, 0.1))
+
+
+def test_mixed_kind_batch_is_one_dispatch_and_bit_identical():
+    """Radius + join + count + reverse fuse into ONE packed CSR dispatch.
+
+    16 total CSR-family rows = one oracle-path filter tile feeding both
+    passes; the old one-dispatch-per-kind design would pay >= 4.
+    """
+    server, data, rng = _mk_server()
+    rr = rng.uniform(0.05, 0.35, data.shape[0])
+    server.set_reverse_radii(rr)
+    jq = rng.random((8, 8)).astype(np.float32)          # join block: 8 rows
+    jr = rng.uniform(0.1, 0.5, 8)
+    cq = rng.random((3, 8)).astype(np.float32)          # count block: 3 rows
+    q0 = rng.random(8).astype(np.float32)               # plain radius: 1 row
+    tgt = rng.random((4, 8)).astype(np.float32)         # reverse: 4 rows
+    batch = [
+        Request(query=q0, radius=0.4, id=0),
+        Request(query=jq, radius=jr, id=1),
+        Request(query=cq, radius=0.45, count_only=True, id=2),
+        Request(query=tgt, reverse=True, id=3),
+    ]
+    server.index.plan()
+    _engine.DISPATCH_STATS.reset()
+    server._run_batch(batch)
+    stats = _engine.DISPATCH_STATS.snapshot()
+    assert stats["kernel_launches"] <= 2, stats
+    idx = server.index
+    # plain radius: bit-identical to the standalone query
+    want0 = idx.query_radius_csr(q0[None], 0.4, native=False)
+    np.testing.assert_array_equal(server._results[0].indices, want0.row(0)[0])
+    np.testing.assert_array_equal(server._results[0].sq_dists,
+                                  want0.row(0)[1])
+    # join block: per-row radii, bit-identical CSR
+    want1 = idx.query_radius_csr(jq, jr, native=False)
+    r1 = server._results[1]
+    np.testing.assert_array_equal(r1.indptr, want1.indptr)
+    np.testing.assert_array_equal(r1.indices, want1.indices)
+    np.testing.assert_array_equal(r1.sq_dists, want1.distances)
+    # counts: the standalone CSR row lengths
+    want2 = idx.query_radius_csr(cq, 0.45, native=False)
+    np.testing.assert_array_equal(server._results[2].counts,
+                                  np.diff(want2.indptr))
+    # reverse: float64 oracle over the stored per-point radii
+    r3 = server._results[3]
+    d = np.sqrt(
+        ((data[None, :, :].astype(np.float64) - tgt[:, None, :]) ** 2)
+        .sum(-1))                                        # (4, n)
+    for t in range(4):
+        want = np.nonzero(d[t] <= rr)[0]
+        lo, hi = r3.indptr[t], r3.indptr[t + 1]
+        np.testing.assert_array_equal(np.sort(r3.indices[lo:hi]), want)
+
+
+def test_mixed_kind_batch_with_knn_stays_o1_dispatches():
+    """All FIVE kinds in one batch: one CSR dispatch + the kNN rounds."""
+    server, data, rng = _mk_server()
+    server.set_reverse_radii(rng.uniform(0.05, 0.3, data.shape[0]))
+    qs = rng.random((8, 8)).astype(np.float32)
+    batch = [
+        Request(query=qs[0], radius=0.4, id=0),
+        Request(query=qs[1:5], radius=0.35, id=1),
+        Request(query=qs[5], radius=0.45, count_only=True, id=2),
+        Request(query=qs[6], reverse=True, id=3),
+        Request(query=qs[7], k=5, id=4),
+    ]
+    server.index.plan()
+    _engine.DISPATCH_STATS.reset()
+    server._run_batch(batch)
+    stats = _engine.DISPATCH_STATS.snapshot()
+    # 7 CSR rows = 1 tile; kNN adds its seed/expansion/final passes — a
+    # constant, NOT a per-request or per-kind multiple
+    assert stats["kernel_launches"] <= 8, stats
+    assert all(i in server._results for i in range(5))
+    assert server._results[4].indices.size == 5
+
+
+def test_all_count_batch_skips_compact_pass():
+    """A pure count batch answers from engine pass 1 only (no compact)."""
+    server, data, rng = _mk_server()
+    qs = rng.random((6, 8)).astype(np.float32)
+    radii = rng.uniform(0.2, 0.6, 6)
+    batch = [Request(query=qs[i], radius=float(radii[i]), count_only=True,
+                     id=i) for i in range(6)]
+    server.index.plan()
+    _engine.DISPATCH_STATS.reset()
+    server._run_batch(batch)
+    stats = _engine.DISPATCH_STATS.snapshot()
+    assert stats["kernel_launches"] <= 1, stats    # count pass only
+    for i in range(6):
+        want = server.index.query_radius_csr(qs[i:i + 1], float(radii[i]),
+                                             native=False)
+        got = server._results[i].counts
+        assert got.shape == (1,)
+        assert got[0] == want.row(0)[0].size
+        assert server._results[i].indices.size == 0   # nothing materialized
+
+
+def test_reverse_requests_end_to_end():
+    server, data, rng = _mk_server(n=600, d=5, serve_batch=8)
+    rr = rng.uniform(0.05, 0.4, 600)
+    server.set_reverse_radii(rr)
+    tgts = rng.random((10, 5)).astype(np.float32)
+    server.start()
+    try:
+        for i in range(10):
+            server.submit(Request(query=tgts[i], reverse=True, id=i))
+        d = np.sqrt(
+            ((data[None, :, :].astype(np.float64) - tgts[:, None, :]) ** 2)
+            .sum(-1))
+        for i in range(10):
+            resp = server.result(i)
+            want = np.nonzero(d[i] <= rr)[0]
+            np.testing.assert_array_equal(np.sort(resp.indices), want)
+    finally:
+        server.stop()
 
 
 def test_rebuild_forces_full_reindex_and_bumps_generation():
