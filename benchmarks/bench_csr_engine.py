@@ -88,15 +88,22 @@ def count_pass_cell(n: int, record: list, *, d: int = 16, m: int = 256,
     kw = dict(query_tile=query_tile, use_pallas=None)
     variants = {
         "dense": dict(),
-        "pruned": dict(pq=pqp),
-        "pruned_mixed": dict(pq=pqp, mixed=True),
+        "pruned": dict(pq=pqp, compacted=False),
+        "pruned_mixed": dict(pq=pqp, mixed=True, compacted=False),
+        "compacted": dict(pq=pqp, compacted=True),
     }
     counts0 = None
-    times_us, fractions = {}, {}
+    times_us, fractions, dispatch = {}, {}, {}
     peak = peak_gemm_gflops() if peak_gflops is None else peak_gflops
     for name, extra in variants.items():
+        _engine.DISPATCH_STATS.reset()
         c = np.asarray(_engine.run_counts_packed(pack, qp, aqp, rp, thp, m_,
                                                  **kw, **extra))
+        snap = _engine.DISPATCH_STATS.snapshot()
+        # deterministic per-packed-query dispatch counters (the CI tripwire
+        # diffs these — unlike timings they cannot flake)
+        dispatch[name] = {"kernel_launches": snap["kernel_launches"],
+                          "host_transfers": snap["host_transfers"]}
         if counts0 is None:
             counts0 = c
         else:
@@ -125,16 +132,25 @@ def count_pass_cell(n: int, record: list, *, d: int = 16, m: int = 256,
         box &= np.abs(pj64[c][None, :] - pq64[c][:, None]) <= lim
     surv_window, surv_box = int(window.sum()), int(box.sum())
 
+    reduction = surv_window / max(surv_box, 1)
+    speedups = {name: times_us["dense"] / times_us[name]
+                for name in variants if name != "dense"}
     cell = {
         "n": n, "d": d, "m": int(m_), "radius": radius,
         "data": "clustered-low-intrinsic-dim",
         "total_neighbors": int(counts0.sum()),
         "count_pass_us": times_us,
-        "count_speedup": times_us["dense"] / times_us["pruned"],
-        "count_speedup_mixed": times_us["dense"] / times_us["pruned_mixed"],
+        "count_speedup": speedups["pruned"],
+        "count_speedup_mixed": speedups["pruned_mixed"],
+        "count_speedup_compacted": speedups["compacted"],
         "survivors_window": surv_window,
         "survivors_box": surv_box,
-        "survivor_reduction": surv_window / max(surv_box, 1),
+        "survivor_reduction": reduction,
+        # how much of the survivor cut each variant converts into speedup:
+        # 1.0 would mean pruned pairs cost literally nothing
+        "survivor_conversion": {name: s / reduction
+                                for name, s in speedups.items()},
+        "dispatch": dispatch,
         "roofline": {"peak_gemm_gflops": peak,
                      "fraction_of_roofline": fractions},
     }
@@ -148,6 +164,7 @@ def count_pass_cell(n: int, record: list, *, d: int = 16, m: int = 256,
         f"csr_engine/count_speedup/{tag}", times_us["pruned"] / 1e6,
         f"speedup={cell['count_speedup']:.2f}x"
         f"|mixed={cell['count_speedup_mixed']:.2f}x"
+        f"|compacted={cell['count_speedup_compacted']:.2f}x"
         f"|survivor_reduction={cell['survivor_reduction']:.1f}x"))
     return cell
 

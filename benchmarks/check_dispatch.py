@@ -1,0 +1,134 @@
+"""Dispatch-counter tripwire: fail CI when launches/transfers regress.
+
+Timings flake on shared runners; the engine's dispatch counters do not — for
+a fixed code path, `DISPATCH_STATS.kernel_launches` / `host_transfers` per
+packed query are deterministic integers.  This check keeps the engine's
+dispatch discipline (one launch + one transfer per steady-state packed
+query after the fused/compacted work) from silently eroding:
+
+1. **Artifact diff** — compares the per-variant ``dispatch`` counters in the
+   freshly generated ``BENCH_roofline.json`` / ``BENCH_csr_engine.json``
+   (the bench lane regenerates them in the working tree) against the
+   committed baselines (``git show HEAD:<file>``).  Any variant needing MORE
+   launches or transfers than the committed artifact fails; fewer is an
+   improvement and passes (commit the new artifact to ratchet the baseline).
+   Baselines without counters (pre-tripwire artifacts) are skipped with a
+   note.
+2. **Live fused probe** — runs a small packed query twice through the fused
+   device path (interpret mode, so it runs anywhere) and asserts the
+   steady-state query costs exactly ONE kernel launch and ONE host transfer.
+
+Run as ``PYTHONPATH=src python -m benchmarks.check_dispatch`` after the
+bench lane has regenerated the JSONs.  Exit code 1 on any regression.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+
+CHECKED = ("BENCH_roofline.json", "BENCH_csr_engine.json")
+FIELDS = ("kernel_launches", "host_transfers")
+
+
+def _committed(fname: str) -> dict | None:
+    try:
+        blob = subprocess.run(["git", "show", f"HEAD:{fname}"],
+                              capture_output=True, check=True)
+        return json.loads(blob.stdout)
+    except (subprocess.CalledProcessError, OSError, json.JSONDecodeError):
+        return None
+
+
+def _dispatch_tables(payload: dict):
+    """Yield (label, {variant: {field: count}}) tables found in a payload."""
+    cell = payload.get("measured_count_pass")
+    if isinstance(cell, dict) and "dispatch" in cell:
+        yield f"measured_count_pass[n={cell.get('n')}]", cell["dispatch"]
+    for cell in payload.get("count_pass_cells", []) or []:
+        if isinstance(cell, dict) and "dispatch" in cell:
+            yield f"count_pass_cells[n={cell.get('n')}]", cell["dispatch"]
+
+
+def diff_artifacts() -> list[str]:
+    problems = []
+    for fname in CHECKED:
+        base = _committed(fname)
+        try:
+            with open(fname) as f:
+                fresh = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            print(f"# {fname}: no fresh artifact, skipped")
+            continue
+        if base is None:
+            print(f"# {fname}: no committed baseline, skipped")
+            continue
+        base_tables = dict(_dispatch_tables(base))
+        fresh_tables = dict(_dispatch_tables(fresh))
+        if not base_tables:
+            print(f"# {fname}: committed baseline has no dispatch "
+                  f"counters, skipped")
+            continue
+        for label, base_disp in base_tables.items():
+            fresh_disp = fresh_tables.get(label)
+            if fresh_disp is None:
+                problems.append(f"{fname} {label}: dispatch table missing "
+                                f"from fresh artifact")
+                continue
+            for variant, base_counts in base_disp.items():
+                got = fresh_disp.get(variant)
+                if got is None:
+                    problems.append(f"{fname} {label}/{variant}: variant "
+                                    f"missing from fresh artifact")
+                    continue
+                for field in FIELDS:
+                    b, g = base_counts.get(field), got.get(field)
+                    if b is not None and g is not None and g > b:
+                        problems.append(
+                            f"{fname} {label}/{variant}: {field} regressed "
+                            f"{b} -> {g}")
+                    else:
+                        print(f"# {fname} {label}/{variant}: "
+                              f"{field} {b} -> {g} ok")
+    return problems
+
+
+def probe_fused_steady_state() -> list[str]:
+    """One packed query after warm-up must cost exactly 1 launch/1 transfer."""
+    import numpy as np
+
+    from repro.core import engine as _engine
+    from repro.core import snn as _snn
+    from repro.core.join import single_query
+
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(600, 6)).astype(np.float32)
+    q = rng.normal(size=(40, 6)).astype(np.float32)
+    index = _snn.build_index(x, n_components=3)
+    pack = _engine.pack_from_index(index)
+    single_query(index, q, 1.0, pack=pack, use_pallas=True)  # learn capacity
+    _engine.DISPATCH_STATS.reset()
+    single_query(index, q, 1.0, pack=pack, use_pallas=True)
+    snap = _engine.DISPATCH_STATS.snapshot()
+    problems = []
+    for field, want in (("kernel_launches", 1), ("host_transfers", 1)):
+        if snap[field] != want:
+            problems.append(f"fused steady-state probe: {field} = "
+                            f"{snap[field]}, want {want}")
+        else:
+            print(f"# fused steady-state probe: {field} = {snap[field]} ok")
+    return problems
+
+
+def main() -> int:
+    problems = diff_artifacts() + probe_fused_steady_state()
+    for p in problems:
+        print(f"DISPATCH REGRESSION: {p}", file=sys.stderr)
+    if problems:
+        return 1
+    print("# dispatch counters: no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

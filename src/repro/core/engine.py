@@ -61,6 +61,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -76,41 +77,88 @@ _REAL = _ops.BIG / 2
 # --------------------------------------------------------------------------- #
 # Dispatch instrumentation                                                     #
 # --------------------------------------------------------------------------- #
+_STAT_FIELDS = ("kernel_launches", "host_transfers", "jit_compiles",
+                "bytes_planned")
+
+
+class _StatCounters:
+    """One thread's raw counter storage (only its owner thread mutates it)."""
+
+    __slots__ = _STAT_FIELDS
+
+    def __init__(self) -> None:
+        for f in _STAT_FIELDS:
+            setattr(self, f, 0)
+
+
+_AGG_LOCK = threading.Lock()
+_ALL_COUNTERS: list[_StatCounters] = []
+
+
 class DispatchStats(threading.local):
     """Counters for the dispatch overhead the packed plan exists to remove.
 
     ``kernel_launches`` counts device computations dispatched (Pallas kernel
     or jitted oracle evaluations); ``host_transfers`` counts device->host
     materializations (``np.asarray`` of a device array, including the
-    scalar pass-boundary sync); ``jit_compiles`` counts NEW kernel launch
+    scalar pass-boundary sync — the fused single-dispatch path's whole
+    result tuple counts as ONE); ``jit_compiles`` counts NEW kernel launch
     signatures — (backend, op, shapes, static args) keys never seen before
     in this process, i.e. launches that forced an XLA compile
     (`kernels.registry.note_launch_signature`); ``bytes_planned`` counts
     bytes accounted by newly built static `MemoryPlan`s (one per
     (pack epoch, query bucket)).  `benchmarks.common.dispatch_counts` reads
     these to make packed-vs-looped overhead visible in the trajectory.
-    Per-thread (``threading.local``): the engine is queried concurrently
-    (streaming/serving), and cross-thread increments would corrupt a
-    benchmark's deltas.
+
+    Concurrency: the counters live in per-thread `_StatCounters` holders
+    (``threading.local`` hands each thread its own on first touch), so the
+    fused serving path's overlapping batches never race on an increment —
+    each thread mutates only its own holder.  `aggregate()` sums every
+    holder ever registered (the lock guards registry membership only), the
+    cross-thread view the serving regression test checks.
     """
 
     def __init__(self) -> None:
-        self.kernel_launches = 0
-        self.host_transfers = 0
-        self.jit_compiles = 0
-        self.bytes_planned = 0
+        self._c = _StatCounters()
+        with _AGG_LOCK:
+            _ALL_COUNTERS.append(self._c)
 
     def reset(self) -> None:
-        self.kernel_launches = 0
-        self.host_transfers = 0
-        self.jit_compiles = 0
-        self.bytes_planned = 0
+        for f in _STAT_FIELDS:
+            setattr(self._c, f, 0)
 
     def snapshot(self) -> dict:
-        return {"kernel_launches": self.kernel_launches,
-                "host_transfers": self.host_transfers,
-                "jit_compiles": self.jit_compiles,
-                "bytes_planned": self.bytes_planned}
+        return {f: getattr(self._c, f) for f in _STAT_FIELDS}
+
+    @staticmethod
+    def aggregate() -> dict:
+        """Sum of every thread's counters (threads that exited included).
+
+        Per-thread ``reset()`` zeroes that thread's contribution, so the
+        aggregate is "since the threads' last resets", not process lifetime.
+        """
+        with _AGG_LOCK:
+            holders = list(_ALL_COUNTERS)
+        out = dict.fromkeys(_STAT_FIELDS, 0)
+        for c in holders:
+            for f in _STAT_FIELDS:
+                out[f] += getattr(c, f)
+        return out
+
+
+def _make_stat_property(field: str):
+    def _get(self):
+        return getattr(self._c, field)
+
+    def _set(self, value):
+        setattr(self._c, field, value)
+
+    return property(_get, _set)
+
+
+for _f in _STAT_FIELDS:
+    setattr(DispatchStats, _f, _make_stat_property(_f))
+del _f
 
 
 DISPATCH_STATS = DispatchStats()
@@ -586,6 +634,20 @@ def _build_memory_plan(pack: "SegmentPack", m_pad: int,
     staging_cap = min(nnz_cap, _SCRATCH_CACHE_MAX)
     add("csr_staging_ids", (staging_cap,), np.int64)
     add("csr_staging_dh", (staging_cap,), np.float32)
+    # candidate-compaction tiles (oracle kq path): per query tile one padded
+    # row of candidate concat positions; worst case every live row survives
+    # the box.  The gathered payload (features/alpha/half-norm per candidate)
+    # is data-dependent and bounded by cand_tiles x (d_trim + 2) lanes — it
+    # rides the staging budget, not a dedicated buffer.
+    ptile = min(query_tile, _PRUNED_TILE)
+    if ke and ptile and m_pad % ptile == 0:
+        T = m_pad // ptile
+        ccap_worst = _ops.csr_capacity(S * n_pad)
+        add("cand_tiles", (T, ccap_worst), np.int64)
+    # fused-dispatch speculation outputs: the flat CSR pair at the ratcheted
+    # capacity (worst case = nnz_cap, same power-of-two ladder)
+    add("fused_spec_idx", (min(nnz_cap, _SCRATCH_CACHE_MAX),), np.int32)
+    add("fused_spec_dh", (min(nnz_cap, _SCRATCH_CACHE_MAX),), np.float32)
     total = sum(b[3] for b in bufs)
     return MemoryPlan(int(m_pad), int(query_tile), tuple(bufs), int(total),
                       int(staging_cap))
@@ -649,6 +711,11 @@ class SegmentPack:
     _pruned: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
     _plans: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+    # capacity-speculation history for the fused single-dispatch device
+    # path: (m_pad, query_tile, live set, kq) -> {"nnz_cap": ...}.  Dies
+    # with the pack, so a rebuilt/extended epoch re-learns honestly.
+    _spec: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
 
     @property
@@ -1015,7 +1082,15 @@ def _pruned_setup(pack: SegmentPack, live_idx: np.ndarray, kq: int):
     hn_s = np.concatenate([np.asarray(hn_c), np.full(1, big, np.float32)])
     px_s = np.concatenate([np.asarray(px_c[:kq]),
                            np.full((kq, 1), big, np.float32)], axis=1)
-    out = (xs_s, al_s, hn_s, px_s, ids, starts_l, al_np)
+    # trailing zero-column trim for the compacted gather: every column past
+    # the real feature width is exactly 0.0 in BOTH queries and database
+    # (lane padding), and dropping trailing +0.0 terms from a float sum is
+    # exact — so the compacted tiles contract d_trim lanes instead of the
+    # padded 128 while staying bit-identical.  O(N x lanes) scan, memoized.
+    nz = np.flatnonzero(np.any(xs_s != 0.0, axis=0))
+    d_trim = int(nz[-1]) + 1 if nz.size else 1
+    xs_t = np.ascontiguousarray(xs_s[:, :d_trim])
+    out = (xs_s, al_s, hn_s, px_s, ids, starts_l, al_np, xs_t)
     if len(pack._pruned) >= 8:  # live sets vary per batch; bound the memos
         pack._pruned.clear()
     pack._pruned[key] = out
@@ -1047,7 +1122,7 @@ def _run_csr_packed_pruned(pack, qp, aqp, rp, thp, m, live_idx, *,
     aq64 = np.asarray(aqp, np.float64)
     r64 = np.asarray(rp, np.float64)
     pq_j = jnp.asarray(pq_np)
-    xs_s, al_s, hn_s, px_s, ids, starts_l, al_np = _pruned_setup(
+    xs_s, al_s, hn_s, px_s, ids, starts_l, al_np, _ = _pruned_setup(
         pack, live_idx, kq)
     L = int(live_idx.size)
     sent = int(al_np.shape[0])  # index of the appended sentinel row
@@ -1124,7 +1199,7 @@ def _run_counts_packed_pruned(pack, qp, aqp, rp, thp, m, live_idx, *,
     aq64 = np.asarray(aqp, np.float64)
     r64 = np.asarray(rp, np.float64)
     pq_j = jnp.asarray(pq_np)
-    xs_s, al_s, hn_s, px_s, _, starts_l, al_np = _pruned_setup(
+    xs_s, al_s, hn_s, px_s, _, starts_l, al_np, _ = _pruned_setup(
         pack, live_idx, kq)
     sent = int(al_np.shape[0])
     counts = np.zeros(m, np.int64)
@@ -1150,6 +1225,156 @@ def _run_counts_packed_pruned(pack, qp, aqp, rp, thp, m, live_idx, *,
     return counts
 
 
+def _compacted_candidate_tiles(pack, live_idx, starts_l, al_np, m, ptile,
+                               aq64, r64, pq64, qn64, sent):
+    """Every query tile's candidate matrix at once: (T, ccap) int64.
+
+    Rows are `_tile_candidates` outputs (ascending concat positions — the
+    CSR order), padded to a shared power-of-two capacity with the sentinel
+    row index so one static tile shape serves the whole batch.  Returns
+    ``(cand_p, T, ccap)``; ``cand_p`` is None when no tile has candidates.
+    """
+    T = (m + ptile - 1) // ptile
+    cands = []
+    cmax = 0
+    for t in range(T):
+        t0 = t * ptile
+        tm = min(ptile, m - t0)
+        c = _tile_candidates(pack, live_idx, starts_l, al_np, t0, tm,
+                             aq64, r64, pq64, qn64)
+        cands.append(c)
+        cmax = max(cmax, int(c.size))
+    if cmax == 0:
+        return None, T, 0
+    ccap = _ops.csr_capacity(cmax)  # power-of-two: O(log) compiled shapes
+    cand_p = np.full((T, ccap), sent, np.int64)
+    for t, c in enumerate(cands):
+        cand_p[t, :c.size] = c
+    return cand_p, T, ccap
+
+
+def _compacted_query_tiles(qp, aqp, rp, thp, pq_np, kq, T, ptile, d_trim):
+    """Device-side reshapes of the padded query operands into (T, ptile)
+    tiles (and the feature trim — trailing zero columns contribute exact
+    +0.0 terms, so trimming them is bit-exact)."""
+    mt = T * ptile
+    qt = qp[:mt, :d_trim].reshape(T, ptile, d_trim)
+    aqt = aqp[:mt].reshape(T, ptile)
+    rt = rp[:mt].reshape(T, ptile)
+    tht = thp[:mt].reshape(T, ptile)
+    pqt = jnp.asarray(pq_np)[:, :mt].reshape(kq, T, ptile)
+    return qt, aqt, rt, tht, pqt
+
+
+def _run_csr_packed_compacted(pack, qp, aqp, rp, thp, m, live_idx, *,
+                              query_tile, pq_np, pq64, qn64, kq, mixed):
+    """Packed-oracle CSR with candidate COMPACTION: pruning as skipped FLOPs.
+
+    The successor of `_run_csr_packed_pruned` (kept as the ``compacted=False``
+    escape hatch): the same host candidate generation, but all query tiles'
+    surviving rows are gathered into one dense (T, ptile, ccap) tile batch
+    and evaluated by a SINGLE batched launch (`snn_filter_tiles`) — 1 kernel
+    launch + 1 host transfer per packed query instead of one pair per tile,
+    and the distance GEMM only touches gathered candidate rows.  Output is
+    bit-identical to the dense and masked-prune paths: the batched
+    contraction reduces the same d-length vectors per kept pair
+    (`kernels.ref._tiles_body`), and the scatter uses the same slot formula.
+    """
+    aq64 = np.asarray(aqp, np.float64)
+    r64 = np.asarray(rp, np.float64)
+    xs_s, al_s, hn_s, px_s, ids, starts_l, al_np, xs_t = _pruned_setup(
+        pack, live_idx, kq)
+    L = int(live_idx.size)
+    sent = int(al_np.shape[0])
+    m_pad = int(qp.shape[0])
+    ptile = min(query_tile, _PRUNED_TILE)
+    cand_p, T, ccap = _compacted_candidate_tiles(
+        pack, live_idx, starts_l, al_np, m, ptile, aq64, r64, pq64, qn64,
+        sent)
+    counts = np.zeros(m, np.int64)
+    indptr = np.zeros(m + 1, np.int64)
+    if cand_p is None:
+        return indptr, counts, np.zeros(0, np.int64), np.zeros(0, np.float32)
+    qt, aqt, rt, tht, pqt = _compacted_query_tiles(
+        qp, aqp, rp, thp, pq_np, kq, T, ptile, xs_t.shape[1])
+    # host gathers (numpy fancy indexing — the fast spelling; XLA's CPU
+    # gather is pathological for this access pattern), shipped once
+    xt = jnp.asarray(xs_t[cand_p])
+    alt = jnp.asarray(al_s[cand_p])
+    hnt = jnp.asarray(hn_s[cand_p])
+    pxt = jnp.asarray(px_s[:, cand_p])
+    DISPATCH_STATS.kernel_launches += 1
+    DISPATCH_STATS.host_transfers += 1
+    dh_t = np.asarray(_oracle().snn_filter_tiles(qt, aqt, rt, tht,
+                                                 xt, alt, hnt, pqt, pxt))
+    keep_t = dh_t < _ops.BIG
+    if mixed:
+        DISPATCH_STATS.kernel_launches += 1
+        DISPATCH_STATS.host_transfers += 1
+        cnt_t = np.asarray(_oracle().snn_count_tiles(
+            qt, aqt, rt, tht, xt, alt, hnt, pqt, pxt, mixed=True))
+    else:
+        cnt_t = keep_t.sum(axis=2)
+    counts[:] = cnt_t.reshape(T * ptile)[:m]
+    np.cumsum(counts, out=indptr[1:])
+    total = int(indptr[-1])
+    # np.nonzero is row-major: per query ascending candidate slots, i.e.
+    # ascending concat positions — the CSR order
+    tt, pp, cc = np.nonzero(keep_t)
+    rows = (tt.astype(np.int64) * ptile + pp)
+    if total == 0 and rows.size == 0:
+        return indptr, counts, np.zeros(0, np.int64), np.zeros(0, np.float32)
+    if rows.size != total:  # a broken mixed certificate fails loudly
+        raise RuntimeError("CSR pass-1/pass-2 disagreement (packed)")
+    cols = cand_p[tt, cc]
+    dh_vals = dh_t[tt, pp, cc]
+    seg_of = np.searchsorted(starts_l, cols, side="right") - 1
+    gk = rows * np.int64(L) + seg_of
+    per = np.bincount(gk, minlength=m_pad * L).reshape(m_pad, L).T
+    seg_base = np.cumsum(per, axis=0) - per
+    gstart = np.flatnonzero(np.r_[True, gk[1:] != gk[:-1]])
+    within = np.arange(gk.size, dtype=np.int64) \
+        - np.repeat(gstart, np.diff(np.r_[gstart, gk.size]))
+    slots = indptr[rows] + seg_base[seg_of, rows] + within
+    flat_ids, flat_dh, owned = _SCRATCH.take(total + 1)
+    flat_ids[slots] = ids[cols]
+    flat_dh[slots] = dh_vals
+    if not (flat_ids[:total] >= 0).all():
+        raise RuntimeError("CSR pass-1/pass-2 disagreement (packed)")
+    if owned:
+        return indptr, counts, flat_ids[:total], flat_dh[:total]
+    return indptr, counts, flat_ids[:total].copy(), flat_dh[:total].copy()
+
+
+def _run_counts_packed_compacted(pack, qp, aqp, rp, thp, m, live_idx, *,
+                                 query_tile, pq_np, pq64, qn64, kq, mixed):
+    """Pass 1 only, candidate-compacted: ONE batched tile count launch
+    (the counts twin of `_run_csr_packed_compacted` — same candidate tiles,
+    same gathered payload, same count expressions)."""
+    aq64 = np.asarray(aqp, np.float64)
+    r64 = np.asarray(rp, np.float64)
+    xs_s, al_s, hn_s, px_s, _, starts_l, al_np, xs_t = _pruned_setup(
+        pack, live_idx, kq)
+    sent = int(al_np.shape[0])
+    ptile = min(query_tile, _PRUNED_TILE)
+    cand_p, T, ccap = _compacted_candidate_tiles(
+        pack, live_idx, starts_l, al_np, m, ptile, aq64, r64, pq64, qn64,
+        sent)
+    if cand_p is None:
+        return np.zeros(m, np.int64)
+    qt, aqt, rt, tht, pqt = _compacted_query_tiles(
+        qp, aqp, rp, thp, pq_np, kq, T, ptile, xs_t.shape[1])
+    xt = jnp.asarray(xs_t[cand_p])
+    alt = jnp.asarray(al_s[cand_p])
+    hnt = jnp.asarray(hn_s[cand_p])
+    pxt = jnp.asarray(px_s[:, cand_p])
+    DISPATCH_STATS.kernel_launches += 1
+    DISPATCH_STATS.host_transfers += 1
+    cnt_t = np.asarray(_oracle().snn_count_tiles(
+        qt, aqt, rt, tht, xt, alt, hnt, pqt, pxt, mixed=mixed))
+    return cnt_t.reshape(T * ptile)[:m].astype(np.int64)
+
+
 def run_csr_packed(
     pack: SegmentPack,
     qp, aqp, rp, thp,
@@ -1161,6 +1386,8 @@ def run_csr_packed(
     memory_budget_mb: float | None = None,
     pq=None,
     mixed: bool = False,
+    compacted: bool | None = None,
+    fused: bool = True,
 ):
     """Execute a `SegmentPack` plan: the two passes as single launches.
 
@@ -1221,7 +1448,7 @@ def run_csr_packed(
         return _execute_stacked(pack, qp, aqp, rp, thp, m, live_idx,
                                 query_tile=query_tile,
                                 pq=None if not kq else jnp.asarray(pq_np),
-                                mixed=mixed, backend=backend)
+                                mixed=mixed, backend=backend, fused=fused)
     if kq:
         if memory_budget_mb is not None:
             rows_all = int(sum(pack.segments[k].xs.shape[0]
@@ -1233,6 +1460,12 @@ def run_csr_packed(
                                use_pallas=backend,
                                memory_budget_mb=memory_budget_mb,
                                pq=jnp.asarray(pq_np), mixed=mixed)
+        # compacted (default): ONE batched candidate-tile launch; the
+        # escape hatch (compacted=False) keeps the per-tile masked prune
+        if compacted is None or compacted:
+            return _run_csr_packed_compacted(
+                pack, qp, aqp, rp, thp, m, live_idx, query_tile=query_tile,
+                pq_np=pq_np, pq64=pq64, qn64=qn64, kq=kq, mixed=mixed)
         return _run_csr_packed_pruned(pack, qp, aqp, rp, thp, m, live_idx,
                                       query_tile=query_tile, pq_np=pq_np,
                                       pq64=pq64, qn64=qn64, kq=kq,
@@ -1299,6 +1532,7 @@ def run_counts_packed(
     memory_budget_mb: float | None = None,
     pq=None,
     mixed: bool = False,
+    compacted: bool | None = None,
 ) -> np.ndarray:
     """Pass 1 ONLY: per-query survivor counts (m,) int64 over a plan.
 
@@ -1346,6 +1580,10 @@ def run_counts_packed(
         return np.asarray(per).sum(axis=0)[:m].astype(np.int64)
 
     if kq:
+        if compacted is None or compacted:
+            return _run_counts_packed_compacted(
+                pack, qp, aqp, rp, thp, m, live_idx, query_tile=query_tile,
+                pq_np=pq_np, pq64=pq64, qn64=qn64, kq=kq, mixed=mixed)
         return _run_counts_packed_pruned(pack, qp, aqp, rp, thp, m, live_idx,
                                          query_tile=query_tile, pq_np=pq_np,
                                          pq64=pq64, qn64=qn64, kq=kq,
@@ -1376,13 +1614,25 @@ def run_counts_packed(
 
 def _execute_stacked(pack: SegmentPack, qp, aqp, rp, thp, m: int,
                      live_idx: np.ndarray, *, query_tile: int,
-                     pq=None, mixed: bool = False, backend=None):
+                     pq=None, mixed: bool = False, backend=None,
+                     fused: bool = True):
     """The device executor of `run_csr_packed`: stacked-grid kernels with
     on-device prefix sums (see `run_csr_packed` docstring).  ``pq`` arrives
     already sliced to the effective component count; the matching stacked
     projections are gathered here.  ``mixed`` applies to pass 1 only —
     pass 2 always verifies in f32.  ``backend`` is the resolved device lane
-    (default: the historical pallas-tpu kernels)."""
+    (default: the historical pallas-tpu kernels).
+
+    With ``fused`` (the default) a capacity-speculation fast path runs:
+    once a batch shape has executed classically, its nnz capacity is
+    recorded on the pack (`SegmentPack._spec`) and subsequent batches chain
+    count → device prefix → compact in ONE dispatch
+    (`Backend.snn_csr_fused_stacked`) whose whole result tuple comes back
+    as ONE host materialization — no pass-boundary sync.  When a batch
+    overflows the speculated capacity the device reports it in the same
+    tuple (no extra transfer), the classical two-dispatch path re-runs with
+    exact sizes, and the recorded capacity ratchets up (power-of-two
+    bucketed, so it converges after O(log nnz) misses)."""
     if backend is None:
         backend = _registry.get_backend("pallas-tpu")
     xs, al, hn, ids, px = _gather_live_stacked(pack, live_idx, with_px=True)
@@ -1392,6 +1642,33 @@ def _execute_stacked(pack: SegmentPack, qp, aqp, rp, thp, m: int,
             px = px[:, :kq]
     else:
         px = None
+
+    # ---- speculative fused single-dispatch fast path ---------------------
+    spec = pack._spec.setdefault(
+        (int(qp.shape[0]), int(query_tile), live_idx.tobytes(), kq), {})
+    nnz_spec = spec.get("nnz_cap", 0)
+    if fused and nnz_spec:
+        DISPATCH_STATS.kernel_launches += 1
+        out = backend.snn_csr_fused_stacked(
+            qp, aqp, rp, thp, xs, al, hn, pq, px,
+            nnz_cap=nnz_spec, tq=query_tile, bn=pack.block, mixed=mixed)
+        # the fused result tuple materializes in one device_get
+        DISPATCH_STATS.host_transfers += 1
+        indptr_pad, fi, fd, total_spec = jax.device_get(out)
+        total = int(indptr_pad[m])
+        spec["nnz_cap"] = max(nnz_spec, _ops.csr_capacity(total))
+        if total + 1 <= nnz_spec and int(total_spec) == int(indptr_pad[-1]):
+            indptr = indptr_pad[:m + 1].astype(np.int64)
+            counts = np.diff(indptr)
+            if total == 0:
+                return (indptr, counts, np.zeros(0, np.int64),
+                        np.zeros(0, np.float32))
+            fi = fi[:total]
+            if not (fi >= 0).all():
+                raise RuntimeError("CSR pass-1/pass-2 disagreement (packed)")
+            return (indptr, counts, ids.reshape(-1)[fi],
+                    np.ascontiguousarray(fd[:total]))
+        # speculation overflow: fall through to the exact-sized classic path
 
     # ---- pass 1: ONE stacked count launch --------------------------------
     DISPATCH_STATS.kernel_launches += 1
@@ -1405,6 +1682,8 @@ def _execute_stacked(pack: SegmentPack, qp, aqp, rp, thp, m: int,
     DISPATCH_STATS.host_transfers += 1
     indptr_pad = np.asarray(indptr_dev)  # (m_pad + 1,) int32
     total = int(indptr_pad[m])
+    # seed/ratchet the speculation capacity for the next batch of this shape
+    spec["nnz_cap"] = max(spec.get("nnz_cap", 0), _ops.csr_capacity(total))
     indptr = indptr_pad[:m + 1].astype(np.int64)
     counts = np.diff(indptr)
     if total == 0:
@@ -1480,6 +1759,8 @@ def query_csr_packed(
     memory_budget_mb: float | None = None,
     mixed: bool = False,
     bucket: bool = False,
+    compacted: bool | None = None,
+    fused: bool = True,
 ):
     """`query_csr` executed through a prebuilt `SegmentPack` plan.
 
@@ -1501,6 +1782,6 @@ def query_csr_packed(
     indptr, counts, ids, dh = run_csr_packed(
         pack, qp, aqp, rp, thp, m, query_tile=query_tile,
         use_pallas=use_pallas, memory_budget_mb=memory_budget_mb,
-        pq=pqp, mixed=mixed)
+        pq=pqp, mixed=mixed, compacted=compacted, fused=fused)
     return _snn.csr_finalize(index, indptr, ids, dh, xq, qsq, counts,
                              return_distance, native)

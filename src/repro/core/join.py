@@ -143,7 +143,8 @@ def mirror_merge(indptr, cols, dists, chunk: int):
 def chunked_join(index, segments, xq, aq, r, th, *, query_chunk: int,
                  segs_per_chunk: int, query_tile: int, use_pallas,
                  packed: bool = True, memory_budget_mb=None,
-                 mixed: bool = False):
+                 mixed: bool = False, compacted: bool | None = None,
+                 fused: bool = True):
     """Run alpha-sorted query chunks through the engine over ``segments``.
 
     ``xq``/``aq``/``r``/``th`` are the float32 predicate inputs of
@@ -195,7 +196,7 @@ def chunked_join(index, segments, xq, aq, r, th, *, query_chunk: int,
                 pack, qp, aqp, rp, thp, c1 - c0,
                 query_tile=query_tile, use_pallas=use_pallas,
                 first_seg=k0, memory_budget_mb=memory_budget_mb,
-                pq=pqp, mixed=mixed)
+                pq=pqp, mixed=mixed, compacted=compacted, fused=fused)
         else:
             # the schedule: alpha-adjacent queries span a narrow window, so
             # most segments fail this interval test and never launch
@@ -254,7 +255,8 @@ def sorted_join_csr(index, segments, q_sorted, radius, *, symmetric: bool,
                     query_chunk: int, segs_per_chunk: int, query_tile: int,
                     use_pallas, return_distance: bool, native: bool,
                     dest: np.ndarray, packed: bool = True,
-                    memory_budget_mb=None, mixed: bool = False):
+                    memory_budget_mb=None, mixed: bool = False,
+                    compacted: bool | None = None, fused: bool = True):
     """Shared tail of the self-join and bichromatic builders.
 
     ``q_sorted`` are raw query points already in ascending-alpha order and
@@ -269,7 +271,8 @@ def sorted_join_csr(index, segments, q_sorted, radius, *, symmetric: bool,
         index, segments, xq, aq, r, th, query_chunk=query_chunk,
         segs_per_chunk=segs_per_chunk if symmetric else 0,
         query_tile=query_tile, use_pallas=use_pallas, packed=packed,
-        memory_budget_mb=memory_budget_mb, mixed=mixed)
+        memory_budget_mb=memory_budget_mb, mixed=mixed,
+        compacted=compacted, fused=fused)
     indptr = indptr_from_counts(counts)
     fin = _snn.csr_finalize(index, indptr, flat_ids, flat_dh, xq, qsq, counts,
                             return_distance, native)
@@ -326,7 +329,8 @@ def single_query(index, q, radius, return_distance: bool = True, *,
                  pack=None, segments=None, block: int = 512,
                  query_tile: int = 128, use_pallas=None, native: bool = True,
                  packed: bool = True, mixed: bool = False,
-                 bucket: bool = True) -> _snn.CSRNeighbors:
+                 bucket: bool = True, compacted: bool | None = None,
+                 fused: bool = True) -> _snn.CSRNeighbors:
     """A point-query batch is a bichromatic join whose A side is one chunk.
 
     This is the front-end `snn.query_radius_csr` and the streaming index
@@ -340,7 +344,8 @@ def single_query(index, q, radius, return_distance: bool = True, *,
             pack = _engine.pack_from_index(index, block=block)
         return _engine.query_csr_packed(
             index, pack, q, radius, return_distance, query_tile=query_tile,
-            use_pallas=use_pallas, native=native, mixed=mixed, bucket=bucket)
+            use_pallas=use_pallas, native=native, mixed=mixed, bucket=bucket,
+            compacted=compacted, fused=fused)
     if segments is None:
         segments = [_engine.segment_from_index(index, block=block)]
     return _engine.query_csr(
@@ -350,7 +355,8 @@ def single_query(index, q, radius, return_distance: bool = True, *,
 
 def count_pass(pack, xq, aq, qsq, r, *, query_tile: int = 128,
                use_pallas=None, memory_budget_mb=None, pq=None,
-               mixed: bool = False, bucket: bool = True) -> np.ndarray:
+               mixed: bool = False, bucket: bool = True,
+               compacted: bool | None = None) -> np.ndarray:
     """One engine count launch for prepared queries under Euclidean ``r``.
 
     The pass-1-only join primitive (`engine.run_counts_packed`): no compact
@@ -367,13 +373,15 @@ def count_pass(pack, xq, aq, qsq, r, *, query_tile: int = 128,
                                      query_tile=query_tile,
                                      use_pallas=use_pallas,
                                      memory_budget_mb=memory_budget_mb,
-                                     pq=pqp, mixed=mixed)
+                                     pq=pqp, mixed=mixed,
+                                     compacted=compacted)
 
 
 def query_counts(index, q, radius, *, block: int = 512,
                  query_tile: int = 128, use_pallas=None,
                  memory_budget_mb=None, mixed: bool = False,
-                 bucket: bool = True) -> np.ndarray:
+                 bucket: bool = True,
+                 compacted: bool | None = None) -> np.ndarray:
     """Exact neighbor counts per query — pass 1 only, no CSR staging.
 
     The count-only analytics front-end: range counting, occupancy checks,
@@ -397,7 +405,8 @@ def query_counts(index, q, radius, *, block: int = 512,
                                      query_tile=query_tile,
                                      use_pallas=use_pallas,
                                      memory_budget_mb=memory_budget_mb,
-                                     pq=pqp, mixed=mixed)
+                                     pq=pqp, mixed=mixed,
+                                     compacted=compacted)
 
 
 # --------------------------------------------------------------------------- #
@@ -421,6 +430,8 @@ def join(
     n_iter: int = 64,
     packed: bool = True,
     mixed: bool = False,
+    compacted: bool | None = None,
+    fused: bool = True,
 ) -> _snn.CSRNeighbors:
     """Exact bichromatic eps-join: row i lists every b within radius of a[i].
 
@@ -477,7 +488,8 @@ def join(
         index, segments, a[qord], r_sorted, symmetric=False, query_chunk=cs,
         segs_per_chunk=0, query_tile=query_tile, use_pallas=use_pallas,
         return_distance=return_distance, native=native, dest=qord,
-        packed=packed, memory_budget_mb=memory_budget_mb, mixed=mixed)
+        packed=packed, memory_budget_mb=memory_budget_mb, mixed=mixed,
+        compacted=compacted, fused=fused)
 
 
 def _metricsafe_scores(index, a: np.ndarray) -> np.ndarray:
@@ -510,6 +522,7 @@ def join_counts(
     use_pallas: bool | str | None = None,
     n_iter: int = 64,
     mixed: bool = False,
+    compacted: bool | None = None,
 ) -> np.ndarray:
     """Count-only bichromatic join: ``|ball(a[i], r_i) ∩ B|`` per A row.
 
@@ -548,7 +561,7 @@ def join_counts(
         counts_sorted[c0:c1] = _engine.run_counts_packed(
             pack, qp, aqp, rp, thp, c1 - c0, query_tile=query_tile,
             use_pallas=use_pallas, memory_budget_mb=memory_budget_mb,
-            pq=pqp, mixed=mixed)
+            pq=pqp, mixed=mixed, compacted=compacted)
     out = np.empty(m, np.int64)
     out[qord] = counts_sorted
     return out

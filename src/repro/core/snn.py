@@ -437,6 +437,8 @@ def query_radius_csr(
     packed: bool = True,
     mixed: bool = False,
     bucket: bool = True,
+    compacted: bool | None = None,
+    fused: bool = True,
 ) -> CSRNeighbors:
     """Exact device radius query with CSR output (two passes, no (m, n) array).
 
@@ -473,6 +475,14 @@ def query_radius_csr(
     reuses O(log m) compiled shapes; padding rows match nothing, so results
     are bit-identical to exact-multiple padding.
 
+    ``compacted`` / ``fused`` (both on by default) are the sparse-execution
+    knobs: candidate compaction evaluates the distance contraction only on
+    gathered box survivors (the packed oracle's kq path), and the fused
+    device path chains count → prefix → compact in one dispatch under
+    capacity speculation (`engine._execute_stacked`).  Both are pure
+    execution-strategy switches — output stays bit-identical; pass
+    ``compacted=False`` / ``fused=False`` to pin the PR-6-era paths.
+
     Structurally, a point-query batch is the bichromatic join whose A side
     is a single chunk — this function delegates to `core.join.single_query`
     (imported lazily: the join core imports this module at load time), the
@@ -483,7 +493,8 @@ def query_radius_csr(
     return _single_query(index, q, radius, return_distance,
                          block=block, query_tile=query_tile,
                          use_pallas=use_pallas, native=native,
-                         packed=packed, mixed=mixed, bucket=bucket)
+                         packed=packed, mixed=mixed, bucket=bucket,
+                         compacted=compacted, fused=fused)
 
 
 def csr_finalize(index: SNNIndex, indptr, indices, fd, xq, qsq, counts,

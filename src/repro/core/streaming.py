@@ -344,7 +344,9 @@ class StreamingSNNIndex:
                          native: bool = True,
                          packed: bool = True,
                          mixed: bool = False,
-                         bucket: bool = True) -> _snn.CSRNeighbors:
+                         bucket: bool = True,
+                         compacted: bool | None = None,
+                         fused: bool = True) -> _snn.CSRNeighbors:
         """Exact CSR results over base + deltas via the unified engine.
 
         ``radius`` is a scalar or a per-query (m,) vector in the native
@@ -363,14 +365,16 @@ class StreamingSNNIndex:
                                   pack=plan, segments=segs,
                                   query_tile=query_tile,
                                   use_pallas=use_pallas, native=native,
-                                  packed=packed, mixed=mixed, bucket=bucket)
+                                  packed=packed, mixed=mixed, bucket=bucket,
+                                  compacted=compacted, fused=fused)
 
     def query_counts_device(self, q: np.ndarray, radius, *,
                             query_tile: int = 128,
                             use_pallas: bool | str | None = None,
                             memory_budget_mb: float | None = None,
                             mixed: bool = False,
-                            bucket: bool = True) -> np.ndarray:
+                            bucket: bool = True,
+                            compacted: bool | None = None) -> np.ndarray:
         """Exact per-query neighbor counts over base + deltas — pass 1 only.
 
         The count-only analytics front-end (`core.join.query_counts`)
@@ -382,7 +386,8 @@ class StreamingSNNIndex:
         return _join_query_counts(self, q, radius, query_tile=query_tile,
                                   use_pallas=use_pallas,
                                   memory_budget_mb=memory_budget_mb,
-                                  mixed=mixed, bucket=bucket)
+                                  mixed=mixed, bucket=bucket,
+                                  compacted=compacted)
 
     def query_knn(self, q: np.ndarray, k, return_distance: bool = True, *,
                   native: bool = True, query_tile: int = 128,

@@ -163,6 +163,51 @@ def snn_compact_stacked(q, aq, r, thresh, offsets, xs, alphas, half_norms,
         nnz=nnz, tq=tq, bn=bn)
 
 
+def snn_filter_tiles(qt, aqt, rt, tht, xt, alt, hnt, pqt=None, pxt=None, *,
+                     use_pallas: bool | str | None = None):
+    """Candidate-compacted tile filter: (T, p, C) masked distances.
+
+    ``qt`` (T, p, d) query tiles against ``xt`` (T, C, d) gathered candidate
+    rows; padding candidate slots must carry alpha = half_norm = +BIG.  Kept
+    entries are bit-identical to the dense `snn_filter` on the same pairs.
+    """
+    return _registry.resolve(use_pallas).snn_filter_tiles(
+        qt, aqt, rt, tht, xt, alt, hnt, pqt, pxt)
+
+
+def snn_count_tiles(qt, aqt, rt, tht, xt, alt, hnt, pqt=None, pxt=None, *,
+                    use_pallas: bool | str | None = None,
+                    mixed: bool = False):
+    """Candidate-compacted tile counts: (T, p) int32 survivors per query."""
+    return _registry.resolve(use_pallas).snn_count_tiles(
+        qt, aqt, rt, tht, xt, alt, hnt, pqt, pxt, mixed=mixed)
+
+
+def snn_csr_compacted_stacked(q, aq, r, thresh, xs, alphas, half_norms,
+                              pq=None, px=None, *, ptile: int, ccap: int,
+                              nnz_cap: int, tq: int = 128, bn: int = 512,
+                              use_pallas: bool | str | None = None):
+    """Single-dispatch candidate-compacted CSR over a segment stack.
+
+    Speculative static capacities ``ccap``/``nnz_cap``; see
+    `kernels.ref.snn_csr_compacted_stacked_ref` for the overflow contract.
+    """
+    return _registry.resolve(use_pallas).snn_csr_compacted_stacked(
+        q, aq, r, thresh, xs, alphas, half_norms, pq, px,
+        ptile=ptile, ccap=ccap, nnz_cap=nnz_cap, tq=tq, bn=bn)
+
+
+def snn_csr_fused_stacked(q, aq, r, thresh, xs, alphas, half_norms,
+                          pq=None, px=None, *, nnz_cap: int, tq: int = 128,
+                          bn: int = 512,
+                          use_pallas: bool | str | None = None,
+                          mixed: bool = False):
+    """Count + device prefix + speculative compact in ONE dispatch."""
+    return _registry.resolve(use_pallas).snn_csr_fused_stacked(
+        q, aq, r, thresh, xs, alphas, half_norms, pq, px,
+        nnz_cap=nnz_cap, tq=tq, bn=bn, mixed=mixed)
+
+
 def embedding_bag(ids, table, *, mode: str = "sum",
                   use_pallas: bool | None = None):
     """EmbeddingBag with -1 padding ids; modes: sum | mean."""

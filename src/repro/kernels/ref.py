@@ -249,6 +249,197 @@ def snn_compact_stacked_ref(q, aq, r, thresh, offsets, xs, alphas, half_norms,
     return snn_compact_stacked_from_filter(dh, offsets, n_seg=n_seg, nnz=nnz)
 
 
+# --------------------------------------------------------------------------- #
+# Candidate-compacted tile evaluation (skipped-FLOPs execution)                 #
+# --------------------------------------------------------------------------- #
+# The masked paths above compute the full (m, n) distance product and throw
+# most of it away; the tile entry points below evaluate the SAME predicate on
+# gathered candidate rows only, so the box prune's survivor reduction becomes
+# a FLOP reduction.  Bit-identity with the dense paths rests on two facts the
+# exactness-certificate suite pins down: (1) a batched dot_general over
+# gathered rows reduces the same d-length vectors per output element as the
+# full matmul, so every kept dhalf is the identical float32; (2) the keep
+# expressions below are the same elementwise float32 formulas as
+# `snn_filter_ref` / `box_mask`, evaluated on the same operand values.
+
+
+def _box_mask_tiles(pqt, pxt, rt, tht, hnt):
+    """`box_mask` over candidate tiles: (ke, T, p) x (ke, T, C) -> (T, p, C).
+
+    Elementwise float32 op-for-op mirror of `box_mask` (same lim expression
+    tree), so a gathered column gets the identical box decision it would get
+    in the dense (m, n) evaluation.
+    """
+    xn = jnp.sqrt(jnp.maximum(2.0 * hnt, 0.0))              # (T, C)
+    qn = jnp.sqrt(jnp.maximum(rt * rt - 2.0 * tht, 0.0))    # (T, p)
+    lim = rt[:, :, None] + BOX_EPS * (xn[:, None, :] + qn[:, :, None]
+                                      + jnp.abs(rt)[:, :, None])
+    ok = jnp.abs(pxt[0][:, None, :] - pqt[0][:, :, None]) <= lim
+    for c in range(1, pqt.shape[0]):
+        ok = ok & (jnp.abs(pxt[c][:, None, :] - pqt[c][:, :, None]) <= lim)
+    return ok
+
+
+def _tiles_body(qt, aqt, rt, tht, xt, alt, hnt, pqt=None, pxt=None):
+    """(keep, dhalf) over query tiles x gathered candidate tiles.
+
+    ``qt`` (T, p, d) query tiles; ``xt`` (T, C, d) gathered candidate rows;
+    per-tile vectors follow.  The contraction is a batched `dot_general`
+    (batch axis T, contract d) — per output element it reduces the same
+    d-length vectors in the same order as the dense ``q @ xs.T``, which is
+    what keeps gathered dhalf bit-identical to the dense evaluation.
+    """
+    dot = jax.lax.dot_general(qt, xt, dimension_numbers=(((2,), (2,)),
+                                                         ((0,), (0,))),
+                              preferred_element_type=jnp.float32)
+    dhalf = hnt[:, None, :] - dot
+    keep = (jnp.abs(alt[:, None, :] - aqt[:, :, None]) <= rt[:, :, None]) \
+        & (dhalf <= tht[:, :, None])
+    if pqt is not None:
+        keep = keep & _box_mask_tiles(pqt, pxt, rt, tht, hnt)
+    return keep, dhalf
+
+
+@jax.jit
+def snn_filter_tiles_ref(qt, aqt, rt, tht, xt, alt, hnt, pqt=None, pxt=None):
+    """Masked distances over candidate tiles: (T, p, C) with +BIG fill.
+
+    The candidate-compacted twin of `snn_filter_ref`: callers gather each
+    query tile's box-surviving rows into dense (T, C) tiles (padding slots
+    carry alpha = half_norm = +BIG so no predicate keeps them) and only those
+    rows pay the distance contraction.
+    """
+    keep, dhalf = _tiles_body(qt, aqt, rt, tht, xt, alt, hnt, pqt, pxt)
+    return jnp.where(keep, dhalf, BIG)
+
+
+@functools.partial(jax.jit, static_argnames=("mixed",))
+def snn_count_tiles_ref(qt, aqt, rt, tht, xt, alt, hnt, pqt=None, pxt=None,
+                        *, mixed: bool = False):
+    """Per-query survivor counts (T, p) int32 over candidate tiles.
+
+    ``mixed`` runs the contraction in bf16 under the margin certificate
+    (`mixed_keep_ref`): counts are provably EQUAL to the f32 counts for any
+    bf16 rounding, so the compacted mixed path needs no new certificate.
+    """
+    if not mixed:
+        keep, _ = _tiles_body(qt, aqt, rt, tht, xt, alt, hnt, pqt, pxt)
+        return jnp.sum(keep, axis=2).astype(jnp.int32)
+    geom = jnp.abs(alt[:, None, :] - aqt[:, :, None]) <= rt[:, :, None]
+    if pqt is not None:
+        geom = geom & _box_mask_tiles(pqt, pxt, rt, tht, hnt)
+    dot16 = jax.lax.dot_general(
+        qt.astype(jnp.bfloat16), xt.astype(jnp.bfloat16),
+        dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+    dh16 = hnt[:, None, :] - dot16
+    xn = jnp.sqrt(jnp.maximum(2.0 * hnt, 0.0))
+    qn = jnp.sqrt(jnp.maximum(rt * rt - 2.0 * tht, 0.0))
+    margin = MIX_EPS * xn[:, None, :] * qn[:, :, None]
+    thc = tht[:, :, None]
+    definite = geom & (dh16 <= thc - margin)
+    band = geom & (dh16 > thc - margin) & (dh16 <= thc + margin)
+    _, dh32 = _tiles_body(qt, aqt, rt, tht, xt, alt, hnt)
+    keep = definite | (band & (dh32 <= thc))
+    return jnp.sum(keep, axis=2).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("ptile", "ccap", "nnz_cap"))
+def snn_csr_compacted_stacked_ref(q, aq, r, thresh, xs, alphas, half_norms,
+                                  pq=None, px=None, *, ptile: int, ccap: int,
+                                  nnz_cap: int):
+    """Single-dispatch candidate-compacted two-pass CSR over a segment stack.
+
+    One jitted computation chains: (1) the cheap window+box predicate on the
+    resident projection columns, unioned over each ``ptile``-query tile;
+    (2) an on-device exclusive scan that compacts surviving pack-flat row
+    indices into dense (T, ccap) candidate tiles; (3) the full-precision
+    distance contraction on the GATHERED candidate rows only (`_tiles_body`);
+    (4) per-query counts, the CSR prefix, and the flat scatter — all device
+    side, so exactly one host transfer (the returned tuple) completes a
+    steady-state packed query.
+
+    Returns ``(indptr (m_pad+1,) i32, idx (nnz_cap,) i32 pack-flat, dhalf
+    (nnz_cap,) f32, total () i32, cand_max () i32)``.  ``ccap`` and
+    ``nnz_cap`` are speculative static capacities: when ``cand_max > ccap``
+    or ``total + 1 > nnz_cap`` the compact outputs are invalid (overflow
+    writes are dropped on device, never out of bounds) and the caller must
+    rerun a correctly-sized path — the engine's speculation fallback.
+    Exactness when capacities hold is by construction: the candidate
+    predicate is the same elementwise f32 window/box expression the tile
+    body applies, so the candidate set is an exact superset of every
+    query's keep set, and gathered dhalf is bit-identical to the dense
+    stacked evaluation.
+    """
+    S, n_pad, d = xs.shape
+    N = S * n_pad
+    xf = xs.reshape(N, d)
+    alf = alphas.reshape(N)
+    hnf = half_norms.reshape(N)
+    pxf = None
+    if px is not None:
+        pxf = jnp.transpose(px, (1, 0, 2)).reshape(px.shape[1], N)
+    m_pad = q.shape[0]
+    T = m_pad // ptile
+    qt = q.reshape(T, ptile, d)
+    aqt = aq.reshape(T, ptile)
+    rt = r.reshape(T, ptile)
+    tht = thresh.reshape(T, ptile)
+    pqt = None if pq is None else pq.reshape(pq.shape[0], T, ptile)
+
+    # (1) cheap predicate, unioned over the tile's queries
+    sel = jnp.abs(alf[None, None, :] - aqt[:, :, None]) <= rt[:, :, None]
+    if pqt is not None:
+        xn = jnp.sqrt(jnp.maximum(2.0 * hnf, 0.0))
+        qn = jnp.sqrt(jnp.maximum(rt * rt - 2.0 * tht, 0.0))
+        lim = rt[:, :, None] + BOX_EPS * (xn[None, None, :] + qn[:, :, None]
+                                          + jnp.abs(rt)[:, :, None])
+        for c in range(pqt.shape[0]):
+            sel = sel & (jnp.abs(pxf[c][None, None, :]
+                                 - pqt[c][:, :, None]) <= lim)
+    candmask = jnp.any(sel, axis=1)                          # (T, N)
+
+    # (2) exclusive-scan compaction into dense candidate tiles
+    cm = candmask.astype(jnp.int32)
+    cpos = jnp.cumsum(cm, axis=1) - cm
+    cand_counts = cpos[:, -1] + cm[:, -1]
+    cand_max = jnp.max(cand_counts).astype(jnp.int32)
+    tcol = jnp.broadcast_to(jnp.arange(N, dtype=jnp.int32)[None, :], (T, N))
+    trow = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[:, None], (T, N))
+    slot = jnp.where(candmask, cpos, ccap)  # non-candidates/overflow: dropped
+    cand = jnp.full((T, ccap), N, jnp.int32).at[trow, slot].set(
+        tcol, mode="drop")
+
+    # (3) gather + full-precision evaluation on candidates only
+    valid = cand < N
+    candc = jnp.minimum(cand, N - 1)
+    big = jnp.float32(BIG)
+    xt = xf[candc]
+    alt = jnp.where(valid, alf[candc], big)
+    hnt = jnp.where(valid, hnf[candc], big)
+    pxt = None
+    if pxf is not None:
+        pxt = jnp.where(valid[None, :, :], pxf[:, candc], big)
+    keep, dhalf = _tiles_body(qt, aqt, rt, tht, xt, alt, hnt, pqt, pxt)
+
+    # (4) counts, CSR prefix, flat scatter — all on device
+    counts = jnp.sum(keep, axis=2).reshape(m_pad).astype(jnp.int32)
+    indptr = jnp.concatenate([jnp.zeros(1, jnp.int32), jnp.cumsum(counts)])
+    total = indptr[-1]
+    within = jnp.cumsum(keep.astype(jnp.int32), axis=2) - 1
+    trash = nnz_cap - 1
+    base = indptr[:-1].reshape(T, ptile)
+    pos = jnp.where(keep, base[:, :, None] + within, trash)
+    flat_cols = jnp.broadcast_to(cand[:, None, :], keep.shape)
+    out_idx = jnp.full((nnz_cap,), -1, jnp.int32).at[pos.ravel()].set(
+        flat_cols.ravel(), mode="drop")
+    out_dh = jnp.full((nnz_cap,), big, jnp.float32).at[pos.ravel()].set(
+        dhalf.ravel(), mode="drop")
+    out_idx = out_idx.at[trash].set(-1)
+    out_dh = out_dh.at[trash].set(big)
+    return indptr, out_idx, out_dh, total, cand_max
+
+
 @jax.jit
 def embedding_bag_ref(ids, table):
     """Oracle for kernels.embedding_bag.embedding_bag."""

@@ -168,9 +168,102 @@ class Backend:
         return self.snn_filter(q, aq, r, thresh, xs2, al2, hn2, pq, px2,
                                tq=tq, bn=bn)
 
+    # -- candidate-compacted + fused entry points ---------------------------
+    # The tile entry points and the two single-dispatch CSR compositions are
+    # shared across lanes by default: the compacted evaluation is a dense
+    # batched GEMM over gathered candidate tiles — exactly the shape XLA
+    # already emits optimally on every platform — while the fused CSR chains
+    # each lane's OWN count/compact kernels inside one jit (`_fused_parts`).
+
+    def snn_filter_tiles(self, qt, aqt, rt, tht, xt, alt, hnt,
+                         pqt=None, pxt=None):
+        """(T, p, C) masked distances over gathered candidate tiles."""
+        self._note("snn_filter_tiles", _sig(qt, xt, pqt))
+        return _ref.snn_filter_tiles_ref(qt, aqt, rt, tht, xt, alt, hnt,
+                                         pqt, pxt)
+
+    def snn_count_tiles(self, qt, aqt, rt, tht, xt, alt, hnt,
+                        pqt=None, pxt=None, *, mixed: bool = False):
+        """(T, p) int32 survivor counts over gathered candidate tiles."""
+        self._note("snn_count_tiles", _sig(qt, xt, pqt, mixed=mixed))
+        return _ref.snn_count_tiles_ref(qt, aqt, rt, tht, xt, alt, hnt,
+                                        pqt, pxt, mixed=mixed)
+
+    def snn_csr_compacted_stacked(self, q, aq, r, thresh, xs, alphas,
+                                  half_norms, pq=None, px=None, *,
+                                  ptile: int, ccap: int, nnz_cap: int,
+                                  tq: int = 128, bn: int = 512):
+        """Single-dispatch candidate-compacted CSR over a segment stack.
+
+        Returns (indptr, idx, dhalf, total, cand_max) device arrays; see
+        `kernels.ref.snn_csr_compacted_stacked_ref` for the speculation
+        contract (overflow -> invalid compact outputs, caller re-sizes).
+        """
+        self._note("snn_csr_compacted_stacked",
+                   _sig(q, xs, pq, ptile=ptile, ccap=ccap, nnz_cap=nnz_cap))
+        return _ref.snn_csr_compacted_stacked_ref(
+            q, aq, r, thresh, xs, alphas, half_norms, pq, px,
+            ptile=ptile, ccap=ccap, nnz_cap=nnz_cap)
+
+    def _fused_parts(self):
+        """(count_stacked, compact_stacked) UN-instrumented jit-traceable
+        callables of this lane — the building blocks `snn_csr_fused_stacked`
+        composes inside one jit (instrumentation must not run per trace)."""
+        raise NotImplementedError
+
+    def snn_csr_fused_stacked(self, q, aq, r, thresh, xs, alphas, half_norms,
+                              pq=None, px=None, *, nnz_cap: int,
+                              tq: int = 128, bn: int = 512,
+                              mixed: bool = False):
+        """Both passes + the device prefix in ONE dispatch (speculative).
+
+        Chains this lane's stacked count kernel, `ref.stacked_prefix`, and —
+        under a ``lax.cond`` guarded by the speculative ``nnz_cap`` — the
+        stacked compact kernel, inside a single jitted computation.  Returns
+        ``(indptr (m_pad+1,) i32, idx (nnz_cap,) i32 pack-flat, dhalf
+        (nnz_cap,) f32, total () i32)``; when ``total + 1 > nnz_cap`` the
+        compact branch was skipped (sentinel outputs) and the caller must
+        rerun the two-dispatch path with the exact capacity.
+        """
+        self._note("snn_csr_fused_stacked",
+                   _sig(q, xs, pq, nnz_cap=nnz_cap, tq=tq, bn=bn,
+                        mixed=mixed))
+        fn = _fused_csr_fn(self.name, int(nnz_cap), int(tq), int(bn),
+                           bool(mixed))
+        return fn(q, aq, r, thresh, xs, alphas, half_norms, pq, px)
+
     # -- shared helpers -----------------------------------------------------
     def _note(self, op: str, key: tuple) -> None:
         note_launch_signature(f"{self.name}:{op}", key)
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_csr_fn(backend_name: str, nnz_cap: int, tq: int, bn: int,
+                  mixed: bool):
+    """The jitted fused count -> prefix -> speculative-compact chain, cached
+    per (lane, static params).  jax re-traces per input shape under the one
+    cached jit, so signature accounting stays with the outer entry point."""
+    count_fn, compact_fn = get_backend(backend_name)._fused_parts()
+
+    def run(q, aq, r, thresh, xs, alphas, half_norms, pq, px):
+        per = count_fn(q, aq, r, thresh, xs, alphas, half_norms, pq, px,
+                       tq=tq, bn=bn, mixed=mixed)
+        _, indptr, offsets = _ref.stacked_prefix(per)
+        total = indptr[-1]
+        ok = (total + jnp.int32(1)) <= jnp.int32(nnz_cap)
+
+        def go(_):
+            return compact_fn(q, aq, r, thresh, offsets, xs, alphas,
+                              half_norms, pq, px, nnz=nnz_cap, tq=tq, bn=bn)
+
+        def skip(_):
+            return (jnp.full((nnz_cap,), -1, jnp.int32),
+                    jnp.full((nnz_cap,), jnp.float32(_ref.BIG), jnp.float32))
+
+        fi, fd = jax.lax.cond(ok, go, skip, 0)
+        return indptr, fi, fd, total
+
+    return jax.jit(run)
 
 
 class OracleBackend(Backend):
@@ -216,6 +309,22 @@ class OracleBackend(Backend):
         return _ref.snn_compact_stacked_ref(q, aq, r, thresh, offsets, xs,
                                             alphas, half_norms, pq, px,
                                             n_seg=xs.shape[0], nnz=nnz)
+
+    def _fused_parts(self):
+        def count(q, aq, r, thresh, xs, alphas, half_norms, pq, px, *,
+                  tq, bn, mixed):
+            return _ref.snn_count_stacked_ref(q, aq, r, thresh, xs, alphas,
+                                              half_norms, pq, px,
+                                              n_seg=xs.shape[0], mixed=mixed)
+
+        def compact(q, aq, r, thresh, offsets, xs, alphas, half_norms,
+                    pq, px, *, nnz, tq, bn):
+            return _ref.snn_compact_stacked_ref(q, aq, r, thresh, offsets,
+                                                xs, alphas, half_norms,
+                                                pq, px, n_seg=xs.shape[0],
+                                                nnz=nnz)
+
+        return count, compact
 
 
 class TPUPallasBackend(Backend):
@@ -273,6 +382,23 @@ class TPUPallasBackend(Backend):
                                            alphas, half_norms, pq, px,
                                            nnz=nnz, tq=tq, bn=bn,
                                            interpret=self.interpret)
+
+    def _fused_parts(self):
+        def count(q, aq, r, thresh, xs, alphas, half_norms, pq, px, *,
+                  tq, bn, mixed):
+            return self._k.snn_count_stacked(q, aq, r, thresh, xs, alphas,
+                                             half_norms, pq, px, tq=tq,
+                                             bn=bn, interpret=self.interpret,
+                                             mixed=mixed)
+
+        def compact(q, aq, r, thresh, offsets, xs, alphas, half_norms,
+                    pq, px, *, nnz, tq, bn):
+            return self._k.snn_compact_stacked(q, aq, r, thresh, offsets,
+                                               xs, alphas, half_norms, pq,
+                                               px, nnz=nnz, tq=tq, bn=bn,
+                                               interpret=self.interpret)
+
+        return count, compact
 
 
 class GPUPallasBackend(TPUPallasBackend):

@@ -1,0 +1,86 @@
+"""DISPATCH_STATS under concurrency: thread-local counters + aggregate view.
+
+The fused serving path mutates the dispatch counters from every worker
+thread that executes a batch; plain class-level ints raced (increments are
+read-modify-write).  The counters are now thread-local holders registered in
+a lock-guarded global list, so each thread's view is exactly its own work
+and `DispatchStats.aggregate()` sums every thread that ever touched the
+stats — no increment can be lost, whatever the interleaving.
+"""
+import threading
+
+import numpy as np
+
+from repro.core import build_index, engine as _engine
+from repro.core.join import single_query
+
+
+def test_counters_thread_isolated_and_aggregated():
+    n_threads, bumps = 8, 500
+    # reset BEFORE reading the baseline: the reset zeroes this thread's
+    # prior-test counters, which would otherwise deflate the aggregate delta
+    _engine.DISPATCH_STATS.reset()
+    base = _engine.DispatchStats.aggregate()["kernel_launches"]
+    start = threading.Barrier(n_threads)
+    per_thread = {}
+
+    def work(tid):
+        _engine.DISPATCH_STATS.reset()
+        start.wait()
+        for _ in range(bumps):
+            _engine.DISPATCH_STATS.kernel_launches += 1
+        per_thread[tid] = _engine.DISPATCH_STATS.kernel_launches
+
+    threads = [threading.Thread(target=work, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    # each thread saw exactly its own increments — no cross-talk
+    assert per_thread == {t: bumps for t in range(n_threads)}
+    # the main thread's view is untouched by the workers
+    assert _engine.DISPATCH_STATS.kernel_launches == 0
+    # the aggregate lost nothing: racy class-level ints would undercount
+    agg = _engine.DispatchStats.aggregate()
+    assert agg["kernel_launches"] - base == n_threads * bumps
+
+
+def test_concurrent_fused_serving_batches():
+    # the actual serving scenario: overlapping batches through one shared
+    # pack on worker threads, fused speculation active — counters must stay
+    # consistent and results bit-identical to the single-threaded run
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(500, 6)).astype(np.float32)
+    index = build_index(x, n_components=3)
+    pack = _engine.pack_from_index(index)
+    q = rng.normal(size=(32, 6)).astype(np.float32)
+    want = single_query(index, q, 1.0, pack=pack, use_pallas=True)
+    want2 = single_query(index, q, 1.0, pack=pack, use_pallas=True)  # fused
+    assert np.array_equal(want.indptr, want2.indptr)
+
+    results, snaps = {}, {}
+    start = threading.Barrier(4)
+
+    def worker(tid):
+        _engine.DISPATCH_STATS.reset()
+        start.wait()
+        for _ in range(3):
+            results[tid] = single_query(index, q, 1.0, pack=pack,
+                                        use_pallas=True)
+        snaps[tid] = _engine.DISPATCH_STATS.snapshot()
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for tid, res in results.items():
+        assert np.array_equal(res.indptr, want.indptr), tid
+        assert np.array_equal(res.indices, want.indices), tid
+        assert np.array_equal(np.asarray(res.distances),
+                              np.asarray(want.distances)), tid
+    # every worker's own ledger recorded its three fused queries
+    for tid, snap in snaps.items():
+        assert snap["kernel_launches"] >= 3, (tid, snap)
+        assert snap["host_transfers"] >= 3, (tid, snap)

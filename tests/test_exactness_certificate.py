@@ -341,3 +341,113 @@ def test_counts_parity_with_csr_pass1(use_pallas, mixed):
                                         query_tile=64, use_pallas=use_pallas)
     assert np.array_equal(np.asarray(counts0), np.diff(indptr0))
     assert np.array_equal(np.diff(indptr0), np.diff(indptr))
+
+
+# --------------------------------------------------------------------------- #
+# candidate compaction + fused dispatch: plants straddling tile edges          #
+# --------------------------------------------------------------------------- #
+# (use_pallas, compacted, fused): the sparse-execution axis added by the
+# candidate-compaction engine.  On the oracle lane ``compacted`` picks the
+# batched candidate-tile path vs the masked per-tile prune; on the device
+# lanes ``fused`` picks the speculative single-dispatch chain vs the classic
+# count -> sync -> compact.  Every combination must stay bit-identical.
+COMPACTION_VARIANTS = [(up, compacted, fused)
+                       for up in (None, True, "pallas-gpu")
+                       for compacted in (False, True)
+                       for fused in (False, True)]
+
+
+def _csr_compaction_variant(index, q, radius, up, compacted, fused, mixed):
+    """Run one variant TWICE on a shared pack: the second call exercises the
+    fused path's learned-capacity speculation (the first is its warm-up)."""
+    from repro.core import engine as _engine
+    from repro.core.join import single_query
+
+    pack = _engine.pack_from_index(index, block=512)
+    first = single_query(index, q, radius, pack=pack, use_pallas=up,
+                         mixed=mixed, compacted=compacted, fused=fused)
+    second = single_query(index, q, radius, pack=pack, use_pallas=up,
+                          mixed=mixed, compacted=compacted, fused=fused)
+    tag = (up, compacted, fused, mixed)
+    assert np.array_equal(first.indptr, second.indptr), tag
+    assert np.array_equal(first.indices, second.indices), tag
+    assert np.array_equal(np.asarray(first.distances),
+                          np.asarray(second.distances)), tag
+    return second
+
+
+@pytest.mark.parametrize("mixed", [False, True])
+def test_compaction_tile_edge_ulp_plants(mixed):
+    # queries deliberately span the candidate-compaction tile boundaries
+    # (ptile = 16 at the default query_tile, so rows 15|16 and 31|32 sit in
+    # different candidate tiles), and each boundary-straddling query carries
+    # its own +-ulp plants exactly ON its r = 5 sphere.  A tile-indexing slip
+    # (off-by-one candidate row, wrong tile base, sentinel leak) would move a
+    # plant's keep/drop decision or its CSR slot; bit-identity against the
+    # f64 oracle and across every execution variant rules that out.
+    m = 40  # tiles [0..15], [16..31], [32..39] — two interior edges
+    edge_rows = [14, 15, 16, 17, 30, 31, 32, 33]
+    # the proven-exact origin construction of test_euclidean_ulp_plants
+    # (nudges stay exact only near the origin: adding them to big offsets
+    # would absorb the ulps and round the engine's half-norms)
+    plants = [_nudge((3, 4, 0), 0, +4), _nudge((3, 4, 0), 0, -4),
+              _nudge((0, 3, 4), 2, +4), _nudge((0, 3, 4), 2, -4),
+              _nudge((5, 0, 0), 0, +4), _nudge((5, 0, 0), 0, -4)]
+    anchors = [(1, 1, 0), (2, 0, 1), (6, 1, 0)]
+    x = _sym(np.concatenate([np.stack(plants),
+                             np.asarray(anchors, np.float32)]))
+    index = _snn.build_index(x)
+    # queries in PADDED-ROW order: single_query pads without sorting, so row
+    # i of q IS row i of the padded batch — the tile geometry is exact.  The
+    # boundary-straddling query is planted VERBATIM on both sides of each
+    # tile edge (and mid-tile); every copy must emit the identical row even
+    # though each tile forms a different candidate union around it.  The
+    # other rows are far-away integer-lattice queries (exact arithmetic,
+    # mostly empty rows) that vary the per-tile candidate sets.
+    rng = np.random.default_rng(3)
+    q = rng.integers(30, 60, size=(m, 3)).astype(np.float32)
+    for i in edge_rows:
+        q[i] = (0, 0, 0)
+    want_indptr, want_ids = _oracle_csr(index, q, 5.0)
+    # every origin copy keeps exactly the 3 inward plant pairs + the
+    # (1,1,0)/(2,0,1) anchor pairs; the 3 outward ulp plants stay out
+    for i in edge_rows:
+        assert want_indptr[i + 1] - want_indptr[i] == 2 * 3 + 2 * 2, i
+    base_d = None
+    for up, compacted, fused in COMPACTION_VARIANTS:
+        res = _csr_compaction_variant(index, q, 5.0, up, compacted, fused,
+                                      mixed)
+        tag = (up, compacted, fused, mixed)
+        assert np.array_equal(res.indptr, want_indptr), tag
+        assert np.array_equal(res.indices, want_ids), tag
+        d = np.asarray(res.distances)
+        if base_d is None:
+            base_d = d
+        else:
+            assert np.array_equal(base_d, d), tag
+
+
+def test_compaction_vector_radius_tile_edges():
+    # per-query radii across the same tile edges: rows on either side of a
+    # tile boundary get DIFFERENT exactly-representable radii, so a tile
+    # mixing up its query rows would keep the wrong shell
+    m = 34
+    x = _sym([(3, 4, 0), (5, 0, 0), (0, 0, 5), (1, 1, 1), (2, 2, 0),
+              (6, 0, 0), (0, 7, 1), (4, 4, 4)])
+    index = _snn.build_index(x)
+    rng = np.random.default_rng(5)
+    q = rng.integers(-2, 3, size=(m, 3)).astype(np.float32)
+    q[15] = (0, 0, 0)
+    q[16] = (1, 0, 0)
+    q[31] = (0, 1, 0)
+    q[32] = (0, 0, 1)
+    radii = rng.choice([1.0, 2.0, 3.0], size=m)
+    radii[15], radii[16] = 5.0, 2.0   # boundary rows straddle the edge with
+    radii[31], radii[32] = 2.0, 5.0   # swapped radii
+    want_indptr, want_ids = _oracle_csr(index, q, radii)
+    for up, compacted, fused in COMPACTION_VARIANTS:
+        res = _csr_compaction_variant(index, q, radii, up, compacted, fused,
+                                      False)
+        tag = (up, compacted, fused)
+        assert np.array_equal(res.indptr, want_indptr), tag
+        assert np.array_equal(res.indices, want_ids), tag
