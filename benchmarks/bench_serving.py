@@ -1,6 +1,6 @@
 """Serving under mixed-radius traffic + exact kNN vs the kd-tree baseline.
 
-Two sections, both recorded into ``BENCH_serving.json``:
+Sections, all recorded into ``BENCH_serving.json``:
 
 * **serving** — steady-state throughput of the dispatcher body on batches
   whose requests all carry DIFFERENT radii.  The fused path (one packed
@@ -15,19 +15,33 @@ Two sections, both recorded into ``BENCH_serving.json``:
   the registry's launch-signature accounting, `DISPATCH_STATS.jit_compiles`)
   while exact padding compiles one per distinct padded size — the p99
   latency gap is the cost of those mid-stream XLA compiles.
+* **serving-poisson** — OPEN-LOOP Poisson traffic (arrival times drawn
+  ahead of time and honored regardless of completions — no closed-loop
+  backpressure hiding queueing) through the live dispatcher thread, at an
+  arrival-rate sweep plus a saturation burst.  Reports p50/p99 queue delay
+  and end-to-end latency for deadline-aware continuous batching vs the
+  legacy fixed window: at low rates the window IS the latency (every lone
+  request waits it out), at saturation both fill ``serve_batch`` and
+  throughput must not differ.
+* **serving-rebuild** — p99 end-to-end latency of batches served WHILE a
+  full `rebuild()` runs on a mutator thread, vs steady state: with
+  double-buffered plan epochs (``serve_warm_plans``) the serving thread
+  never pays plan construction or warmup, so the ratio stays ~1; with
+  warming off the first post-swap batch eats the cold plan build.
 * **knn** — `core.knn.query_knn` (seed + count-expand + one compact) vs
   `baselines.KDTree.query_knn` (branch-and-bound on the median-split tree),
   with an in-bench exactness cross-check — speed is never traded for
   correctness.
 
-`run` executes all sections; `run_serving` / `run_knn` are the
+`run` executes all sections; `run_serving` / `run_slo` / `run_knn` are the
 `benchmarks.run` suite entries and merge their cells into the shared JSON,
-so CI lanes can run either alone.
+so CI lanes can run each alone.
 """
 from __future__ import annotations
 
 import json
 import os
+import threading
 import time
 
 import numpy as np
@@ -177,6 +191,181 @@ def _varying_cell(n: int, d: int, steps: int, m_max: int,
 
 
 # --------------------------------------------------------------------------- #
+# serving-poisson section: open-loop SLO traffic, deadline vs fixed window     #
+# --------------------------------------------------------------------------- #
+def _pctls(xs) -> dict:
+    a = np.asarray(xs, np.float64)
+    return {"p50": float(np.percentile(a, 50)),
+            "p99": float(np.percentile(a, 99))}
+
+
+def _open_loop_run(policy: str, data, qs, arrivals) -> dict:
+    """Drive one live server with a FIXED arrival schedule (open loop).
+
+    Arrival times are drawn ahead of time and honored with wall-clock
+    sleeps regardless of completions, so queueing delay is measured, not
+    hidden by client backpressure.  Every request is waited on AFTER the
+    last submission; ``Response.queue_delay_ms``/``latency_ms`` carry the
+    per-request split whatever the drain order.
+    """
+    cfg = SNNConfig(serve_policy=policy)
+    server = SNNServer(data, cfg)
+    server.index.plan()
+    server.start()
+    try:
+        # warm through the dispatcher: compiles + fused-capacity ratchet for
+        # both the lone-request and the full-batch bucket shapes
+        warm = [Request(query=qs[i % len(qs)], radius=0.4, id=10_000_000 + i)
+                for i in range(2 * cfg.serve_batch)]
+        for r in warm:
+            server.submit(r)
+        for r in warm:
+            server.result(r.id, timeout=120.0)
+        t0 = time.perf_counter()
+        for i, t_arr in enumerate(arrivals):
+            lag = t0 + float(t_arr) - time.perf_counter()
+            if lag > 0:
+                time.sleep(lag)
+            server.submit(Request(query=qs[i % len(qs)], radius=0.4, id=i))
+        resps = [server.result(i, timeout=120.0) for i in range(len(arrivals))]
+        wall = time.perf_counter() - t0
+    finally:
+        server.stop()
+    assert all(r.error is None for r in resps)
+    return {
+        "queue_delay_ms": _pctls([r.queue_delay_ms for r in resps]),
+        "e2e_ms": _pctls([r.latency_ms for r in resps]),
+        "completed_qps": len(arrivals) / max(wall, 1e-12),
+    }
+
+
+def _poisson_cell(n: int, d: int, n_req: int, rates: tuple,
+                  record: list) -> dict:
+    data = make_uniform(n, d, seed=6)
+    rng = np.random.default_rng(7)
+    qs = rng.random((64, d)).astype(np.float32)
+
+    sweep = []
+    for rate in rates:
+        # one exponential-interarrival draw shared by BOTH policies
+        arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n_req))
+        per = {p: _open_loop_run(p, data, qs, arrivals)
+               for p in ("window", "deadline")}
+        for p, m in per.items():
+            record.append(row(
+                f"serving/poisson_{p}/n{n}/d{d}/rate{rate:g}",
+                m["e2e_ms"]["p99"] / 1e3,
+                f"p50_qd={m['queue_delay_ms']['p50']:.2f}ms;"
+                f"p99_e2e={m['e2e_ms']['p99']:.2f}ms"))
+        sweep.append({
+            "rate_qps": float(rate), "n_req": n_req, **per,
+            "p99_e2e_speedup_vs_window":
+                per["window"]["e2e_ms"]["p99"]
+                / max(per["deadline"]["e2e_ms"]["p99"], 1e-12),
+        })
+
+    # saturation burst: the whole workload arrives at t=0 — both policies
+    # must fill serve_batch and throughput must not differ
+    sat = {p: _open_loop_run(p, data, qs, np.zeros(n_req))
+           for p in ("window", "deadline")}
+    for p, m in sat.items():
+        record.append(row(f"serving/poisson_{p}/n{n}/d{d}/saturation",
+                          n_req / max(m["completed_qps"], 1e-12) / n_req,
+                          f"qps={m['completed_qps']:.0f}"))
+    return {
+        "n": n, "d": d, "n_req": n_req,
+        "slo_ms": SNNConfig().serve_slo_ms,
+        "window_ms": SNNConfig().serve_timeout_ms,
+        "rate_sweep": sweep,
+        "saturation": {
+            **sat,
+            "qps_ratio_deadline_vs_window":
+                sat["deadline"]["completed_qps"]
+                / max(sat["window"]["completed_qps"], 1e-12),
+        },
+    }
+
+
+# --------------------------------------------------------------------------- #
+# serving-rebuild section: p99 across a mid-run rebuild, warm vs cold epochs   #
+# --------------------------------------------------------------------------- #
+def _rebuild_cell(n: int, d: int, batch: int, record: list) -> dict:
+    data = make_uniform(n, d, seed=8)
+    rng = np.random.default_rng(9)
+    qs = rng.random((batch, d)).astype(np.float32)
+    tag = f"n{n}/d{d}/B{batch}"
+
+    out = {}
+    for name, warm in (("warm_plans", True), ("cold_plans", False)):
+        server = SNNServer(data, SNNConfig(serve_warm_plans=warm))
+        reqs = [Request(query=qs[i], radius=0.4, id=i) for i in range(batch)]
+        server._run_batch(reqs)   # compiles + plan build outside the window
+        server._run_batch(reqs)
+
+        steady = []
+        for _ in range(40):
+            t0 = time.perf_counter()
+            server._run_batch(reqs)
+            steady.append((time.perf_counter() - t0) * 1e3)
+
+        # serve continuously on THIS thread while rebuild() runs on a
+        # mutator thread.  Two windows are split out: DURING (host-thread
+        # timesharing with build_index — identical in kind for warm/cold,
+        # and an artifact of CPU-only hosts; on an accelerator the serving
+        # work is on device) and POST-SWAP (the first batches on the new
+        # generation — where a cold plan pays its build+warmup on the
+        # serving thread and a warmed epoch must not)
+        done = threading.Event()
+
+        def _mutate(server=server):
+            try:
+                server.rebuild()
+            finally:
+                done.set()
+
+        th = threading.Thread(target=_mutate)
+        during = []
+        th.start()
+        while not done.is_set():
+            t0 = time.perf_counter()
+            server._run_batch(reqs)
+            during.append((time.perf_counter() - t0) * 1e3)
+            if len(during) >= 2000:
+                break
+        th.join()
+        post = []
+        for _ in range(12):
+            t0 = time.perf_counter()
+            server._run_batch(reqs)
+            post.append((time.perf_counter() - t0) * 1e3)
+
+        p99_steady = float(np.percentile(steady, 99))
+        p99_post = float(np.percentile(post, 99))
+        out[name] = {
+            "steady_p99_ms": p99_steady,
+            "during_p99_ms": float(np.percentile(during, 99)),
+            "during_batches": len(during),
+            "post_swap_p99_ms": p99_post,
+            "post_swap_first_ms": float(post[0]),
+            # the plan-epoch claim: p99 across the publish vs steady state
+            "p99_ratio": p99_post / max(p99_steady, 1e-12),
+        }
+        record.append(row(
+            f"serving/rebuild_{name}/{tag}",
+            out[name]["post_swap_p99_ms"] / 1e3,
+            f"steady_p99={p99_steady:.2f}ms;"
+            f"post_swap_ratio={out[name]['p99_ratio']:.2f};"
+            f"during_p99={out[name]['during_p99_ms']:.2f}ms"))
+
+    return {
+        "n": n, "d": d, "batch": batch, **out,
+        "rebuild_p99_speedup_warm_vs_cold":
+            out["cold_plans"]["post_swap_p99_ms"]
+            / max(out["warm_plans"]["post_swap_p99_ms"], 1e-12),
+    }
+
+
+# --------------------------------------------------------------------------- #
 # knn section                                                                  #
 # --------------------------------------------------------------------------- #
 def _knn_cell(n: int, d: int, m: int, k: int, record: list) -> dict:
@@ -246,6 +435,19 @@ def run_serving(full: bool = False, out_json: str = OUT_JSON) -> list[str]:
     return rows
 
 
+def run_slo(full: bool = False, out_json: str = OUT_JSON) -> list[str]:
+    rows: list[str] = []
+    pgrid = ([(20_000, 8, 120, (50.0, 300.0))] if not full
+             else [(100_000, 16, 400, (25.0, 200.0, 1000.0))])
+    pcells = [_poisson_cell(n, d, r, rates, rows)
+              for n, d, r, rates in pgrid]
+    _merge_payload(pcells, "serving-poisson", full, out_json)
+    rgrid = [(40_000, 8, 64)] if not full else [(200_000, 16, 128)]
+    rcells = [_rebuild_cell(n, d, b, rows) for n, d, b in rgrid]
+    _merge_payload(rcells, "serving-rebuild", full, out_json)
+    return rows
+
+
 def run_knn(full: bool = False, out_json: str = OUT_JSON) -> list[str]:
     rows: list[str] = []
     grid = ([(20_000, 8, 256, 10), (50_000, 16, 256, 10)] if not full
@@ -256,7 +458,8 @@ def run_knn(full: bool = False, out_json: str = OUT_JSON) -> list[str]:
 
 
 def run(full: bool = False, out_json: str = OUT_JSON) -> list[str]:
-    return run_serving(full, out_json) + run_knn(full, out_json)
+    return (run_serving(full, out_json) + run_slo(full, out_json)
+            + run_knn(full, out_json))
 
 
 if __name__ == "__main__":

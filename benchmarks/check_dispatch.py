@@ -120,8 +120,93 @@ def probe_fused_steady_state() -> list[str]:
     return problems
 
 
+def probe_serving_dispatch() -> list[str]:
+    """The serving runtime's dispatch discipline, end to end.
+
+    1. An all-CSR batch (mixed radii + a count request) admitted by the
+       DEADLINE loop (`serving.runtime.collect_batch` on the real queue)
+       costs exactly ONE kernel launch and ONE host transfer at steady
+       state — admission policy must not change execution fusion.
+    2. A full `rebuild()` on a mutator thread adds ZERO launches/transfers
+       to the serving thread's (thread-local) counters — double-buffered
+       plan epochs keep plan build + warmup off the serving thread.
+    3. The serving thread's FIRST batch on the freshly swapped generation
+       is already warm: still exactly 1 launch / 1 transfer (the successor
+       plan adopted the outgoing plan's fused-capacity spec and was primed
+       through the bucket ladder on the mutator thread).
+    """
+    import threading
+
+    import numpy as np
+
+    from repro.configs.snn_default import SNNConfig
+    from repro.core import engine as _engine
+    from repro.serving.runtime import collect_batch
+    from repro.serving.server import Request, SNNServer
+
+    rng = np.random.default_rng(1)
+    data = rng.normal(size=(600, 6)).astype(np.float32)
+    qs = rng.normal(size=(40, 6)).astype(np.float32)
+    cfg = SNNConfig(serve_policy="deadline", backend="pallas-tpu")
+    server = SNNServer(data, cfg)  # not started: this thread IS the server
+
+    def admit(base_id: int) -> list:
+        for i in range(len(qs)):
+            server.submit(Request(query=qs[i], radius=0.6 + 0.01 * i,
+                                  id=base_id + i))
+        server.submit(Request(query=qs[0], radius=1.0, id=base_id + 999,
+                              count_only=True))
+        return collect_batch(server._q, cfg, server._clock)
+
+    problems = []
+    batch = admit(0)
+    if len(batch) != len(qs) + 1:
+        problems.append(f"serving probe: deadline admission returned "
+                        f"{len(batch)} of {len(qs) + 1} queued requests")
+    server._run_batch(batch)            # warm: compiles + capacity ratchet
+    server._run_batch(admit(1_000))
+
+    _engine.DISPATCH_STATS.reset()
+    server._run_batch(admit(2_000))
+    snap = _engine.DISPATCH_STATS.snapshot()
+    for field, want in (("kernel_launches", 1), ("host_transfers", 1)):
+        if snap[field] != want:
+            problems.append(f"serving steady-state probe: {field} = "
+                            f"{snap[field]}, want {want}")
+        else:
+            print(f"# serving steady-state probe: {field} = "
+                  f"{snap[field]} ok")
+
+    _engine.DISPATCH_STATS.reset()
+    th = threading.Thread(target=server.rebuild)
+    th.start()
+    th.join()
+    snap = _engine.DISPATCH_STATS.snapshot()
+    for field in ("kernel_launches", "host_transfers"):
+        if snap[field] != 0:
+            problems.append(f"rebuild isolation probe: mutator thread "
+                            f"leaked {field} = {snap[field]} onto the "
+                            f"serving thread, want 0")
+        else:
+            print(f"# rebuild isolation probe: serving-thread {field} = 0 "
+                  f"ok (rebuild ran on mutator thread)")
+
+    _engine.DISPATCH_STATS.reset()
+    server._run_batch(admit(3_000))     # first batch on the new generation
+    snap = _engine.DISPATCH_STATS.snapshot()
+    for field, want in (("kernel_launches", 1), ("host_transfers", 1)):
+        if snap[field] != want:
+            problems.append(f"post-swap warm probe: {field} = "
+                            f"{snap[field]}, want {want} (successor plan "
+                            f"not warmed?)")
+        else:
+            print(f"# post-swap warm probe: {field} = {snap[field]} ok")
+    return problems
+
+
 def main() -> int:
-    problems = diff_artifacts() + probe_fused_steady_state()
+    problems = (diff_artifacts() + probe_fused_steady_state()
+                + probe_serving_dispatch())
     for p in problems:
         print(f"DISPATCH REGRESSION: {p}", file=sys.stderr)
     if problems:

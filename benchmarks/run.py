@@ -74,7 +74,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="comma list: fig2,fig3,table45,table7,theory,"
                          "roofline,csr,streaming,graph,join,packed,serving,"
-                         "knn")
+                         "slo,knn")
     ap.add_argument("--aggregate-only", action="store_true",
                     help=f"just rebuild {TRAJECTORY_JSON} from existing "
                          "BENCH_*.json files")
@@ -100,6 +100,7 @@ def main() -> None:
         "join": bench_join.run,
         "packed": bench_engine_packed.run,
         "serving": bench_serving.run_serving,
+        "slo": bench_serving.run_slo,
         "knn": bench_serving.run_knn,
     }
     selected = args.only.split(",") if args.only else list(suites)

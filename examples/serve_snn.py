@@ -1,17 +1,25 @@
 """End-to-end serving driver (the paper's kind of system is retrieval, so the
 end-to-end example is a served index under batched request load):
 
-* builds an SNN index over a 100k-point corpus,
-* stands up the dynamic-batching server,
-* drives 2,000 requests — mixed per-request radii plus a slice of exact-kNN
-  traffic, all fused per batch into one engine dispatch — while streaming
-  5k new points in
-  (an O(b log b) LSM delta append on the live index — no re-index, no
-  serving gap: the paper's "flexibility" claim made sublinear),
-* reports throughput/latency and validates results against brute force.
+* stands up ONE server fronting an `IndexRegistry` with TWO tenants —
+  a 40k-point corpus and a separate 25k-point corpus in a different
+  dimensionality — sharing the dispatcher thread and device-memory budget,
+* drives 1,000 requests with deadline-aware continuous batching (each
+  request carries an SLO budget; light load flushes immediately, heavy
+  load fuses arrivals until the oldest request's remaining budget runs
+  out) — mixed per-request radii plus a slice of exact-kNN traffic, all
+  fused per (tenant, batch) into one engine dispatch,
+* streams 2k new points into tenant A mid-run (an O(b log b) LSM delta
+  append — no re-index, no serving gap), then FORCES a full re-index of
+  tenant B mid-run: with `serve_warm_plans` (default) the next
+  generation's plan is built and warmed on the rebuild caller's thread and
+  swapped atomically, so in-flight traffic never pays the rebuild,
+* reports per-tenant throughput + queue-delay/service split and validates
+  results against brute force.
 
 Run:  PYTHONPATH=src python examples/serve_snn.py
 """
+import threading
 import time
 
 import numpy as np
@@ -23,58 +31,84 @@ from repro.serving.server import Request, SNNServer
 
 
 def main():
-    n, d, n_req = 100_000, 32, 2_000
-    data = make_uniform(n, d, seed=0)
+    n_a, d_a, n_b, d_b, n_req = 40_000, 16, 25_000, 8, 1_000
+    cfg = SNNConfig(serve_batch=128, serve_slo_ms=50.0, max_neighbors=2048)
     t0 = time.perf_counter()
-    server = SNNServer(data, SNNConfig(serve_batch=128, serve_timeout_ms=2.0,
-                                       max_neighbors=2048))
-    print(f"index build: {time.perf_counter()-t0:.3f}s for {n}x{d}")
+    server = SNNServer(make_uniform(n_a, d_a, seed=0), cfg)  # tenant "default"
+    server.registry.create("logs", make_uniform(n_b, d_b, seed=3), cfg)
+    print(f"index build: {time.perf_counter()-t0:.3f}s "
+          f"for {n_a}x{d_a} (default) + {n_b}x{d_b} (logs)")
     server.start()
 
     rng = np.random.default_rng(1)
-    queries = rng.random((n_req, d)).astype(np.float32)
+    queries = rng.random((n_req, d_a)).astype(np.float32)
+    log_queries = rng.random((n_req, d_b)).astype(np.float32)
     # every request its own radius: the dispatcher fuses a whole batch into
-    # ONE packed engine execution regardless of how many radii it spans
+    # ONE packed engine execution per tenant regardless of how many radii
     radii = rng.uniform(0.85, 0.95, n_req)
-    # ... and a 5% slice of exact-kNN traffic through the same dispatcher
-    knn_every = 20
+    knn_every = 20   # ... plus a 5% slice of exact-kNN traffic
+    logs_every = 4   # every 4th request hits the second tenant
 
     t0 = time.perf_counter()
     for i in range(n_req):
-        if i % knn_every == 0:
+        if i % logs_every == 0:
+            server.submit(Request(query=log_queries[i], radius=0.9, id=i,
+                                  tenant="logs"))
+        elif i % knn_every == 0:
             server.submit(Request(query=queries[i], k=10, id=i))
         else:
             server.submit(Request(query=queries[i], radius=float(radii[i]),
                                   id=i))
-        if i == n_req // 2:
+        if i == n_req // 3:
             # mid-stream online update: a sorted delta segment on the frozen
             # base mu/v1 — no power iteration, no full re-sort
             t1 = time.perf_counter()
-            server.append(make_uniform(5_000, d, seed=7))
-            print(f"  online append (+5k points): "
+            server.append(make_uniform(2_000, d_a, seed=7))
+            print(f"  online append (+2k points, default): "
                   f"{time.perf_counter()-t1:.3f}s")
-    lat = []
-    for i in range(n_req):
-        lat.append(server.result(i).latency_ms)
+        if i == 2 * n_req // 3:
+            # mid-stream FULL re-index of the other tenant, off-thread: the
+            # new generation's plan is built + warmed before the atomic
+            # swap, so the traffic above keeps its steady-state latency
+            gen = server.runtime("logs").index.generation
+            rebuild_th = threading.Thread(
+                target=server.rebuild, kwargs={"tenant": "logs"})
+            rebuild_th.start()
+            print(f"  full rebuild of 'logs' launched mid-run "
+                  f"(generation {gen} -> warm-swapped)")
+    resps = [server.result(i) for i in range(n_req)]
     wall = time.perf_counter() - t0
+    rebuild_th.join()
     server.stop()
+    print(f"  'logs' now at generation "
+          f"{server.runtime('logs').index.generation}")
 
-    lat = np.asarray(lat)
-    print(f"{n_req} queries in {wall:.2f}s -> {n_req/wall:.0f} qps")
-    print(f"latency p50={np.percentile(lat, 50):.1f}ms "
-          f"p99={np.percentile(lat, 99):.1f}ms")
+    for tenant in ("default", "logs"):
+        sub = [r for r in resps
+               if (tenant == "logs") == (r.id % logs_every == 0)]
+        lat = np.asarray([r.latency_ms for r in sub])
+        qd = np.asarray([r.queue_delay_ms for r in sub])
+        print(f"{tenant}: {len(sub)} requests, latency "
+              f"p50={np.percentile(lat, 50):.1f}ms "
+              f"p99={np.percentile(lat, 99):.1f}ms "
+              f"(queue p50={np.percentile(qd, 50):.2f}ms)")
+    print(f"{n_req} queries in {wall:.2f}s -> {n_req/wall:.0f} qps "
+          f"across both tenants")
 
-    # exactness spot check on the final index state (base + delta segments):
-    # per-query radius vector straight through the host path and brute force
+    # exactness spot check on the final index states (base + delta for the
+    # default tenant, post-rebuild generation for logs) vs brute force
     check = server.query_batch(queries[:16], radii[:16])
     bf = BruteForce2(server.data)
     want = bf.query_radius(queries[:16], radii[:16])
     assert all(set(idx.tolist()) == set(w.tolist())
                for (idx, _), w in zip(check, want))
-    ids, _ = server.index.query_knn(queries[:1], 10)
-    assert set(ids[0].tolist()) <= set(
-        bf.query_radius(queries[:1], 10.0)[0].tolist())
-    print("served results exact vs brute force: OK")
+    bf_logs = BruteForce2(server.runtime("logs").index.raw)
+    check = server.query_batch(log_queries[:16], 0.9, tenant="logs")
+    want = bf_logs.query_radius(log_queries[:16],
+                                np.full(16, 0.9, np.float64))
+    assert all(set(idx.tolist()) == set(w.tolist())
+               for (idx, _), w in zip(check, want))
+    print("served results exact vs brute force (both tenants): OK")
 
 
 if __name__ == "__main__":

@@ -17,7 +17,32 @@ class SNNConfig:
     batch_group: int = 64           # host-path level-3 BLAS query grouping
     max_neighbors: int = 1024       # fixed-shape result cap (legacy serving path)
     serve_batch: int = 256          # dynamic batching target
-    serve_timeout_ms: float = 2.0   # batching window
+    serve_timeout_ms: float = 2.0   # batching window (serve_policy="window")
+    serve_policy: str = "deadline"  # admission loop: "deadline" fuses queued
+                                    # arrivals until the oldest request's SLO
+                                    # budget (minus the measured service-time
+                                    # EWMA) forces a flush — light load
+                                    # flushes immediately, heavy load fills
+                                    # serve_batch; "window" restores the
+                                    # fixed serve_timeout_ms batching window
+    serve_slo_ms: float = 50.0      # default per-request SLO budget
+                                    # (Request.slo_ms overrides per request)
+    serve_ewma: float = 0.3         # smoothing factor for the per-batch
+                                    # service-time EWMA the deadline policy
+                                    # subtracts from the remaining budget
+    serve_warm_plans: bool = True   # double-buffered plan epochs: append/
+                                    # rebuild builds AND warms the next
+                                    # generation's SegmentPack + executables
+                                    # on the mutator thread (zero-row priming
+                                    # dispatch) before the atomic swap, so
+                                    # the serving thread never pays plan
+                                    # construction or compile warmup
+    registry_memory_mb: float = 512.0  # device-memory budget for the multi-
+                                    # tenant plan cache (IndexRegistry):
+                                    # cold tenants' plans are LRU-evicted
+                                    # past it (MemoryPlan-accounted bytes)
+                                    # and rebuilt bit-identically on
+                                    # re-admission
     serve_exact: bool = True        # two-pass CSR engine (exact, untruncated);
                                     # False restores the fixed-shape top-K path
     serve_packed: bool = True       # execute the cached SegmentPack plan (one

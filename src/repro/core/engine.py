@@ -717,6 +717,12 @@ class SegmentPack:
     # with the pack, so a rebuilt/extended epoch re-learns honestly.
     _spec: dict = dataclasses.field(
         default_factory=dict, repr=False, compare=False)
+    # capacity hints adopted from a predecessor plan (double-buffered
+    # epochs): (m_pad, query_tile, kq) -> nnz_cap.  Consulted only when a
+    # live-set key has no learned capacity of its own — the new generation
+    # starts fused instead of paying O(log nnz) ratchet misses again.
+    _spec_hint: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     @property
     def n_segments(self) -> int:
@@ -767,6 +773,35 @@ class SegmentPack:
         self._plans[key] = plan
         DISPATCH_STATS.bytes_planned += plan.total_bytes
         return plan
+
+    def planned_bytes(self) -> int:
+        """Total bytes of every `MemoryPlan` built on this pack so far.
+
+        The multi-tenant registry's accounting unit: what admitting this
+        plan (its device representations plus every bucketed batch shape it
+        has served) costs against the device-memory budget.  Zero until the
+        first query/warm builds a memory plan.
+        """
+        return sum(p.total_bytes for p in self._plans.values())
+
+    def adopt_spec(self, prev: "SegmentPack") -> None:
+        """Inherit ``prev``'s learned fused nnz capacities as hints.
+
+        The double-buffered epoch handoff: a rebuilt/merged plan serves the
+        same workload distribution its predecessor did, so the predecessor's
+        ratcheted capacities are the right opening speculation.  Hints key on
+        (m_pad, query_tile, kq) only — the live-segment sets differ across
+        generations by construction — and are consulted when a live-set key
+        has no capacity of its own; a real overflow still ratchets honestly.
+        """
+        for key, cap in prev._spec_hint.items():
+            if cap:
+                self._spec_hint[key] = max(self._spec_hint.get(key, 0), cap)
+        for (m_pad, tile, _live, kq), rec in prev._spec.items():
+            cap = rec.get("nnz_cap", 0)
+            if cap:
+                key = (m_pad, tile, kq)
+                self._spec_hint[key] = max(self._spec_hint.get(key, 0), cap)
 
     def stacked(self):
         """(xs (S, n_pad, d), alphas (S, n_pad), half_norms (S, n_pad),
@@ -1647,6 +1682,11 @@ def _execute_stacked(pack: SegmentPack, qp, aqp, rp, thp, m: int,
     spec = pack._spec.setdefault(
         (int(qp.shape[0]), int(query_tile), live_idx.tobytes(), kq), {})
     nnz_spec = spec.get("nnz_cap", 0)
+    if not nnz_spec:
+        # a fresh live-set key opens at the predecessor plan's ratcheted
+        # capacity (adopt_spec) instead of falling back to the classic path
+        nnz_spec = pack._spec_hint.get(
+            (int(qp.shape[0]), int(query_tile), kq), 0)
     if fused and nnz_spec:
         DISPATCH_STATS.kernel_launches += 1
         out = backend.snn_csr_fused_stacked(
@@ -1785,3 +1825,69 @@ def query_csr_packed(
         pq=pqp, mixed=mixed, compacted=compacted, fused=fused)
     return _snn.csr_finalize(index, indptr, ids, dh, xq, qsq, counts,
                              return_distance, native)
+
+
+# --------------------------------------------------------------------------- #
+# Plan warming (double-buffered epochs)                                        #
+# --------------------------------------------------------------------------- #
+def warm_plan(
+    pack: SegmentPack,
+    *,
+    m_pads=(128,),
+    query_tile: int = 128,
+    use_pallas: bool | str | None = None,
+    mixed: bool = False,
+    compacted: bool | None = None,
+    fused: bool = True,
+    spec_from: SegmentPack | None = None,
+) -> SegmentPack:
+    """Prime a plan so its FIRST real query costs steady-state work.
+
+    The double-buffered epoch hook: a mutator (append/rebuild) builds the
+    next generation's pack and calls this on its own thread BEFORE the
+    atomic publish, so the serving thread never pays the warmup.  For each
+    bucketed batch size in ``m_pads`` one zero-match priming dispatch runs
+    through `run_csr_packed`: one synthetic query row per segment sits at
+    that segment's ``alpha_lo`` with radius 0 (every segment live, so the
+    full stacked/concat representation materializes on device and the real
+    launch signatures compile) while the half-norm threshold is the
+    match-nothing sentinel ``-BIG`` (the predicate keeps no rows, so the
+    priming output is empty and free).  Builds + reserves the static
+    `MemoryPlan` per bucket, and — via ``spec_from`` → `adopt_spec` — seeds
+    the fused-dispatch capacity speculation from the predecessor plan so
+    the first post-swap batch runs the one-dispatch fast path instead of
+    re-ratcheting.
+
+    Warming is a pure performance action: it never changes any query
+    result, and callers treat failures as non-fatal (a plan that could not
+    be warmed still answers correctly, just colder).
+    """
+    if spec_from is not None:
+        pack.adopt_spec(spec_from)
+    S = pack.n_segments
+    if S == 0 or pack.n_pad == 0:
+        return pack
+    d_pad = int(pack.segments[0].xs.shape[1])
+    nonempty = pack.alpha_lo <= pack.alpha_hi
+    aq_seg = np.where(nonempty, pack.alpha_lo, 0.0).astype(np.float32)
+    pq_seg = None
+    if pack.ke:
+        # one box-prune operand per segment too, so the pruned/compacted
+        # oracle executors and the kernels' pq plumbing warm as well
+        pq_seg = np.where(nonempty[:, None],
+                          np.asarray(pack.proj_lo, np.float64),
+                          0.0).astype(np.float32)  # (S, ke)
+    for m_pad in sorted({int(b) for b in m_pads if int(b) > 0}):
+        reps = -(-m_pad // S)  # cycle the per-segment rows to fill the bucket
+        aq = np.tile(aq_seg, reps)[:m_pad]
+        qp = jnp.asarray(np.zeros((m_pad, d_pad), np.float32))
+        rp = jnp.asarray(np.zeros(m_pad, np.float32))
+        thp = jnp.asarray(np.full(m_pad, -_ops.BIG, np.float32))
+        pq = None
+        if pq_seg is not None:
+            pq = np.tile(pq_seg, (reps, 1))[:m_pad].T  # (ke, m_pad)
+        pack.memory_plan(m_pad, query_tile).reserve()
+        run_csr_packed(pack, qp, jnp.asarray(aq), rp, thp, m_pad,
+                       query_tile=query_tile, use_pallas=use_pallas,
+                       pq=pq, mixed=mixed, compacted=compacted, fused=fused)
+    return pack

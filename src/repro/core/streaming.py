@@ -44,6 +44,7 @@ launch (plus host sync) per segment.
 from __future__ import annotations
 
 import threading
+import traceback
 
 import numpy as np
 
@@ -126,6 +127,13 @@ class StreamingSNNIndex:
         self.delta_ratio = float(delta_ratio)
         self.max_deltas = int(max_deltas)
         self.rebuild_ratio = float(rebuild_ratio)
+        # double-buffered plan epochs (off by default; serving turns it on):
+        # mutators build AND warm the next generation's SegmentPack on their
+        # own thread before the atomic publish (`set_plan_warming`)
+        self._warm = False
+        self._warm_kwargs: dict = {}
+        self._warm_buckets = (128,)
+        self._warmer = None
         # _mutate serializes writers for their whole (possibly heavy) run;
         # _lock guards only the published state and is never held across work
         self._mutate = threading.Lock()
@@ -185,6 +193,165 @@ class StreamingSNNIndex:
         swaps the plan to None or to the incrementally-extended pack).
         """
         return self._generation
+
+    # ------------------------------------------------- double-buffered plans
+    def set_plan_warming(self, enabled: bool = True, *,
+                         m_pads=(128,), warmer=None, **warm_kwargs) -> None:
+        """Turn on double-buffered plan epochs for this index's mutators.
+
+        With warming on, `append`/`rebuild` construct the next generation's
+        segments + `SegmentPack` AND run `engine.warm_plan`'s zero-match
+        priming dispatch (per bucketed batch size in ``m_pads`` — an
+        iterable, or a callable returning one so owners can report the
+        ladder buckets actually seen) on the MUTATOR thread, then publish
+        the already-warm snapshot atomically — readers never observe a plan
+        that still owes construction or compile work.  ``warm_kwargs``
+        forward to `engine.warm_plan` (query_tile/use_pallas/...);
+        ``warmer`` replaces the default entirely with
+        ``warmer(plan, spec_from)``.
+        """
+        self._warm = bool(enabled)
+        self._warm_buckets = m_pads
+        self._warmer = warmer
+        self._warm_kwargs = dict(warm_kwargs)
+
+    def _prime(self, plan: _engine.SegmentPack,
+               spec_from: _engine.SegmentPack | None = None) -> None:
+        """Warm ``plan`` pre-publish (mutator thread; failures non-fatal)."""
+        try:
+            if self._warmer is not None:
+                self._warmer(plan, spec_from)
+            else:
+                buckets = (self._warm_buckets()
+                           if callable(self._warm_buckets)
+                           else self._warm_buckets)
+                _engine.warm_plan(plan, m_pads=tuple(buckets) or (128,),
+                                  spec_from=spec_from, **self._warm_kwargs)
+        except Exception:
+            # warming is a pure performance action: a plan that failed to
+            # warm still answers every query correctly, just colder — never
+            # let it block the publish
+            traceback.print_exc()
+
+    def _next_plan(self, parts: tuple):
+        """(segments, plan) for a snapshot about to publish.
+
+        Lazy (all-None, plan=None) unless warming is on; warmed plans adopt
+        the outgoing generation's fused capacity speculation
+        (`SegmentPack.adopt_spec`) so the first post-swap batch stays on the
+        one-dispatch fast path.
+        """
+        if not self._warm:
+            return tuple(None for _ in parts), None
+        prev_plan = self._state[2]
+        segs = tuple(_engine.segment_from_index(p, block=self.block)
+                     for p in parts)
+        plan = _engine.SegmentPack.build(list(segs),
+                                         epoch=self._generation + 1)
+        self._prime(plan, spec_from=prev_plan)
+        return segs, plan
+
+    def plan_bytes(self) -> int:
+        """`MemoryPlan`-accounted bytes of the published plan (0 if none).
+
+        The registry's device-memory unit: the static per-bucket buffer
+        ledgers the plan has materialized (`SegmentPack.planned_bytes`).
+        """
+        with self._lock:
+            plan = self._state[2]
+        return 0 if plan is None else plan.planned_bytes()
+
+    def drop_plan(self) -> None:
+        """Release the cached device plan + segments (registry eviction).
+
+        The parts (and therefore every answer) are untouched — the next
+        query rebuilds the `SegmentPack` from the same immutable parts, so
+        results after re-admission are bit-identical to before eviction.
+        Does not bump `generation`: the index content did not change.
+        """
+        with self._lock:
+            parts = self._state[0]
+            self._state = (parts, tuple(None for _ in parts), None)
+
+    # ------------------------------------------------------------ snapshot
+    # leaves-per-part layout for state_leaves/from_state (checkpointing):
+    _PART_LEAVES = 8  # mu, v1, xs, alphas, half_norms, order, vs, projs
+
+    def state_leaves(self) -> tuple[list[np.ndarray], dict]:
+        """Flat array leaves + JSON-scalar extras capturing the EXACT state.
+
+        A restored replica must answer bit-identically, so the snapshot
+        carries the exact per-part arrays — frozen mu/v1, the sorted rows,
+        the extra-component projections, and the segment-major row order —
+        rather than re-deriving anything from ``raw``: a fresh `build_index`
+        over raw would legitimately pick a different v1 sign / row order on
+        an index that held base + deltas and permute CSR row contents.
+
+        Layout: ``leaves[0]`` is raw (append order); each part then
+        contributes `_PART_LEAVES` arrays in field order.  ``extra`` holds
+        every scalar needed by `from_state` (metric, per-part xi, tuning
+        knobs, generation).  The pair is exactly what
+        `ft.checkpoint.CheckpointManager.save` / ``restore_flat`` move.
+        """
+        with self._mutate:
+            raw = self.raw
+            with self._lock:
+                parts = self._state[0]
+            leaves: list[np.ndarray] = [raw]
+            xi = []
+            for p in parts:
+                leaves += [np.asarray(p.mu), np.asarray(p.v1),
+                           np.asarray(p.xs), np.asarray(p.alphas),
+                           np.asarray(p.half_norms), np.asarray(p.order),
+                           np.asarray(p.vs), np.asarray(p.projs)]
+                xi.append(float(p.xi))
+            extra = {
+                "metric": self.metric, "n_iter": self.n_iter,
+                "block": self.block, "delta_ratio": self.delta_ratio,
+                "max_deltas": self.max_deltas,
+                "rebuild_ratio": self.rebuild_ratio,
+                "n_at_build": int(self._n_at_build),
+                "generation": int(self._generation),
+                "n_parts": len(parts), "xi": xi,
+            }
+            return leaves, extra
+
+    @classmethod
+    def from_state(cls, leaves, extra: dict) -> "StreamingSNNIndex":
+        """Reconstruct the exact snapshot a `state_leaves` call captured.
+
+        No power iteration, no sorting: the parts are reassembled from
+        their saved arrays, so every query on the restored index is
+        bit-identical to the original at the same generation.
+        """
+        self = cls.__new__(cls)
+        self.metric = extra["metric"]
+        self.n_iter = int(extra["n_iter"])
+        self.block = int(extra["block"])
+        self.delta_ratio = float(extra["delta_ratio"])
+        self.max_deltas = int(extra["max_deltas"])
+        self.rebuild_ratio = float(extra["rebuild_ratio"])
+        self._warm = False
+        self._warm_kwargs = {}
+        self._warm_buckets = (128,)
+        self._warmer = None
+        self._mutate = threading.Lock()
+        self._lock = threading.Lock()
+        self._raw_parts = [np.asarray(leaves[0], dtype=np.float32)]
+        k = cls._PART_LEAVES
+        parts = []
+        for i in range(int(extra["n_parts"])):
+            mu, v1, xs, al, hn, od, vs, pj = leaves[1 + i * k:1 + (i + 1) * k]
+            parts.append(_snn.SNNIndex(
+                np.asarray(mu), np.asarray(v1), np.asarray(xs),
+                np.asarray(al), np.asarray(hn),
+                np.asarray(od, dtype=np.int64), extra["metric"],
+                float(extra["xi"][i]), vs=np.asarray(vs),
+                projs=np.asarray(pj)))
+        self._n_at_build = int(extra["n_at_build"])
+        self._generation = int(extra["generation"])
+        self._state = (tuple(parts), tuple(None for _ in parts), None)
+        return self
 
     # ------------------------------------------------------------- updates
     def append(self, points: np.ndarray) -> None:
@@ -261,9 +428,10 @@ class StreamingSNNIndex:
                 merged = parts[0]
                 for p in parts[1:]:
                     merged = merge_sorted_indexes(merged, p)
+                segs, plan = self._next_plan((merged,))
                 with self._lock:
                     self._generation += 1
-                    self._state = ((merged,), (None,), None)
+                    self._state = ((merged,), segs, plan)
             else:
                 # incremental plan epoch: pad-stack the delta's segment now
                 # (outside the state lock) and extend the cached plan with
@@ -280,23 +448,40 @@ class StreamingSNNIndex:
                 with self._lock:
                     prev_plan = self._state[2]
                 if prev_plan is not None:
-                    prev_plan = prev_plan.extend([seg_delta])
+                    new_plan = prev_plan.extend([seg_delta])
+                elif self._warm:
+                    # nothing live to extend — build the next epoch whole so
+                    # the publish still carries a warm plan (first append
+                    # after a drop_plan/eviction, or a never-queried index)
+                    segs_now = tuple(
+                        s if s is not None
+                        else _engine.segment_from_index(p, block=self.block)
+                        for p, s in zip(parts[:-1], self._state[1]))
+                    new_plan = _engine.SegmentPack.build(
+                        [*segs_now, seg_delta], epoch=self._generation + 1)
+                else:
+                    new_plan = None
+                if self._warm and new_plan is not None:
+                    # double-buffered epoch: compile/adopt-spec on THIS
+                    # (mutator) thread before anyone can observe the plan
+                    self._prime(new_plan, spec_from=prev_plan)
                 with self._lock:
                     # re-read the segment cache at publish time: _mutate
                     # guarantees parts didn't change, but a query may have
                     # filled segments since we started — keep its work
                     self._generation += 1
                     self._state = (tuple(parts),
-                                   (*self._state[1], seg_delta), prev_plan)
+                                   (*self._state[1], seg_delta), new_plan)
 
     def _full_rebuild(self) -> None:
         """Build a fresh base (caller holds ``_mutate``) and publish it."""
         base = _snn.build_index(self.raw, metric=self.metric,
                                 n_iter=self.n_iter)
+        segs, plan = self._next_plan((base,))
         with self._lock:
             self._n_at_build = base.n
             self._generation += 1
-            self._state = ((base,), (None,), None)
+            self._state = ((base,), segs, plan)
 
     def rebuild(self) -> None:
         """Force a full re-index (fresh mu/v1/xi) of everything appended."""

@@ -131,3 +131,36 @@ class CheckpointManager:
             restored = jax.tree.unflatten(jax.tree.structure(tree_like), new_leaves)
             return restored, s, manifest.get("extra", {})
         return None, None, None
+
+    def restore_flat(self, step: int | None = None):
+        """Structure-free restore: the flat leaf list exactly as saved.
+
+        `restore` needs a ``tree_like`` with the checkpoint's structure and
+        shapes known up front, which a variable-shape state (e.g. a
+        streaming index whose part count changes across snapshots) cannot
+        provide.  This variant trusts the manifest instead: checksums and
+        per-leaf shapes are still validated, corrupt checkpoints are still
+        skipped newest-first, but the caller receives plain numpy leaves
+        (``(leaves, step, extra)``; ``(None, None, None)`` when nothing
+        valid exists) and rebuilds its own structure — e.g.
+        `core.streaming.StreamingSNNIndex.from_state`.
+        """
+        self.wait()
+        steps = self.all_steps()
+        if step is not None:
+            steps = [s for s in steps if s == step]
+        for s in reversed(steps):
+            path = os.path.join(self.dir, f"step_{s:09d}")
+            manifest = self._validate(path)
+            if manifest is None:
+                continue
+            try:
+                data = np.load(os.path.join(path, "shard_00000.npz"))
+                leaves = [np.asarray(data[str(i)])
+                          for i in range(manifest["n_leaves"])]
+            except (OSError, KeyError, ValueError):
+                continue
+            if [list(a.shape) for a in leaves] != manifest["shapes"]:
+                continue
+            return leaves, s, manifest.get("extra", {})
+        return None, None, None

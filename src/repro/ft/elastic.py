@@ -35,6 +35,46 @@ class FailureInjector:
 
 
 @dataclasses.dataclass
+class ReplicaDrill:
+    """Kill-and-restore drill for a SERVING replica (not a training loop).
+
+    Drives ``serve_fn(step)`` through ``total_steps`` probe steps against a
+    live replica; at each step the injector may kill the replica
+    (RuntimeError), after which ``restore_fn()`` must stand up a fresh one
+    from its last checkpoint and the SAME step is replayed against it.
+    `run` returns the per-step results plus which steps saw a kill — the
+    registry tests replay identical queries through the drill and assert
+    the killed-and-restored replica's answers are bit-identical to the
+    uninterrupted ones.
+    """
+
+    serve_fn: Callable[[int], object]   # step -> result (raises when killed)
+    restore_fn: Callable[[], None]      # stand the replica back up
+    total_steps: int
+    max_restarts: int = 10
+
+    def run(self, injector: FailureInjector | None = None):
+        results: list[object] = []
+        killed_at: list[int] = []
+        restarts = 0
+        step = 0
+        while step < self.total_steps:
+            try:
+                if injector is not None:
+                    injector.maybe_fail(step)
+                results.append(self.serve_fn(step))
+                step += 1
+            except RuntimeError:
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                killed_at.append(step)
+                self.restore_fn()
+                # the killed step replays against the restored replica
+        return results, killed_at
+
+
+@dataclasses.dataclass
 class ElasticRunner:
     make_state: Callable[[], object]          # fresh (params, opt, ...) state
     step_fn: Callable[[object, int], object]  # (state, step) -> state

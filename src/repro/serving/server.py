@@ -1,14 +1,16 @@
 """Batched neighbor-search serving (the paper's online/streaming setting, §1.4).
 
-A `SNNServer` owns a `StreamingSNNIndex` and executes requests through the
-unified two-pass CSR engine (`core.engine`) by default: every response is the
-full, untruncated neighbor set, whatever its length.  Setting
+A `SNNServer` fronts an `IndexRegistry` (`serving.registry`) of named
+`StreamingSNNIndex`s — a single-index server is just a registry with one
+``"default"`` tenant — and executes requests through the unified two-pass
+CSR engine (`core.engine`) by default: every response is the full,
+untruncated neighbor set, whatever its length.  Setting
 ``cfg.serve_exact = False`` restores the legacy fixed-shape top-K path
 (bounded response size, ``truncated`` flag when counts exceed K).
 
 Five request kinds share the dispatcher; four of them are front-ends over
 the SAME bichromatic-join primitive (`core.join`) and fuse into ONE packed
-engine execution per batch:
+engine execution per (tenant, batch):
 
 * **snn-radius** (``Request(query, radius)``) — the fixed-radius search;
 * **snn-join** (``Request(queries_2d, radius)``) — a whole A-side block
@@ -30,15 +32,20 @@ engine execution per batch:
 * **snn-knn** (``Request(query, k=...)``) — exact k nearest neighbors via
   the per-query radius-expansion front-end (`core.knn`).
 
-Requests are dynamically batched: the dispatcher collects up to
-``serve_batch`` requests or waits at most ``serve_timeout_ms``, then fuses
-EVERY pending request of the CSR family (radius + join + count + reverse)
-into one engine execution — each request's rows land in the fused query
-block with its radii scattered into the engine's per-query radius vector,
-and the CSR rows are scattered back per request.  A batch of B requests
-with R distinct radii and any mix of kinds costs O(1) engine dispatches,
-not O(R) and not O(kinds): the per-radius-group loop this module used to
-run is gone, because the engine's radius contract is per-query now.
+**Admission** is deadline-aware continuous batching by default
+(``cfg.serve_policy = "deadline"``): the dispatcher blocks only for the
+first request, then fuses everything already queued until the batch fills
+``serve_batch``, the queue empties (light load flushes immediately), or
+the OLDEST request's remaining SLO budget (``Request.slo_ms``, default
+``cfg.serve_slo_ms``) minus the measured per-batch service-time EWMA hits
+zero.  FIFO order is preserved end to end, so no request starves, and
+every `Response` records its ``queue_delay_ms`` / ``service_ms`` split.
+``cfg.serve_policy = "window"`` restores the legacy fixed
+``serve_timeout_ms`` batching window.  Whatever the policy, EVERY pending
+request of the CSR family (radius + join + count + reverse) fuses into one
+engine execution per tenant — a batch of B requests with R distinct radii
+and any mix of kinds costs O(1) engine dispatches, not O(R) and not
+O(kinds).
 
 Online updates go through `append`: new points become a sorted LSM delta
 segment on the index's frozen mu/v1 (O(b log b) for a b-point batch — no
@@ -46,11 +53,16 @@ power iteration, no full re-sort, no serving gap) and queries remain exact
 across base + deltas; compactions and the rare full re-index are handled by
 the streaming index's size-ratio triggers (see `core.streaming`).
 `rebuild(new_points)` additionally FORCES a full re-index (fresh mu/v1/xi)
-after absorbing the points.
+after absorbing the points.  With ``cfg.serve_warm_plans`` (default) every
+mutation runs double-buffered: the next generation's `SegmentPack` is built
+AND warmed (zero-match priming dispatch through the bucket ladder the
+server has actually served, fused-capacity spec adopted from the outgoing
+plan) on the mutator thread before the atomic snapshot swap — the serving
+thread keeps answering on the old plan and never pays plan construction or
+compile warmup, so p99 does not spike across a rebuild.
 """
 from __future__ import annotations
 
-import dataclasses
 import queue
 import threading
 import time
@@ -59,75 +71,32 @@ import traceback
 import numpy as np
 
 from ..configs.snn_default import SNNConfig
-from ..core import metrics as _metrics
-from ..core.streaming import StreamingSNNIndex
+from .registry import IndexRegistry
+from .runtime import (Request, Response, ServiceClock, TenantRuntime,
+                      collect_batch, error_response)
 
-
-@dataclasses.dataclass
-class Request:
-    """One serving request; the kind is derived from which fields are set.
-
-    Exactly one of ``radius`` / ``k`` must be set — except for reverse
-    requests, which set NEITHER (their radii are the server's stored
-    per-point vector).  ``k`` makes it an snn-knn request whose response
-    holds the k nearest neighbors (ascending distance) instead of an
-    eps-ball.  A 2-D ``query`` block makes a radius request an snn-join
-    (``radius`` then may be a per-row vector); ``count_only`` downgrades
-    any radius/join request to counts; ``reverse`` asks for the points
-    whose stored radius covers the query target(s).
-    """
-
-    query: np.ndarray
-    radius: float | np.ndarray | None = None
-    id: int = 0
-    k: int | None = None
-    count_only: bool = False
-    reverse: bool = False
-    # stamped by submit(); a default keeps requests that reach the dispatcher
-    # by other routes (tests, replays) from crashing mid-batch
-    _t0: float = dataclasses.field(default=0.0, repr=False, compare=False)
-
-    @property
-    def kind(self) -> str:
-        if self.k is not None:
-            return "snn-knn"
-        if self.reverse:
-            return "snn-reverse"
-        if self.count_only:
-            return "snn-count"
-        if np.asarray(self.query).ndim == 2:
-            return "snn-join"
-        return "snn-radius"
-
-    @property
-    def rows(self) -> int:
-        """Rows this request contributes to the fused query block."""
-        q = np.asarray(self.query)
-        return q.shape[0] if q.ndim == 2 else 1
-
-
-@dataclasses.dataclass
-class Response:
-    id: int
-    indices: np.ndarray
-    sq_dists: np.ndarray
-    truncated: bool
-    latency_ms: float
-    # snn-join / snn-reverse: per-row CSR offsets into indices/sq_dists
-    indptr: np.ndarray | None = None
-    # snn-count: per-row neighbor counts (no indices/sq_dists materialized)
-    counts: np.ndarray | None = None
+__all__ = ["Request", "Response", "SNNServer", "IndexRegistry"]
 
 
 class SNNServer:
-    def __init__(self, data: np.ndarray, cfg: SNNConfig = SNNConfig()):
+    """The serving front door: queue + admission loop + result table.
+
+    ``data`` seeds the ``"default"`` tenant; pass ``registry=`` to front an
+    existing multi-tenant `IndexRegistry` instead (``data`` may then be
+    None if a default tenant already exists).  Requests route by
+    ``Request.tenant``; all tenants share one FIFO queue, one dispatcher
+    thread, and one device-memory budget (`IndexRegistry.enforce_budget`).
+    """
+
+    def __init__(self, data: np.ndarray | None = None,
+                 cfg: SNNConfig = SNNConfig(), *,
+                 registry: IndexRegistry | None = None):
         self.cfg = cfg
-        self.index = StreamingSNNIndex(
-            np.asarray(data, np.float32), metric=cfg.metric,
-            n_iter=cfg.power_iters, block=cfg.block_rows,
-            delta_ratio=cfg.delta_merge_ratio,
-            max_deltas=cfg.max_delta_segments,
-            rebuild_ratio=cfg.rebuild_ratio)
+        self.registry = registry if registry is not None \
+            else IndexRegistry(cfg)
+        if data is not None and "default" not in self.registry:
+            self.registry.create("default", np.asarray(data, np.float32),
+                                 cfg)
         self._q: queue.Queue = queue.Queue()
         self._results: dict[int, Response] = {}
         self._events: dict[int, threading.Event] = {}
@@ -137,14 +106,24 @@ class SNNServer:
         self._done = threading.Event()
         self._lock = threading.Lock()
         self._thread: threading.Thread | None = None
-        # per-point radii for snn-reverse requests (original append order);
-        # points appended after set_reverse_radii() have no radius and never
-        # match until the radii are set again
-        self._reverse_radii: np.ndarray | None = None
+        # per-batch service-time EWMA the deadline admission policy uses
+        self._clock = ServiceClock(cfg.serve_ewma)
+
+    # -------------------------------------------------------- tenant access
+    def runtime(self, tenant: str = "default") -> TenantRuntime:
+        rt = self.registry.get(tenant)
+        if rt is None:
+            raise KeyError(f"unknown tenant {tenant!r}")
+        return rt
+
+    @property
+    def index(self):
+        """The default tenant's `StreamingSNNIndex` (single-index usage)."""
+        return self.runtime().index
 
     @property
     def data(self) -> np.ndarray:
-        """All served points (original append order)."""
+        """All served points of the default tenant (original append order)."""
         return self.index.raw
 
     @property
@@ -152,7 +131,8 @@ class SNNServer:
         """Index generation the cached execution plan is valid for.
 
         Bumps on every append/merge/rebuild; the serving plan (the streaming
-        snapshot's `SegmentPack`) is invalidated or incrementally extended
+        snapshot's `SegmentPack`) is invalidated, incrementally extended, or
+        — with ``cfg.serve_warm_plans`` — swapped for a pre-warmed successor
         at the same publish, so a response is always computed on a plan of
         its own generation.
         """
@@ -172,31 +152,37 @@ class SNNServer:
         if self._thread:
             self._thread.join()
 
-    def append(self, new_points: np.ndarray):
+    def append(self, new_points: np.ndarray, tenant: str = "default"):
         """Stream new points in: an O(b log b) delta append, no serving gap."""
-        self.index.append(new_points)
+        self.runtime(tenant).index.append(new_points)
 
-    def rebuild(self, new_points: np.ndarray | None = None):
+    def rebuild(self, new_points: np.ndarray | None = None,
+                tenant: str = "default"):
         """Absorb ``new_points`` (if any) and FORCE a full re-index.
 
         Unlike `append` — which only creates an LSM delta and lets the
         streaming index's size-ratio triggers decide — this always runs the
         real rebuild path (fresh mu/v1/xi over everything served so far) and
-        publishes a new index `generation`, invalidating the cached
-        execution plan.  The rebuild happens outside the snapshot lock, so
-        queries keep answering on the previous generation until the publish.
+        publishes a new index `generation`.  The rebuild happens outside
+        the snapshot lock — queries keep answering on the previous
+        generation until the publish — and with ``cfg.serve_warm_plans``
+        the new generation's plan is built and warmed on THIS (caller's)
+        thread before the swap, so the serving thread's first post-swap
+        batch runs at steady-state cost.
         """
+        index = self.runtime(tenant).index
         if new_points is not None and np.asarray(new_points).size:
-            before = self.index._n_at_build
-            self.index.append(new_points)
-            if self.index._n_at_build != before:
+            before = index._n_at_build
+            index.append(new_points)
+            if index._n_at_build != before:
                 # the append itself tripped a full re-index (rebuild_ratio
                 # growth or a mips-lift overflow) — everything below would
                 # repeat the identical build over the same points
                 return
-        self.index.rebuild()
+        index.rebuild()
 
-    def set_reverse_radii(self, radii: np.ndarray):
+    def set_reverse_radii(self, radii: np.ndarray,
+                          tenant: str = "default"):
         """Store the per-point radii snn-reverse requests are answered with.
 
         ``radii[i]`` is point i's radius (original append order, native
@@ -204,14 +190,7 @@ class SNNServer:
         every currently-served point; points appended later have no radius
         and never match a reverse request until this is called again.
         """
-        radii = np.asarray(radii, np.float64)
-        n = self.index.n
-        if radii.ndim != 1 or radii.shape[0] != n:
-            raise ValueError(f"reverse radii must be a ({n},) vector "
-                             f"(one per served point); got shape "
-                             f"{radii.shape}")
-        with self._lock:
-            self._reverse_radii = radii.copy()
+        self.runtime(tenant).set_reverse_radii(radii)
 
     # ------------------------------------------------------------- client
     def submit(self, req: Request):
@@ -219,49 +198,24 @@ class SNNServer:
 
         The one validation point for every request kind: exactly one of
         ``radius=`` / ``k=`` must be set (reverse requests set neither —
-        their radii are the stored per-point vector), and kind-specific
-        shape rules are checked here so a malformed request fails fast at
-        the call site instead of poisoning a fused batch.
+        their radii are the stored per-point vector), the tenant must
+        exist, and kind-specific shape rules are checked here so a
+        malformed request fails fast at the call site instead of poisoning
+        a fused batch.
         """
-        q = np.asarray(req.query)
-        if req.reverse:
-            if req.radius is not None or req.k is not None:
-                raise ValueError(
-                    "an snn-reverse Request takes neither radius= nor k= — "
-                    "it is answered with the stored per-point radii "
-                    "(SNNServer.set_reverse_radii)")
-            if req.count_only:
-                raise ValueError("count_only is not supported for "
-                                 "snn-reverse requests")
-            if self._reverse_radii is None:
-                raise ValueError("call set_reverse_radii() before "
-                                 "submitting snn-reverse requests")
-        elif (req.radius is None) == (req.k is None):
-            raise ValueError("a Request needs exactly one of radius= "
-                             "(snn-radius / snn-join / snn-count) or k= "
-                             "(snn-knn)")
-        if req.k is not None:
-            if req.count_only:
-                raise ValueError("count_only applies to radius requests "
-                                 "only, not snn-knn")
-            if q.ndim != 1:
-                raise ValueError("snn-knn queries are single (d,) points; "
-                                 f"got shape {q.shape}")
-        if q.ndim not in (1, 2):
-            raise ValueError(f"query must be (d,) or (m, d); got {q.shape}")
-        if req.radius is not None and np.ndim(req.radius):
-            rv = np.asarray(req.radius)
-            if rv.ndim != 1 or rv.shape[0] != req.rows:
-                raise ValueError(
-                    f"per-row radius must be a ({req.rows},) vector "
-                    f"matching the query block; got shape {rv.shape}")
+        self.runtime(req.tenant).validate(req)
         req._t0 = time.monotonic()
         with self._lock:
             self._events.setdefault(req.id, threading.Event())
         self._q.put(req)
 
     def result(self, rid: int, timeout: float = 30.0) -> Response:
-        """Block until request ``rid``'s response is ready (event-driven)."""
+        """Block until request ``rid``'s response is ready (event-driven).
+
+        A response whose runtime could not serve the request comes back
+        with ``error`` set (and empty results) *immediately* — a degraded
+        batch is a fast failure here, never a silent wait for this timeout.
+        """
         with self._lock:
             if rid in self._results:
                 self._events.pop(rid, None)
@@ -274,63 +228,52 @@ class SNNServer:
                 return self._results.pop(rid)
         raise TimeoutError(f"request {rid}")
 
-    def query_batch(self, queries: np.ndarray, radius: float):
+    def query_batch(self, queries: np.ndarray, radius: float,
+                    tenant: str = "default"):
         """Synchronous batched query (bypasses the dispatcher)."""
-        return self.index.query_radius_batch(queries, radius,
-                                             group_size=self.cfg.batch_group)
+        return self.runtime(tenant).index.query_radius_batch(
+            queries, radius, group_size=self.cfg.batch_group)
 
     # ----------------------------------------------------------- dispatcher
     def _loop(self):
         while not self._done.is_set():
-            batch: list[Request] = []
-            deadline = time.monotonic() + self.cfg.serve_timeout_ms / 1e3
-            while len(batch) < self.cfg.serve_batch:
-                tmo = deadline - time.monotonic()
-                if tmo <= 0:
-                    break
-                try:
-                    batch.append(self._q.get(timeout=tmo))
-                except queue.Empty:
-                    break
+            batch = collect_batch(self._q, self.cfg, self._clock)
             if not batch:
                 continue
             try:
                 self._run_batch(batch)
             except Exception:
-                # keep the dispatcher alive; the affected requests time out
+                # keep the dispatcher alive; _run_batch's sweep answered
+                # what it could, anything else times out
                 traceback.print_exc()
 
     def _run_batch(self, batch: list[Request]):
-        index = self.index
-        knn_sel = [i for i, r in enumerate(batch) if r.kind == "snn-knn"]
-        csr_sel = [i for i, r in enumerate(batch) if r.kind != "snn-knn"]
-        if csr_sel:
-            try:
-                if self.cfg.serve_exact:
-                    try:
-                        self._respond_csr_family(index, batch, csr_sel)
-                    except Exception:
-                        # The exact path's flat output is data-dependent (a
-                        # pathologically dense batch can exceed the compact
-                        # kernel's VMEM ceiling); degrade to the K-bounded
-                        # fixed path — per-query radii there too.  Only the
-                        # plain-radius subset has a fixed-shape equivalent;
-                        # join/count/reverse requests in the batch time out.
-                        traceback.print_exc()
-                        self._respond_fixed(index, batch, [
-                            i for i in csr_sel
-                            if batch[i].kind == "snn-radius"])
-                else:
-                    self._respond_fixed(index, batch, [
-                        i for i in csr_sel if batch[i].kind == "snn-radius"])
-            except Exception:
-                # these requests will time out; keep serving the rest
-                traceback.print_exc()
-        if knn_sel:
-            try:
-                self._respond_knn(index, batch, knn_sel)
-            except Exception:
-                traceback.print_exc()
+        """Serve one admitted batch: group by tenant, one fused run each.
+
+        Single-tenant batches (the common case) keep the exact pre-registry
+        execution; multi-tenant batches run per-tenant sub-batches in FIFO
+        order of each tenant's first request.  After serving, the
+        registry's device-memory budget is enforced — cold tenants' plans
+        are LRU-evicted, never the ones just served.
+        """
+        groups: dict[str, list[Request]] = {}
+        for r in batch:
+            groups.setdefault(getattr(r, "tenant", "default") or "default",
+                              []).append(r)
+        for tenant, sub in groups.items():
+            rt = self.registry.get(tenant)
+            if rt is None:
+                # submit() validates tenants, but requests can reach the
+                # dispatcher by other routes — answer, don't drop
+                for r in sub:
+                    self._store(error_response(
+                        r, f"unknown tenant {tenant!r}"))
+                continue
+            self.registry.touch(tenant)
+            rt.run_batch(sub, self._store, clock=self._clock)
+        if len(self.registry.names()) > 1:
+            self.registry.enforce_budget(
+                active=next(iter(groups)) if len(groups) == 1 else None)
 
     def _store(self, resp: Response):
         with self._lock:
@@ -363,199 +306,3 @@ class SNNServer:
                 rid, stale = next(iter(self._events.items()))
                 del self._events[rid]
                 stale.set()
-
-    # ------------------------------------------------- reverse radii plumbing
-    def _reverse_tables(self):
-        """(stored radii, index-space sq thresholds, cover radius) snapshot.
-
-        The thresholds convert each stored native radius into the squared
-        index-space Euclidean bound the fused dispatch's ``sq_dists`` are
-        compared against (`metrics.euclidean_radius` squared, precomputed
-        per point); for mips the per-target ``xi^2 + ||q||^2`` offset is
-        added at filter time.  The cover radius is the single most inclusive
-        stored radius — running each target forward at the cover returns a
-        superset of every per-point answer, which the float64 threshold
-        filter then trims exactly.
-        """
-        rr = self._reverse_radii
-        metric = self.cfg.metric
-        if metric == "euclidean":
-            thr = rr * rr
-        elif metric == "cosine":
-            thr = 2.0 * rr
-        elif metric == "angular":
-            thr = 2.0 - 2.0 * np.cos(rr)
-        else:  # mips: threshold is xi^2 + ||q||^2 - 2 S; offset added later
-            thr = -2.0 * rr
-        # mips thresholds are inner products: SMALLER is more inclusive
-        cover = float(rr.min() if metric == "mips" else rr.max())
-        return rr, thr, cover
-
-    def _filter_reverse_row(self, ids, sq, thr, mips_offset):
-        """Trim a cover-radius forward row to the exact reverse answer.
-
-        Keeps point i iff i has a stored radius and the row's index-space
-        squared distance is within i's own threshold (float64 throughout).
-        """
-        keep = ids < thr.shape[0]
-        ids, sq = ids[keep], np.asarray(sq, np.float64)[keep]
-        ok = sq <= thr[ids] + mips_offset
-        return ids[ok], sq[ok]
-
-    def _respond_csr_family(self, index, batch, sel):
-        """Exact path: ONE fused dispatch for every CSR-family request.
-
-        Radius, join, count, and reverse requests all reduce to rows of one
-        query block with per-row radii — heterogeneous radii AND kinds cost
-        the same single packed execution a uniform batch does, and each
-        response is bit-identical to querying its request alone.  An
-        all-count batch never runs the compact pass at all
-        (`core.join.query_counts` == `engine.run_counts_packed`); counts
-        mixed with CSR kinds are read off the fused CSR row lengths.  With
-        ``cfg.serve_packed`` (default) the execution runs the streaming
-        snapshot's `SegmentPack` plan — built on the first request of an
-        index generation, reused by every request until an append/rebuild
-        publishes the next generation (appends extend the plan incrementally
-        instead of rebuilding it; see `core.streaming`).  The flat CSR
-        staging buffers are engine-level scratch reused across requests, so
-        steady-state serving allocates only the exact-size responses.
-        """
-        cfg = self.cfg
-        rev_thr = rev_cover = None
-        if any(batch[bi].kind == "snn-reverse" for bi in sel):
-            _, rev_thr, rev_cover = self._reverse_tables()
-        spans, qparts, rparts = [], [], []
-        row0 = 0
-        for bi in sel:
-            r = batch[bi]
-            q = np.asarray(r.query, np.float32)
-            q2 = q[None, :] if q.ndim == 1 else q
-            mi = q2.shape[0]
-            if r.kind == "snn-reverse":
-                rv = np.full(mi, rev_cover, np.float64)
-            else:
-                rv = _metrics.broadcast_radius(r.radius, mi)
-            qparts.append(q2)
-            rparts.append(rv)
-            spans.append((bi, row0, mi))
-            row0 += mi
-        qs = np.concatenate(qparts, axis=0)
-        radii = np.concatenate(rparts)
-        empty_i = np.zeros(0, np.int64)
-        empty_f = np.zeros(0, np.float64)
-        if (cfg.serve_count_pass
-                and all(batch[bi].kind == "snn-count" for bi in sel)):
-            counts = index.query_counts_device(
-                qs, radii, query_tile=cfg.query_tile,
-                use_pallas=cfg.backend, bucket=cfg.serve_bucket)
-            now = time.monotonic()
-            for bi, s, mi in spans:
-                r = batch[bi]
-                self._store(Response(
-                    id=r.id, indices=empty_i, sq_dists=empty_f,
-                    truncated=False,
-                    latency_ms=(now - r._t0) * 1e3 if r._t0 else 0.0,
-                    counts=counts[s:s + mi].copy()))
-            return
-        csr = index.query_radius_csr(qs, radii,
-                                     query_tile=cfg.query_tile,
-                                     native=False,
-                                     packed=cfg.serve_packed,
-                                     use_pallas=cfg.backend,
-                                     bucket=cfg.serve_bucket)
-        now = time.monotonic()
-        for bi, s, mi in spans:
-            r = batch[bi]
-            lat = (now - r._t0) * 1e3 if r._t0 else 0.0
-            # copies throughout: CSR rows are views into the batch-wide flat
-            # arrays, and a Response parked in _results must not pin them
-            if r.kind == "snn-count":
-                cnt = (csr.indptr[s + 1:s + mi + 1]
-                       - csr.indptr[s:s + mi])
-                self._store(Response(
-                    id=r.id, indices=empty_i, sq_dists=empty_f,
-                    truncated=False, latency_ms=lat, counts=cnt.copy()))
-            elif r.kind == "snn-join":
-                lo, hi = csr.indptr[s], csr.indptr[s + mi]
-                self._store(Response(
-                    id=r.id, indices=np.array(csr.indices[lo:hi]),
-                    sq_dists=np.array(csr.distances[lo:hi]),
-                    truncated=False, latency_ms=lat,
-                    indptr=(csr.indptr[s:s + mi + 1] - lo).copy()))
-            elif r.kind == "snn-reverse":
-                if cfg.metric == "mips":
-                    xi = index.base.xi
-                    qsq = np.einsum("ij,ij->i",
-                                    np.asarray(qs[s:s + mi], np.float64),
-                                    np.asarray(qs[s:s + mi], np.float64))
-                    offs = xi * xi + qsq
-                else:
-                    offs = np.zeros(mi)
-                parts_i, parts_d = [], []
-                for t in range(mi):
-                    ids, sq = csr.row(s + t)
-                    fi, fd = self._filter_reverse_row(ids, sq, rev_thr,
-                                                      offs[t])
-                    parts_i.append(fi)
-                    parts_d.append(fd)
-                indptr = np.zeros(mi + 1, np.int64)
-                np.cumsum([p.size for p in parts_i], out=indptr[1:])
-                self._store(Response(
-                    id=r.id, indices=np.concatenate(parts_i),
-                    sq_dists=np.concatenate(parts_d),
-                    truncated=False, latency_ms=lat,
-                    indptr=(indptr if np.asarray(r.query).ndim == 2
-                            else None)))
-            else:  # snn-radius
-                idx, sq = csr.row(s)
-                self._store(Response(
-                    id=r.id, indices=np.array(idx), sq_dists=np.array(sq),
-                    truncated=False, latency_ms=lat))
-
-    def _respond_fixed(self, index, batch, sel):
-        """Legacy fixed-shape path: K-bounded responses with a truncated flag.
-
-        Fused exactly like the exact path — the per-query radius vector
-        flows through `query_radius_fixed` unchanged.  Plain snn-radius
-        requests only (join/count/reverse have no fixed-shape equivalent).
-        """
-        if not sel:
-            return
-        qs = np.stack([np.asarray(batch[bi].query, np.float32)
-                       for bi in sel])
-        radii = np.asarray([batch[bi].radius for bi in sel], np.float64)
-        idx, sq, valid, counts = index.query_radius_fixed(
-            qs, radii, self.cfg.max_neighbors)
-        now = time.monotonic()
-        for j, bi in enumerate(sel):
-            r = batch[bi]
-            self._store(Response(
-                id=r.id, indices=idx[j][valid[j]], sq_dists=sq[j][valid[j]],
-                truncated=bool(counts[j] > self.cfg.max_neighbors),
-                latency_ms=(now - r._t0) * 1e3 if r._t0 else 0.0))
-
-    def _respond_knn(self, index, batch, sel):
-        """snn-knn: one fused per-query-k search (`core.knn`) for the batch.
-
-        Mixed k's fuse the same way mixed radii do — the expansion loop's
-        radius vector is per query, so one engine execution serves them all.
-        Responses carry squared Euclidean index-space distances ascending
-        (the radius paths' ``sq_dists`` convention), trimmed to each
-        request's k.
-        """
-        qs = np.stack([np.asarray(batch[bi].query, np.float32)
-                       for bi in sel])
-        ks = np.asarray([batch[bi].k for bi in sel], np.int64)
-        idx, sq = index.query_knn(qs, ks, native=False,
-                                  query_tile=self.cfg.query_tile,
-                                  use_pallas=self.cfg.backend,
-                                  bucket=self.cfg.serve_bucket)
-        now = time.monotonic()
-        for j, bi in enumerate(sel):
-            r = batch[bi]
-            found = idx[j, :ks[j]] >= 0
-            self._store(Response(
-                id=r.id, indices=idx[j, :ks[j]][found],
-                sq_dists=sq[j, :ks[j]][found],
-                truncated=False,
-                latency_ms=(now - r._t0) * 1e3 if r._t0 else 0.0))

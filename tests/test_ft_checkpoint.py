@@ -1,0 +1,194 @@
+"""`ft.checkpoint.CheckpointManager` unit coverage.
+
+The serving registry's snapshot/restore path (PR: multi-tenant plan cache)
+stands on this previously-dormant module, so its own contracts get direct
+tests: async write + `wait()`, ``keep=`` GC, `_validate`'s corrupt-file
+skip, latest-step selection, partial-write atomicity, and the
+structure-free `restore_flat` the streaming snapshot uses.
+"""
+import json
+import os
+import threading
+import zlib
+
+import numpy as np
+
+from repro.ft.checkpoint import CheckpointManager
+
+
+def _leaves(seed=0, n=3):
+    rng = np.random.default_rng(seed)
+    # deliberately heterogeneous shapes/dtypes, like a streaming snapshot
+    return [rng.normal(size=(4 + seed, 3)).astype(np.float32),
+            np.arange(5 + seed, dtype=np.int64),
+            np.float64(seed)][:n]
+
+
+# ------------------------------------------------------------- async write
+def test_async_save_returns_before_write_and_wait_completes(tmp_path):
+    cm = CheckpointManager(str(tmp_path), async_write=True)
+    gate = threading.Event()
+    real_write = cm._write
+
+    def slow_write(*a, **k):
+        gate.wait(10.0)
+        real_write(*a, **k)
+
+    cm._write = slow_write
+    cm.save(1, _leaves(1))          # returns while the writer is gated
+    assert cm.all_steps() == []     # nothing on disk yet
+    gate.set()
+    cm.wait()
+    assert cm.all_steps() == [1]
+
+
+def test_second_save_waits_for_inflight_write(tmp_path):
+    """save() serializes on the previous async writer (no interleaving)."""
+    cm = CheckpointManager(str(tmp_path), async_write=True)
+    cm.save(1, _leaves(1))
+    cm.save(2, _leaves(2))          # joins the step-1 writer first
+    cm.wait()
+    assert cm.all_steps() == [1, 2]
+
+
+def test_block_save_is_synchronous(tmp_path):
+    cm = CheckpointManager(str(tmp_path), async_write=True)
+    cm.save(3, _leaves(3), block=True)
+    assert cm.all_steps() == [3]    # no wait() needed
+
+
+# -------------------------------------------------------------------- GC
+def test_keep_gc_retains_newest(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=3, async_write=False)
+    for s in (2, 5, 9, 11, 20):
+        cm.save(s, _leaves(1))
+    assert cm.all_steps() == [9, 11, 20]
+
+
+def test_keep_zero_disables_gc(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=0, async_write=False)
+    for s in range(6):
+        cm.save(s, _leaves(1))
+    assert cm.all_steps() == list(range(6))
+
+
+# -------------------------------------------------------------- _validate
+def test_validate_rejects_crc_mismatch(tmp_path):
+    cm = CheckpointManager(str(tmp_path), async_write=False)
+    cm.save(1, _leaves(1))
+    path = os.path.join(str(tmp_path), "step_000000001")
+    with open(os.path.join(path, "shard_00000.npz"), "r+b") as f:
+        f.seek(12)
+        f.write(b"\xff" * 16)
+    assert cm._validate(path) is None
+
+
+def test_validate_rejects_bad_manifest_json(tmp_path):
+    cm = CheckpointManager(str(tmp_path), async_write=False)
+    cm.save(1, _leaves(1))
+    path = os.path.join(str(tmp_path), "step_000000001")
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        f.write("{not json")
+    assert cm._validate(path) is None
+
+
+def test_validate_rejects_missing_shard(tmp_path):
+    cm = CheckpointManager(str(tmp_path), async_write=False)
+    cm.save(1, _leaves(1))
+    path = os.path.join(str(tmp_path), "step_000000001")
+    os.remove(os.path.join(path, "shard_00000.npz"))
+    assert cm._validate(path) is None
+
+
+def test_validate_accepts_good_checkpoint(tmp_path):
+    cm = CheckpointManager(str(tmp_path), async_write=False)
+    cm.save(4, _leaves(2), extra={"k": 1})
+    manifest = cm._validate(os.path.join(str(tmp_path), "step_000000004"))
+    assert manifest is not None
+    assert manifest["step"] == 4 and manifest["extra"] == {"k": 1}
+    # the recorded crc really is the shard's crc32
+    with open(os.path.join(str(tmp_path), "step_000000004",
+                           "shard_00000.npz"), "rb") as f:
+        assert manifest["shards"]["shard_00000.npz"] == zlib.crc32(f.read())
+
+
+def test_partial_tmp_dir_is_not_a_checkpoint(tmp_path):
+    """A mid-write crash leaves only step_*.tmp — invisible to restore."""
+    cm = CheckpointManager(str(tmp_path), async_write=False)
+    cm.save(1, _leaves(1))
+    tmp = os.path.join(str(tmp_path), "step_000000009.tmp")
+    os.makedirs(tmp)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump({"step": 9}, f)
+    assert cm.all_steps() == [1]
+    leaves, step, _ = cm.restore_flat()
+    assert step == 1 and leaves is not None
+
+
+# ------------------------------------------------- latest-step selection
+def test_restore_picks_latest_step_and_explicit_step(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=0, async_write=False)
+    for s in (1, 7, 3):
+        cm.save(s, _leaves(1), extra={"s": s})
+    like = _leaves(1)
+    restored, step, extra = cm.restore(like)
+    assert step == 7 and extra == {"s": 7}
+    restored, step, extra = cm.restore(like, step=3)
+    assert step == 3 and extra == {"s": 3}
+    restored, step, extra = cm.restore(like, step=99)
+    assert restored is None and step is None
+
+
+def test_restore_skips_corrupt_newest_to_previous(tmp_path):
+    cm = CheckpointManager(str(tmp_path), keep=0, async_write=False)
+    cm.save(1, _leaves(1))
+    cm.save(2, _leaves(2))
+    with open(os.path.join(str(tmp_path), "step_000000002",
+                           "shard_00000.npz"), "r+b") as f:
+        f.seek(10)
+        f.write(b"\x00" * 32)
+    leaves, step, _ = cm.restore_flat()
+    assert step == 1
+    np.testing.assert_array_equal(leaves[0], _leaves(1)[0])
+
+
+# ------------------------------------------------------------ restore_flat
+def test_restore_flat_roundtrips_variable_shapes(tmp_path):
+    """The structure-free path: no tree_like, shapes straight from the
+    manifest — what a variable-part-count streaming snapshot needs."""
+    cm = CheckpointManager(str(tmp_path), async_write=False)
+    want = _leaves(5)
+    cm.save(11, want, extra={"streaming": {"n_parts": 2}})
+    leaves, step, extra = cm.restore_flat()
+    assert step == 11 and extra == {"streaming": {"n_parts": 2}}
+    assert len(leaves) == len(want)
+    for a, b in zip(leaves, want):
+        np.testing.assert_array_equal(a, np.asarray(b))
+        assert a.dtype == np.asarray(b).dtype
+
+
+def test_restore_flat_empty_dir(tmp_path):
+    cm = CheckpointManager(str(tmp_path))
+    assert cm.restore_flat() == (None, None, None)
+
+
+def test_restore_flat_rejects_manifest_shape_mismatch(tmp_path):
+    """A shard whose arrays disagree with the manifest shapes is skipped
+    (crc passes — the lie is internal — so the shape check must catch it)."""
+    cm = CheckpointManager(str(tmp_path), keep=0, async_write=False)
+    cm.save(1, _leaves(1))
+    cm.save(2, _leaves(2))
+    path = os.path.join(str(tmp_path), "step_000000002")
+    # rewrite the shard with wrong-shaped arrays and a matching crc
+    shard = os.path.join(path, "shard_00000.npz")
+    np.savez(shard, **{str(i): np.zeros(1, np.float32) for i in range(3)})
+    with open(shard, "rb") as f:
+        crc = zlib.crc32(f.read())
+    mpath = os.path.join(path, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    manifest["shards"]["shard_00000.npz"] = crc
+    with open(mpath, "w") as f:
+        json.dump(manifest, f)
+    leaves, step, _ = cm.restore_flat()
+    assert step == 1  # fell back past the shape-lying step 2
